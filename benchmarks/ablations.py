@@ -1,0 +1,70 @@
+"""Paper Figure 5 ablations: (a) N and soft-vs-hard training curves,
+(b) separate mask tensors M_A+M_B vs single mask, (c) top-k sweep."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_config
+from repro.data import ProfileClassification
+from repro.train.steps import init_train_state, make_train_step
+
+STEPS = 50
+BATCH = 16
+SEQ = 24
+
+
+def curve(cfg, tie_masks=False, seed=0, lr=5e-2):
+    key = jax.random.key(seed)
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=2, seed=21)
+    state = init_train_state(key, cfg, "xpeft")
+    base_step = make_train_step(cfg, "xpeft", lr=lr)
+
+    def step(state, batch, rng):
+        if tie_masks:  # Fig 5b: discard M_A — single mask drives both
+            tr = dict(state["trainable"])
+            tbl = dict(tr["table"])
+            tbl["mA"] = tbl["mB"]
+            tr["table"] = tbl
+            state = {**state, "trainable": tr}
+        return base_step(state, batch, rng)
+
+    jstep = jax.jit(step)
+    losses = []
+    for i in range(STEPS):
+        b = data.sample(i, BATCH, SEQ)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        state, m = jstep(state, batch, jax.random.key(i))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def tail(losses, n=10):
+    return float(np.mean(losses[-n:]))
+
+
+def main():
+    print("# Fig 5a — N sweep and soft vs hard (final-10-step mean loss)")
+    print("N,mask,final_loss")
+    for N in (8, 16, 32):
+        for mask in ("soft", "hard"):
+            cfg = bench_config(N=N).with_xpeft(mask_type=mask,
+                                               k=max(2, N // 4))
+            print(f"{N},{mask},{tail(curve(cfg)):.4f}")
+
+    print("# Fig 5b — separate M_A/M_B vs single mask")
+    cfg = bench_config(N=16).with_xpeft(mask_type="soft")
+    print(f"separate,{tail(curve(cfg)):.4f}")
+    print(f"single,{tail(curve(cfg, tie_masks=True)):.4f}")
+
+    print("# Fig 5c — top-k sweep (hard masks, N=16)")
+    print("k,final_loss")
+    for k in (1, 2, 4, 8, 12):
+        cfg = bench_config(N=16).with_xpeft(mask_type="hard", k=k)
+        print(f"{k},{tail(curve(cfg)):.4f}")
+
+
+if __name__ == "__main__":
+    main()

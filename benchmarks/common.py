@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + the tiny paper-family config."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+
+
+def bench_config(num_labels=4, vocab=256, N=16, k=4, profiles=8):
+    """Reduced bert-family config: CPU-trainable in seconds, same structure
+    as the paper's bert-base-uncased + Pfeiffer-adapter setting."""
+    return reduce_for_smoke(get_config("bert-base-xpeft")).with_(
+        num_labels=num_labels, vocab_size=vocab).with_xpeft(
+        num_adapters=N, k=k, max_profiles=profiles)
+
+
+def timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,61 @@
+"""Kernel microbench: Pallas (interpret) vs jnp reference + the analytic
+TPU win (HBM bytes moved) for each kernel.
+
+Wall-clock here is CPU-interpret (not meaningful); the derived column is
+the analytic HBM-traffic ratio on TPU, which is what the kernel buys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+from repro.kernels.fused_adapter import fused_adapter
+from repro.kernels.mask_aggregate import mask_aggregate
+
+
+def main():
+    print("# mask_aggregate: k-sparse vs dense bank aggregation")
+    N, d, b, k = 256, 1024, 64, 50
+    ks = jax.random.split(jax.random.key(0), 3)
+    bank = jax.random.normal(ks[0], (N, d, b), jnp.bfloat16)
+    idx = jax.random.permutation(ks[1], N)[:k].astype(jnp.int32)
+    w = jax.random.uniform(ks[2], (k,), jnp.float32)
+    dense_w = jnp.zeros((N,), jnp.float32).at[idx].set(w)
+
+    dense_bytes = N * d * b * 2          # whole bank read
+    sparse_bytes = k * d * b * 2         # k slices read
+    us_ref = timeit(jax.jit(lambda: jnp.einsum(
+        "n,ndb->db", dense_w, bank.astype(jnp.float32))), iters=5)
+    emit("mask_aggregate.dense_ref", us_ref,
+         f"hbm_bytes={dense_bytes}")
+    us_sparse = timeit(jax.jit(lambda: ref.mask_aggregate_ref(bank, idx, w)),
+                       iters=5)
+    emit("mask_aggregate.sparse_ref", us_sparse,
+         f"hbm_bytes={sparse_bytes};tpu_win={dense_bytes / sparse_bytes:.1f}x")
+    us_pk = timeit(lambda: mask_aggregate(bank, idx, w, interpret=True),
+                   iters=2, warmup=1)
+    emit("mask_aggregate.pallas_interpret", us_pk, "semantics-check-only")
+
+    print("# fused_adapter: fused d->b->d vs unfused")
+    T, d2, b2 = 512, 1024, 64
+    x = jax.random.normal(ks[0], (T, d2), jnp.bfloat16)
+    a = jax.random.normal(ks[1], (d2, b2), jnp.bfloat16) * 0.02
+    bb = jax.random.normal(ks[2], (b2, d2), jnp.bfloat16) * 0.02
+    ls, lb = jnp.ones(b2), jnp.zeros(b2)
+    unfused_bytes = (2 * T * d2 * 2          # read x twice (matmul+residual)
+                     + 2 * T * b2 * 4        # h round-trip fp32
+                     + 2 * T * d2 * 2)       # write y + read back
+    fused_bytes = 2 * T * d2 * 2             # read x once, write y once
+    us_ref = timeit(jax.jit(lambda: ref.fused_adapter_ref(x, a, bb, ls, lb)),
+                    iters=5)
+    emit("fused_adapter.ref", us_ref, f"hbm_bytes~{unfused_bytes}")
+    us_pk = timeit(lambda: fused_adapter(x, a, bb, ls, lb, interpret=True),
+                   iters=2, warmup=1)
+    emit("fused_adapter.pallas_interpret", us_pk,
+         f"hbm_bytes~{fused_bytes};tpu_win={unfused_bytes / fused_bytes:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus per-table headers).
+
+  Table 1 / Fig 1   -> table1_memory       (params & bytes per profile)
+  Tables 2/3        -> glue_sim            (xp vs ho vs sa ordering proxy)
+  Fig 5 a/b/c       -> ablations           (N, soft/hard, tied masks, k)
+  Tables 8/9        -> train_time          (step time vs N)
+  kernels           -> kernel_bench        (sparse agg + fused adapter)
+  dry-run roofline  -> roofline_report     (reads artifacts/dryrun)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablations, glue_sim, kernel_bench,
+                            table1_memory, train_time)
+    suites = [
+        ("table1_memory", table1_memory.main),
+        ("kernel_bench", kernel_bench.main),
+        ("train_time", train_time.main),
+        ("ablations", ablations.main),
+        ("glue_sim", glue_sim.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        print(f"\n==== {name} ====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"# {name} FAILED")
+    try:
+        import glob
+        if glob.glob("artifacts/dryrun/*.json"):
+            print("\n==== roofline_report (from artifacts/dryrun) ====")
+            from benchmarks import roofline_report
+            sys.argv = ["roofline_report", "--csv"]
+            roofline_report.main()
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 1 + Figure 1: trainable parameters and memory per profile.
+
+MEASURED from actual pytrees (not just formulas): we instantiate the paper's
+exact dims (bert-base: L=12, d=768, b=48 / b=64 variants) and count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as M
+from repro.core.profiles import ProfileStore
+from repro.utils import param_count
+from benchmarks.common import emit
+
+L, D = 12, 768  # bert-base-uncased
+
+
+def run(figure1: bool = False):
+    print("# Table 1 — trainable params & memory per profile "
+          "(paper dims: L=12 d=768)")
+    print("mode,N,b,trainable_params,bytes_per_profile,vs_adapter_factor")
+    b = 64
+    adapter_bytes = M.adapter_bytes(D, b, L)  # fp32 single adapter
+    for N in (100, 200, 400):
+        params = M.trainable_params_per_profile(N, b, L)
+        prof = M.init_profile_params(jax.random.key(0), L, N, b)
+        measured = param_count(prof)
+        assert measured == params, (measured, params)
+        for mode in ("hard", "soft"):
+            byts = M.bytes_per_profile(N, L, mode)
+            print(f"x_peft({mode}),{N},{b},{params},{byts},"
+                  f"{adapter_bytes / byts:.0f}x")
+    sa_params = 2 * (D * 48) * L  # paper's b=48 single adapter = 884.7K
+    print(f"single_adapter,-,48,{sa_params},{M.adapter_bytes(D, 48, L)},1x")
+    emit("table1.single_adapter_params", 0.0, f"count={sa_params}")
+    # paper cross-checks
+    assert sa_params == 884736
+    assert M.bytes_per_profile(100, L, "hard") == 312      # "0.3K"
+    assert M.bytes_per_profile(400, L, "hard") == 1200     # "1.2K"
+
+    if figure1:
+        print("# Figure 1 — total profile-state bytes vs #profiles")
+        print("profiles,xpeft_hard,xpeft_soft,single_adapter")
+        for P in (1, 10, 100, 1000, 10000, 100000):
+            hard = P * M.bytes_per_profile(100, L, "hard")
+            soft = P * M.bytes_per_profile(100, L, "soft")
+            sa = P * M.adapter_bytes(D, 48, L)
+            print(f"{P},{hard},{soft},{sa}")
+
+
+def main():
+    run(figure1=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Tables 8/9 proxy: training step time vs N (and vs baselines).
+
+Wall-clock on this CPU container is indicative only; the derived column
+reports the analytic flops ratio — on TPU the N-scaling of x_peft cost is
+dominated by the dense mask-bank aggregation (independent of tokens)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_config, emit, timeit
+from repro.data import ProfileClassification
+from repro.train.steps import init_train_state, make_train_step
+
+BATCH, SEQ = 8, 24
+
+
+def one(cfg, mode):
+    key = jax.random.key(0)
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels, 2, seed=5)
+    state = init_train_state(key, cfg, mode)
+    step = jax.jit(make_train_step(cfg, mode, lr=1e-3))
+    b = data.sample(0, BATCH, SEQ)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    if mode != "xpeft":
+        batch["profile_ids"] = jnp.zeros(BATCH, jnp.int32)
+    rng = jax.random.key(1)
+
+    def run(state):
+        s, m = step(state, batch, rng)
+        return m["loss"]
+
+    return timeit(run, state, iters=10, warmup=2)
+
+
+def main():
+    print("# Train-step time vs N (Tables 8/9 proxy; CPU wall-clock)")
+    print("mode,N,us_per_step")
+    for N in (8, 16, 32, 64):
+        cfg = bench_config(N=N)
+        us = one(cfg, "xpeft")
+        emit(f"train_time.xpeft_N{N}", us, f"N={N}")
+    for mode, m in (("head_only", "head_only"), ("single_adapter", "adapter")):
+        us = one(bench_config(), m)
+        emit(f"train_time.{mode}", us, "")
+
+
+if __name__ == "__main__":
+    main()

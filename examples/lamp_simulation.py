@@ -1,0 +1,106 @@
+"""Paper Figure 4 simulation: the LaMP 'Personalized News Categorization'
+experiment on the synthetic multi-profile task (no internet in env).
+
+Three arms, same evaluation protocol as the paper:
+  x_peft random — masks over a FROZEN RANDOM adapter bank (LTH/supermask)
+  x_peft warm   — the first W profiles adapter-tune their own adapters
+                  (the paper's warm-start accumulation); those trained
+                  adapters fill bank slots and LATER profiles only train
+                  masks over the warm bank
+  single_adapter — one dedicated adapter per profile (upper-bound baseline)
+
+  PYTHONPATH=src python examples/lamp_simulation.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import masks as M
+from repro.data import ProfileClassification
+from repro.train.steps import init_train_state, loss_for_batch, make_train_step
+from repro.utils import merge_trees
+
+STEPS, BATCH, SEQ = 120, 16, 24
+N_PROFILES = 4
+WARM = 2  # profiles that adapter-tune before the mask-only era
+
+cfg = reduce_for_smoke(get_config("bert-base-xpeft")).with_(
+    num_labels=3, vocab_size=128).with_xpeft(num_adapters=16, k=4,
+                                             max_profiles=N_PROFILES)
+data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                             num_profiles=N_PROFILES, seed=13)
+
+
+def train(mode, state, lr=8e-2, profile=None, steps=STEPS):
+    step = jax.jit(make_train_step(cfg, mode, lr=lr))
+    for i in range(steps):
+        pids = None if profile is None else [profile] * BATCH
+        b = data.sample(i, BATCH, SEQ, profile_ids=pids)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if mode != "xpeft":
+            batch["profile_ids"] = jnp.zeros(BATCH, jnp.int32)
+        state, m = step(state, batch, jax.random.key(i))
+    return state
+
+
+def eval_profile(state, mode, pid):
+    vals = []
+    for j in range(3):
+        b = data.sample(90_000 + j, 32, SEQ, profile_ids=[pid] * 32)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if mode != "xpeft":
+            batch["profile_ids"] = jnp.zeros(32, jnp.int32)
+        _, m = loss_for_batch(state["frozen"], state["trainable"], batch,
+                              cfg, mode, jax.random.key(0), training=False)
+        vals.append(float(m["accuracy"]))
+    return float(np.mean(vals))
+
+
+# ---- single_adapter baselines (also provide the warm bank) -----------------
+tuned = []
+sa_accs = []
+for pid in range(WARM):
+    sa = init_train_state(jax.random.key(100 + pid), cfg, "adapter")
+    sa = train("adapter", sa, profile=pid)
+    sa_accs.append(eval_profile(sa, "adapter", pid))
+    tuned.append(sa["trainable"]["bank"])  # [L, 1, d, b] / [L, 1, b, d]
+print(f"single_adapter: acc={np.mean(sa_accs):.3f} over {WARM} profiles "
+      f"({2 * cfg.d_model * cfg.xpeft.bottleneck * cfg.num_layers * 4:,} B "
+      f"per profile)")
+
+# ---- x_peft random: frozen random bank, masks per profile ------------------
+st_rand = init_train_state(jax.random.key(0), cfg, "xpeft")
+st_rand = train("xpeft", st_rand)
+acc_rand = np.mean([eval_profile(st_rand, "xpeft", p)
+                    for p in range(N_PROFILES)])
+bytes_pp = M.bytes_per_profile(cfg.xpeft.num_adapters, cfg.num_layers, "hard")
+print(f"x_peft random : acc={acc_rand:.3f}  ({bytes_pp} B/profile, "
+      "bit-packed hard masks)")
+
+# ---- x_peft warm: tuned adapters fill half the bank slots ------------------
+st_warm = init_train_state(jax.random.key(3), cfg, "xpeft")
+bank = st_warm["frozen"]["xpeft_bank"]
+N = cfg.xpeft.num_adapters
+slots_per = N // 2 // WARM
+ba, bb = bank["bank_a"], bank["bank_b"]
+for w, tb in enumerate(tuned):
+    for s in range(slots_per):
+        idx = w * slots_per + s
+        key = jax.random.key(500 + idx)
+        na = 0.2 * jnp.std(tb["bank_a"]) * jax.random.normal(
+            key, tb["bank_a"][:, 0].shape)
+        nb = 0.2 * jnp.std(tb["bank_b"]) * jax.random.normal(
+            key, tb["bank_b"][:, 0].shape)
+        ba = ba.at[:, idx].set((tb["bank_a"][:, 0] + na).astype(ba.dtype))
+        bb = bb.at[:, idx].set((tb["bank_b"][:, 0] + nb).astype(bb.dtype))
+st_warm["frozen"] = merge_trees(
+    st_warm["frozen"], {"xpeft_bank": {"bank_a": ba, "bank_b": bb}})
+st_warm = train("xpeft", st_warm)
+acc_warm = np.mean([eval_profile(st_warm, "xpeft", p)
+                    for p in range(N_PROFILES)])
+print(f"x_peft warm   : acc={acc_warm:.3f}  (same {bytes_pp} B/profile; "
+      f"bank warm-started from {WARM} adapter-tuned profiles)")
+
+print("\npaper Fig.4 ordering to compare: warm >= random, both within reach "
+      "of the dedicated adapter at ~1/10,000 the per-profile bytes")

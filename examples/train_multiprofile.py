@@ -1,0 +1,61 @@
+"""End-to-end driver: multi-profile X-PEFT fine-tuning with the full
+production loop — sharded data, checkpointing, preemption handling,
+straggler watchdog, resume.
+
+Reduced preset runs a ~1M-param model for 120 steps on CPU (~2 min);
+--preset paper uses bert-base dims (run on real accelerators):
+
+  PYTHONPATH=src python examples/train_multiprofile.py
+  PYTHONPATH=src python examples/train_multiprofile.py --preset paper
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data import ProfileClassification
+from repro.data.loader import ShardedLoader
+from repro.distributed.fault import PreemptionHandler, StepWatchdog
+from repro.train.steps import init_train_state, loss_for_batch, make_train_step
+from repro.train.trainer import Trainer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--preset", default="tiny", choices=["tiny", "paper"])
+ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--ckpt", default="/tmp/xpeft_ck")
+args = ap.parse_args()
+
+cfg = get_config("bert-base-xpeft")
+if args.preset == "tiny":
+    cfg = reduce_for_smoke(cfg).with_(num_labels=4, vocab_size=256)
+cfg = cfg.with_xpeft(max_profiles=16)
+
+key = jax.random.key(0)
+data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                             num_profiles=8, seed=3)
+loader = ShardedLoader(data, global_batch=16, seq_len=24)
+state = init_train_state(key, cfg, "xpeft")
+step = jax.jit(make_train_step(cfg, "xpeft", lr=3e-2))
+
+trainer = Trainer(step, state, loader, ckpt_dir=args.ckpt, ckpt_every=40,
+                  watchdog=StepWatchdog(), preemption=PreemptionHandler(),
+                  rng=jax.random.key(1), log_every=20)
+if trainer.try_resume():
+    print(f"[resume] continuing from step {trainer.step}")
+trainer.run(args.steps)
+print(f"done at step {trainer.step}; stragglers={trainer.watchdog.slow_steps}"
+      f"; checkpoints={trainer.mgr.all_steps()}")
+
+# held-out per-profile accuracy
+accs = []
+for j in range(4):
+    b = data.sample(50_000 + j, 32, 24)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    _, m = loss_for_batch(trainer.state["frozen"], trainer.state["trainable"],
+                          batch, cfg, "xpeft", jax.random.key(0),
+                          training=False)
+    accs.append(float(m["accuracy"]))
+print(f"held-out accuracy over profiles: {np.mean(accs):.3f}")

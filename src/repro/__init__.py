@@ -1,0 +1,2 @@
+"""repro: X-PEFT multi-profile training/serving framework in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,110 @@
+"""Attribute flops/bytes/collectives to HLO op sites (metadata op_name),
+with while-loop trip multiplication — the 'profiler' of the dry-run world.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+from repro.analysis.hlo_cost import (HloModule, _BODY_RE, _COND_RE,
+                                     _CONTRACT_RE, _first_shape_dims,
+                                     _type_bytes, _type_elems, _COLLS,
+                                     _FREE_OPS)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+_CALL_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|called_computation)=%?([\w\.\-]+)")
+
+
+def computation_multipliers(mod: HloModule) -> Dict[str, int]:
+    mult = {mod.entry: 1}
+    order = [mod.entry]
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        m = mult[cname]
+        for o in mod.computations.get(cname, []):
+            line = o["line"]
+            if o["op"] == "while":
+                cond = _COND_RE.search(line)
+                body = _BODY_RE.search(line)
+                trip = mod._trip_count(cond.group(1)) if cond else 1
+                for g in ([body.group(1)] if body else []) + \
+                        ([cond.group(1)] if cond else []):
+                    mult[g] = mult.get(g, 0) + m * trip
+                    order.append(g)
+            else:
+                for cm in _CALL_RE.finditer(line):
+                    g = cm.group(1)
+                    if g in mod.computations:
+                        mult[g] = mult.get(g, 0) + m
+                        order.append(g)
+    return mult
+
+
+def _op_cost(mod, ops, o) -> Tuple[float, float]:
+    """(flops, bytes) of ONE op occurrence (fusions -> callee flops)."""
+    op, t = o["op"], o["type"]
+    if op in _FREE_OPS or op == "while" or op.endswith("-done"):
+        return 0.0, 0.0
+    base = op.replace("-start", "")
+    if base in _COLLS:
+        b = _type_bytes(t)
+        if op.endswith("-start") and t.startswith("("):
+            b //= 2
+        return 0.0, float(b)
+    if op == "fusion":
+        cm = re.search(r"calls=%([\w\.\-]+)", o["line"])
+        f = mod.cost(cm.group(1))[0] if cm else 0.0
+        optypes = mod._operand_types(ops, o["rest"])
+        return f, mod.fusion_bytes(cm.group(1) if cm else None, t, optypes)
+    if op == "dot":
+        optypes = mod._operand_types(ops, o["rest"])
+        lhs = _first_shape_dims(optypes[0]) if optypes else []
+        cm = _CONTRACT_RE.search(o["line"])
+        contract = 1
+        if cm and lhs:
+            for i in cm.group(1).split(","):
+                if i:
+                    contract *= lhs[int(i)]
+        return (2.0 * _type_elems(t) * contract,
+                _type_bytes(t) + sum(_type_bytes(x) for x in optypes))
+    if op in ("dynamic-update-slice", "dynamic-slice"):
+        optypes = mod._operand_types(ops, o["rest"])
+        moved = (_type_bytes(optypes[1]) if op == "dynamic-update-slice"
+                 and len(optypes) > 1 else _type_bytes(t))
+        return 0.0, 2.0 * moved
+    if op in ("gather",):
+        return 0.0, 2.0 * _type_bytes(t)
+    if op in ("scatter",):
+        optypes = mod._operand_types(ops, o["rest"])
+        upd = optypes[-1] if optypes else t
+        return float(_type_elems(upd)), 2.0 * _type_bytes(upd)
+    if op in ("transpose", "copy"):
+        return 0.0, 2.0 * _type_bytes(t)
+    if op in ("reduce", "reduce-window"):
+        optypes = mod._operand_types(ops, o["rest"])
+        return (float(sum(_type_elems(x) for x in optypes[:1])),
+                _type_bytes(t) + sum(_type_bytes(x) for x in optypes[:1]))
+    return float(_type_elems(t)), 0.0
+
+
+def attribute(hlo_text: str, top: int = 15, key: str = "bytes"):
+    """Top sites by bytes (or flops): [(value, op_kind, op_name_meta)]."""
+    mod = HloModule(hlo_text)
+    mult = computation_multipliers(mod)
+    sites: Dict[Tuple[str, str], float] = {}
+    for cname, m in mult.items():
+        ops = mod.computations.get(cname, [])
+        for o in ops:
+            f, b = _op_cost(mod, ops, o)
+            v = b if key == "bytes" else f
+            if v <= 0:
+                continue
+            meta = _META_RE.search(o["line"])
+            name = meta.group(1)[-110:] if meta else o["name"][:60]
+            k = (o["op"], name)
+            sites[k] = sites.get(k, 0.0) + v * m
+    out = sorted(((v, k[0], k[1]) for k, v in sites.items()), reverse=True)
+    return out[:top]

@@ -1,0 +1,61 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+`compiled.cost_analysis()` does not report collective bytes, so we sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute in the per-device module. Async pairs
+(-start/-done) are counted once via the -start op. The module is already
+SPMD-partitioned, so shapes (and therefore bytes) are PER DEVICE.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_ITEMSIZE = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+# `%name = TYPE op-name(` where TYPE may be a tuple
+_LINE_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"[\s(]")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _ITEMSIZE:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _ITEMSIZE[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Returns {'all-gather': bytes, ..., 'total': bytes} per device."""
+    out = {k: 0 for k in _COLLS}
+    counts = {k: 0 for k in _COLLS}
+    for m in _LINE_RE.finditer(hlo_text):
+        op = m.group("op").replace("-start", "")
+        b = _shape_bytes(m.group("type"))
+        # async start ops return (operand, result[, scratch]) tuples; the
+        # result is roughly half the tuple bytes
+        if m.group(0).find("-start") != -1 and m.group("type").startswith("("):
+            b = b // 2
+        out[op] += b
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLS)
+    out["counts"] = counts
+    return out

@@ -1,0 +1,212 @@
+"""Config system: model / X-PEFT / shape / run configs and the arch registry.
+
+Every assigned architecture is a `ModelConfig` built in its own module under
+``repro.configs``; ``get_config(name)`` resolves it, and
+``reduce_for_smoke(cfg)`` derives the CPU-runnable reduced config of the same
+family used by the per-arch smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class XPeftConfig:
+    """The paper's technique as a first-class feature of the framework."""
+
+    enabled: bool = True
+    num_adapters: int = 256          # N — size of the shared adapter bank
+    bottleneck: int = 64             # b — adapter bottleneck dim
+    k: int = 50                      # top-k for hard masks
+    mask_type: str = "hard"          # "soft" | "hard"
+    tau: float = 1.0                 # gumbel-softmax temperature
+    nu: float = 1.0                  # gumbel noise level
+    adapter_activation: str = "gelu"  # "gelu" | "identity" (literal paper form)
+    # "dense": masks @ bank einsum (soft or ST-hard training path)
+    # "sparse": k-sparse gather-sum (inference / frozen-index training)
+    aggregate: str = "dense"
+    max_profiles: int = 1024         # rows in the per-profile mask table
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|audio|vlm|encoder
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention
+    attn_type: str = "full"          # "full" | "sliding_mix" | "none"
+    sliding_window: int = 1024
+    global_every: int = 6            # gemma3: 1 global layer per this many
+    qkv_bias: bool = False
+    causal: bool = True
+    pos: str = "rope"                # "rope" | "learned" | "none"
+    rope_theta: float = 10000.0
+    max_seq_len: int = 524288
+    logit_softcap: float = 0.0
+
+    # mlp
+    act: str = "silu"                # glu gate activation (silu=SwiGLU, gelu=GeGLU)
+    mlp_type: str = "glu"            # "glu" | "vanilla"
+
+    # moe
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "sort"           # "sort" | "dense"
+
+    # ssm / hybrid
+    block_pattern: str = "attn"      # "attn" | "rwkv" | "mamba" | "zamba"
+    ssm_state: int = 64
+    mamba_headdim: int = 64
+    shared_attn_every: int = 6       # zamba2 shared attention cadence
+    la_chunk: int = 128              # chunked linear-attention chunk length
+
+    # modality frontend (stub: embeddings arrive precomputed via input_specs)
+    frontend: str = "none"           # "none" | "audio_frames" | "vision_patches"
+    num_prefix_tokens: int = 0
+
+    # misc
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    cache_dtype: str = ""            # KV cache dtype ("" = model dtype);
+                                     # e.g. "float8_e4m3fn" halves cache BW
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma multiplies embeddings by sqrt(d)
+    dtype: str = "bfloat16"
+    remat: str = "full"              # "none" | "full" | "dots"
+    num_labels: int = 0              # classification head width (encoder/paper)
+
+    xpeft: XPeftConfig = field(default_factory=XPeftConfig)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    def with_xpeft(self, **kw) -> "ModelConfig":
+        return replace(self, xpeft=replace(self.xpeft, **kw))
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+# The LM shape set assigned to every arch in the pool.
+LM_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+# Archs allowed to run long_500k (sub-quadratic long-context decode); the
+# rest skip it per DESIGN.md §4. gemma3 qualifies via 5:1 sliding windows,
+# rwkv6 via O(1) state, zamba2 as the hybrid.
+LONG_CONTEXT_ARCHS = frozenset({"rwkv6-7b", "zamba2-1.2b", "gemma3-27b"})
+
+
+# the paper's own training shape (bert-base + GLUE: seq 128, batch 64)
+PAPER_SHAPE = ShapeConfig("paper_128", 128, 64, "train")
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in LM_SHAPES + (PAPER_SHAPE,):
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def shapes_for(cfg: ModelConfig) -> Tuple[ShapeConfig, ...]:
+    """The shape cells this arch actually runs (skips documented in DESIGN.md)."""
+    out = []
+    for s in LM_SHAPES:
+        if s.kind == "decode" and cfg.family == "encoder":
+            continue  # encoder-only: no decode step
+        if s.name == "long_500k" and cfg.name not in LONG_CONTEXT_ARCHS:
+            continue  # pure full-attention: quadratic-context skip
+        out.append(s)
+    return tuple(out)
+
+
+# ----------------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------------
+_REGISTRY = {}
+
+
+def register(fn):
+    """Decorator: register a zero-arg config builder under its cfg.name."""
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers per-arch module imports)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs():
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Reduced config of the same family for CPU smoke tests.
+
+    Keeps the structural features (GQA ratio, GLU type, MoE routing, block
+    pattern, sliding mix, prefix frontend) and shrinks every dimension.
+    """
+    kv = max(1, min(cfg.num_kv_heads, 2 if cfg.num_kv_heads < cfg.num_heads else 4))
+    heads = 4
+    if cfg.num_kv_heads == cfg.num_heads:
+        kv = heads
+    elif cfg.num_kv_heads == 1:
+        kv = 1
+    else:
+        kv = 2
+    small = cfg.with_(
+        num_layers=4 if cfg.block_pattern == "zamba" else 2,
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=96 if not cfg.moe else 32,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 8) if cfg.moe else 0,
+        top_k=min(cfg.top_k, 2) if cfg.moe else 0,
+        sliding_window=8,
+        global_every=2,
+        shared_attn_every=2,
+        ssm_state=8,
+        mamba_headdim=8,
+        la_chunk=8,
+        num_prefix_tokens=4 if cfg.num_prefix_tokens else 0,
+        max_seq_len=256,
+        remat="none",
+        dtype="float32",
+    )
+    return small.with_xpeft(num_adapters=8, bottleneck=4, k=2, max_profiles=8)

@@ -1,0 +1,2 @@
+"""X-PEFT core: the paper's contribution as a composable JAX module."""
+from repro.core import adapters, masks, profiles, xpeft  # noqa: F401

@@ -1,0 +1,82 @@
+"""Shared adapter bank: N Pfeiffer bottleneck adapters per PLM block.
+
+TPU adaptation (DESIGN.md §3.1): the bank is ONE tensor per submodule —
+``bank_a: [L, N, d, b]`` (down-proj) and ``bank_b: [L, N, b, d]`` (up-proj) —
+sharded over the mesh, instead of AdapterHub's N python modules. Aggregation
+is a mask-bank contraction; application is two MXU matmuls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_adapter_bank(key, num_layers: int, num_adapters: int, d: int, b: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Random adapter bank (the paper's LTH/supermask setting).
+
+    Down-proj uses fan-in scaling; up-proj uses a small std so a random
+    adapter perturbs the residual stream gently (matches adapter-tuning
+    practice; the paper's random adapters are HF default inits).
+    """
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (num_layers, num_adapters, d, b), jnp.float32)
+    a = a * (1.0 / jnp.sqrt(d))
+    bb = jax.random.normal(kb, (num_layers, num_adapters, b, d), jnp.float32)
+    bb = bb * 0.02
+    return {"bank_a": a.astype(dtype), "bank_b": bb.astype(dtype)}
+
+
+def aggregate_dense(bank_l: dict, w_a, w_b):
+    """Dense aggregation for one layer.
+
+    bank_l: {"bank_a": [N, d, b], "bank_b": [N, b, d]}
+    w_a, w_b: [..., N] mask weights (soft, or ST-hard during training).
+    Returns (A_hat [..., d, b], B_hat [..., b, d]).
+    """
+    dt = bank_l["bank_a"].dtype
+    a_hat = jnp.einsum("...n,ndb->...db", w_a.astype(dt), bank_l["bank_a"])
+    b_hat = jnp.einsum("...n,nbd->...bd", w_b.astype(dt), bank_l["bank_b"])
+    return a_hat, b_hat
+
+
+def aggregate_sparse(bank_l: dict, idx_a, w_a, idx_b, w_b):
+    """k-sparse aggregation: gather only the k selected adapters.
+
+    idx_*: [..., k] int32, w_*: [..., k]. FLOPs/bytes cut by N/k vs dense —
+    this is the jnp reference for kernels/mask_aggregate.py.
+    """
+    dt = bank_l["bank_a"].dtype
+    ga = jnp.take(bank_l["bank_a"], idx_a, axis=0)   # [..., k, d, b]
+    gb = jnp.take(bank_l["bank_b"], idx_b, axis=0)   # [..., k, b, d]
+    a_hat = jnp.einsum("...k,...kdb->...db", w_a.astype(dt), ga)
+    b_hat = jnp.einsum("...k,...kbd->...bd", w_b.astype(dt), gb)
+    return a_hat, b_hat
+
+
+def _ln(x, scale, bias, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def apply_adapter(x, a_hat, b_hat, ln_scale, ln_bias, activation: str = "gelu"):
+    """Bottleneck adapter with the paper's LN-after-down-proj (footnote 1).
+
+    x: [..., T, d]; a_hat [..., d, b] or [d, b]; returns x + B̂(act(LN(Â x))).
+    ``activation='identity'`` reproduces the literal paper formula.
+    """
+    if a_hat.ndim == 2:
+        h = jnp.einsum("...td,db->...tb", x, a_hat)
+    else:
+        h = jnp.einsum("...td,...db->...tb", x, a_hat)
+    h = _ln(h, ln_scale, ln_bias)
+    if activation == "gelu":
+        h = jax.nn.gelu(h)
+    if b_hat.ndim == 2:
+        y = jnp.einsum("...tb,bd->...td", h, b_hat)
+    else:
+        y = jnp.einsum("...tb,...bd->...td", h, b_hat)
+    return x + y.astype(x.dtype)

@@ -1,0 +1,117 @@
+"""ProfileStore: byte-level persistence of per-profile X-PEFT state.
+
+This is the operational heart of the multi-profile scenario: thousands of
+profiles, each a few hundred BYTES (hard masks bit-packed) or a few KB (soft
+masks fp16). The store is host-side (numpy), cheap to snapshot, and hydrates
+batch mask tensors for training/serving on demand.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import masks as M
+
+
+class ProfileStore:
+    def __init__(self, num_layers: int, num_adapters: int, bottleneck: int,
+                 mask_type: str = "hard", k: int = 50):
+        self.L = num_layers
+        self.N = num_adapters
+        self.b = bottleneck
+        self.mask_type = mask_type
+        self.k = k
+        self._rec: Dict[int, dict] = {}
+
+    # ------------------------------------------------------------------ add
+    def add_profile(self, pid: int, profile_params: dict) -> None:
+        """Freeze a trained profile into its byte-level record."""
+        rec = {
+            "ln_scale": np.asarray(profile_params["ln_scale"], np.float16),
+            "ln_bias": np.asarray(profile_params["ln_bias"], np.float16),
+        }
+        if self.mask_type == "hard":
+            rec["mA"] = M.pack_mask(np.asarray(M.binarize(profile_params["mA"], self.k)))
+            rec["mB"] = M.pack_mask(np.asarray(M.binarize(profile_params["mB"], self.k)))
+        else:
+            rec["mA"] = np.asarray(profile_params["mA"], np.float16)
+            rec["mB"] = np.asarray(profile_params["mB"], np.float16)
+        self._rec[int(pid)] = rec
+
+    # ---------------------------------------------------------------- fetch
+    def mask_weights(self, pid: int):
+        """Hydrate float mask weights [L, N] x2 for one profile."""
+        rec = self._rec[int(pid)]
+        if self.mask_type == "hard":
+            wa = M.khot_weights_from_bits(M.unpack_mask(rec["mA"], self.N), self.k)
+            wb = M.khot_weights_from_bits(M.unpack_mask(rec["mB"], self.N), self.k)
+        else:
+            wa = M.soft_mask_weights(jnp.asarray(rec["mA"], jnp.float32))
+            wb = M.soft_mask_weights(jnp.asarray(rec["mB"], jnp.float32))
+        return wa, wb
+
+    def batch_mask_weights(self, pids: Iterable[int]):
+        """Stacked [B, L, N] weights + [B, L, b] LN affines for a batch."""
+        was, wbs, lss, lbs = [], [], [], []
+        for pid in pids:
+            wa, wb = self.mask_weights(pid)
+            rec = self._rec[int(pid)]
+            was.append(wa); wbs.append(wb)
+            lss.append(jnp.asarray(rec["ln_scale"], jnp.float32))
+            lbs.append(jnp.asarray(rec["ln_bias"], jnp.float32))
+        return (jnp.stack(was), jnp.stack(wbs),
+                jnp.stack(lss), jnp.stack(lbs))
+
+    def sparse_indices(self, pid: int):
+        """Hard-mask profiles: ([L, k] idx, [L, k] w) x2 for sparse agg."""
+        assert self.mask_type == "hard"
+        rec = self._rec[int(pid)]
+        bits_a = M.unpack_mask(rec["mA"], self.N)
+        bits_b = M.unpack_mask(rec["mB"], self.N)
+        ia = M.mask_indices(bits_a, self.k)
+        ib = M.mask_indices(bits_b, self.k)
+        w = jnp.full(ia.shape, 1.0 / self.k, jnp.float32)
+        return ia, w, ib, w
+
+    # ------------------------------------------------------------- accounting
+    def profile_ids(self):
+        return sorted(self._rec)
+
+    def bytes_per_profile(self, include_ln: bool = False) -> int:
+        core = M.bytes_per_profile(self.N, self.L, self.mask_type)
+        if include_ln:
+            core += 2 * self.b * self.L * 2  # fp16 LN affine
+        return core
+
+    def total_bytes(self, include_ln: bool = False) -> int:
+        return len(self._rec) * self.bytes_per_profile(include_ln)
+
+    # ---------------------------------------------------------------- persist
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        payload = {}
+        for pid, rec in self._rec.items():
+            for k, v in rec.items():
+                payload[f"{pid}:{k}"] = v
+        meta = dict(L=self.L, N=self.N, b=self.b, mask_type=self.mask_type,
+                    k=self.k, pids=sorted(self._rec))
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+        os.close(fd)
+        np.savez(tmp, __meta__=json.dumps(meta), **payload)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "ProfileStore":
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(str(z["__meta__"]))
+        store = cls(meta["L"], meta["N"], meta["b"], meta["mask_type"], meta["k"])
+        for pid in meta["pids"]:
+            store._rec[int(pid)] = {
+                k: z[f"{pid}:{k}"] for k in ("mA", "mB", "ln_scale", "ln_bias")
+            }
+        return store

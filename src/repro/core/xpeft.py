@@ -1,0 +1,96 @@
+"""X-PEFT layer application + the multi-profile mask table.
+
+The framework keeps per-profile trainables as a TABLE (leading dim =
+max_profiles) so that hundreds of profiles train simultaneously in one batch:
+each example gathers its profile's row, and gradient scatter-add back into the
+table happens automatically through the gather transpose (DESIGN.md §3.4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapters as A
+from repro.core import masks as M
+
+
+def init_xpeft_state(key, cfg) -> dict:
+    """Frozen bank + per-profile trainable table for a ModelConfig."""
+    xp = cfg.xpeft
+    kb, kp = jax.random.split(key)
+    bank = A.init_adapter_bank(kb, cfg.num_layers, xp.num_adapters,
+                               cfg.d_model, xp.bottleneck,
+                               dtype=jnp.dtype(cfg.dtype))
+    table = init_profile_table(kp, cfg)
+    return {"bank": bank, "profiles": table}
+
+
+def init_profile_table(key, cfg) -> dict:
+    xp = cfg.xpeft
+    keys = jax.random.split(key, xp.max_profiles)
+    return jax.vmap(
+        lambda k: M.init_profile_params(k, cfg.num_layers, xp.num_adapters,
+                                        xp.bottleneck)
+    )(keys)
+
+
+def gather_profiles(table: dict, profile_ids) -> dict:
+    """Select rows of the profile table for a batch: [B, L, N] / [B, L, b]."""
+    return jax.tree.map(lambda t: jnp.take(t, profile_ids, axis=0), table)
+
+
+def profile_mask_weights(profile_params: dict, xp, *, key=None,
+                         training: bool = True):
+    """Logits -> (w_a, w_b) mask weights, shape [..., L, N]."""
+    if key is not None:
+        ka, kb = jax.random.split(key)
+    else:
+        ka = kb = None
+    w_a = M.mask_weights(profile_params["mA"], xp, key=ka, training=training)
+    w_b = M.mask_weights(profile_params["mB"], xp, key=kb, training=training)
+    return w_a, w_b
+
+
+def apply_xpeft_layer(x, bank_l: dict, w_a_l, w_b_l, ln_scale_l, ln_bias_l,
+                      xp):
+    """Apply the layer-l X-PEFT adapter to activations x [..., T, d].
+
+    w_*_l: [N] (single profile) or [B, N] (per-example profiles).
+    bank_l: {"bank_a": [N, d, b], "bank_b": [N, b, d]} — the slice the
+    scan-over-layers feeds in.
+    """
+    a_hat, b_hat = A.aggregate_dense(bank_l, w_a_l, w_b_l)
+    return A.apply_adapter(x, a_hat, b_hat, ln_scale_l, ln_bias_l,
+                           activation=xp.adapter_activation)
+
+
+def apply_xpeft_layer_sparse(x, bank_l: dict, idx_a_l, w_a_l, idx_b_l, w_b_l,
+                             ln_scale_l, ln_bias_l, xp):
+    """Hard-mask serving path: k-sparse gather aggregation (N/k cheaper)."""
+    a_hat, b_hat = A.aggregate_sparse(bank_l, idx_a_l, w_a_l, idx_b_l, w_b_l)
+    return A.apply_adapter(x, a_hat, b_hat, ln_scale_l, ln_bias_l,
+                           activation=xp.adapter_activation)
+
+
+def precompute_effective_adapters(bank: dict, profile_params: dict, xp):
+    """Admission-time aggregation (beyond-paper serving optimization).
+
+    Aggregates a profile's masks against the whole bank ONCE, producing dense
+    Â/B̂ stacks [L, d, b] / [L, b, d] that the decode hot loop applies with
+    two tiny matmuls — removes the per-step aggregation from the critical
+    path (DESIGN.md §3, serve cache).
+    """
+    w_a, w_b = profile_mask_weights(profile_params, xp, training=False)
+    a_hat = jnp.einsum("ln,lndb->ldb", w_a, bank["bank_a"].astype(jnp.float32))
+    b_hat = jnp.einsum("ln,lnbd->lbd", w_b, bank["bank_b"].astype(jnp.float32))
+    return {"a_hat": a_hat.astype(bank["bank_a"].dtype),
+            "b_hat": b_hat.astype(bank["bank_b"].dtype),
+            "ln_scale": profile_params["ln_scale"],
+            "ln_bias": profile_params["ln_bias"]}
+
+
+def apply_precomputed_layer(x, eff_l: dict, xp):
+    """Apply an admission-time-aggregated adapter slice (per layer)."""
+    return A.apply_adapter(x, eff_l["a_hat"], eff_l["b_hat"],
+                           eff_l["ln_scale"], eff_l["ln_bias"],
+                           activation=xp.adapter_activation)

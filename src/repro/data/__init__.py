@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic streams + multi-profile tasks +
+sharded host loader."""
+from repro.data.synthetic import MarkovLM, ProfileClassification  # noqa: F401
+from repro.data.loader import ShardedLoader  # noqa: F401

@@ -1,0 +1,10 @@
+"""Distribution layer: sharding rules, mesh context, collectives, pipeline,
+fault tolerance."""
+from repro.distributed import ctx  # noqa: F401
+from repro.distributed.sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    param_shardings,
+    param_specs,
+    to_shardings,
+)

@@ -1,0 +1,64 @@
+"""Distributed-optimization collectives: int8 gradient compression with
+error feedback for the cross-pod (DCN) all-reduce.
+
+Cross-pod links are the slow tier at 1000+ nodes; gradients crossing them are
+quantized to int8 with a pre-agreed scale (one scalar psum) and error-feedback
+accumulation so the quantization bias doesn't accumulate over steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, scale):
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis_name: str):
+    """psum(x) over `axis_name` with int8 payload (inside shard_map).
+
+    Two collectives: a scalar pmax to agree the scale, then the int8 sum
+    (accumulated in int32). Bytes on the wire: 1/4 of fp32, 1/2 of bf16.
+    """
+    x = x.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = quantize_int8(x, scale)
+    s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return s.astype(jnp.float32) * scale
+
+
+def compressed_psum_ef(x, err, axis_name: str):
+    """Error-feedback variant: returns (psum_result, new_err).
+
+    err is the per-device residual buffer carried across steps; the bias of
+    quantization is re-injected next step (EF-SGD / 1-bit-Adam style).
+    """
+    x = x.astype(jnp.float32) + err
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = quantize_int8(x, scale)
+    local_repr = dequantize_int8(q, scale)
+    new_err = x - local_repr
+    s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return s.astype(jnp.float32) * scale, new_err
+
+
+def tree_compressed_psum_ef(grads, errs, axis_name: str):
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(errs)
+    outs, news = [], []
+    for g, e in zip(flat_g, flat_e):
+        o, ne = compressed_psum_ef(g, e, axis_name)
+        outs.append(o)
+        news.append(ne)
+    return tdef.unflatten(outs), tdef.unflatten(news)

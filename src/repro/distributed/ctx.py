@@ -1,0 +1,116 @@
+"""Mesh context for intra-model sharding hints.
+
+Model code never sees a concrete Mesh; it calls ``hint(x, *logical_dims)``
+with logical dim names and we translate to a PartitionSpec against whatever
+mesh the launcher declared (or no-op on a single device / in smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical activation dims -> mesh axis (or tuple of axes)
+_DEFAULT_ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,          # becomes "data" under sequence parallelism
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    # context-parallel fallback: when kv_heads doesn't divide the model
+    # axis (MQA / 24-head archs), the KEY/VALUE sequence dim claims it
+    # instead — GSPMD lowers the softmax into flash-decode-style partial
+    # max/sum + small all-reduces (hint order does the arbitration).
+    "kv_seq": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "adapter_n": None,
+    "bottleneck": None,
+}
+
+_state: ContextVar[Optional[dict]] = ContextVar("mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: jax.sharding.Mesh, act_rules: Optional[dict] = None,
+                 sizes: Optional[dict] = None):
+    """Declare the active mesh + activation sharding rules.
+
+    sizes: optional {axis_name: size} override (defaults from mesh.shape).
+    """
+    rules = dict(_DEFAULT_ACT_RULES)
+    if act_rules:
+        rules.update(act_rules)
+    axis_sizes = dict(mesh.shape) if mesh is not None else {}
+    if sizes:
+        axis_sizes.update(sizes)
+    tok = _state.set({"mesh": mesh, "rules": rules, "sizes": axis_sizes})
+    try:
+        yield
+    finally:
+        _state.reset(tok)
+
+
+def active_mesh() -> Optional[jax.sharding.Mesh]:
+    st = _state.get()
+    return st["mesh"] if st else None
+
+
+def axis_size(name: str) -> int:
+    st = _state.get()
+    if not st:
+        return 1
+    return int(st["sizes"].get(name, 1))
+
+
+def _resolve(logical: Optional[str], dim_size: int, st) -> Optional[object]:
+    if logical is None:
+        return None
+    axes = st["rules"].get(logical, None)
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    # keep only axes present in the mesh; require divisibility
+    axes = tuple(a for a in axes if a in st["sizes"])
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= st["sizes"][a]
+    if total == 0 or dim_size % total != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def hint(x, *logical_dims: Optional[str]):
+    """with_sharding_constraint by logical dim names; no-op without a mesh.
+
+    len(logical_dims) must equal x.ndim; None entries stay unsharded.
+    """
+    st = _state.get()
+    if st is None or st["mesh"] is None:
+        return x
+    assert len(logical_dims) == x.ndim, (logical_dims, x.shape)
+    entries = []
+    used = set()
+    for l, s in zip(logical_dims, x.shape):
+        e = _resolve(l, s, st)
+        axes = e if isinstance(e, tuple) else (e,) if e else ()
+        # first dim claiming a mesh axis wins; later dims keep what's left
+        left = tuple(a for a in axes if a not in used)
+        if left != axes:
+            total = 1
+            for a in left:
+                total *= st["sizes"][a]
+            left = left if left and s % total == 0 else ()
+        used.update(left)
+        e = left if len(left) > 1 else (left[0] if left else None)
+        entries.append(e)
+    spec = P(*entries)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(st["mesh"], spec))

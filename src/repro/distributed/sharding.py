@@ -1,0 +1,250 @@
+"""Sharding rules: param-name-based logical axes -> PartitionSpecs.
+
+Scheme (DESIGN.md §5):
+- TP over the "model" axis: heads / kv_heads / mlp / experts / vocab / the
+  adapter bank's d_model dim (row+col parallel bottleneck).
+- FSDP over the "data" axis: every parameter's largest still-unsharded dim,
+  when divisible and large enough (ZeRO-3 via GSPMD all-gather-on-use).
+- The "pod" axis never shards parameters (cross-pod = grad reduce only).
+
+Divisibility-aware: a logical assignment that doesn't divide the dim (e.g.
+MQA kv=1 on a 16-way model axis) silently stays replicated.
+
+`overrides` lets the §Perf hillclimb re-map individual tensors without
+touching model code.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import map_with_path
+
+# leaf-name (+ndim disambiguation) -> logical dims for the TRAILING dims.
+# Leading stack dims (layers L, profile table P) are covered implicitly:
+# unmatched leading dims get None (then FSDP may claim them).
+_RULES: Dict[Tuple[str, int], Tuple] = {}
+
+
+def _rule(name, *logical, ndim=None):
+    _RULES[(name, ndim)] = tuple(logical)
+
+
+# embeddings / heads
+_rule("embed", "vocab", None)
+_rule("pos_embed", None, None)
+_rule("lm_head", None, "vocab")
+# attention (rules align to TRAILING dims; leading stack dims get None)
+_rule("wq", None, "heads", None)
+_rule("wk", None, "kv_heads", None)
+_rule("wv", None, "kv_heads", None)
+_rule("wo", "heads", None, None)
+_rule("bq", "heads", None)
+_rule("bk", "kv_heads", None)
+_rule("bv", "kv_heads", None)
+# dense mlp
+_rule("wg", None, "mlp")
+_rule("wu", None, "mlp")
+_rule("wd", "mlp", None)
+_rule("w1", None, "mlp")
+_rule("w2", "mlp", None)
+_rule("b1", "mlp")
+_rule("b2", None)
+# moe — experts over model (EP); FSDP pinned to the ff dim so the
+# shard_map dispatch knows where to all-gather (models/moe.py)
+_rule("router", None, None)
+_rule("ew_g", "expert", None, "mlp_fsdp")
+_rule("ew_u", "expert", None, "mlp_fsdp")
+_rule("ew_d", "expert", "mlp_fsdp", None)
+# X-PEFT adapter bank [L, N, d, b] / [L, N, b, d]: d_model TP-sharded
+_rule("bank_a", "adapter_n", "tp_d", None)
+_rule("bank_b", "adapter_n", None, "tp_d")
+# rwkv (2D projections over flattened heads)
+_rule("rwr", None, "tp_d")
+_rule("rwk", None, "tp_d")
+_rule("rwv", None, "tp_d")
+_rule("rwg", None, "tp_d")
+_rule("rwo", "tp_d", None)
+_rule("cw_k", None, "mlp")
+_rule("cw_v", "mlp", None)
+_rule("cw_r", None, None)
+_rule("dec_a", None, None)
+_rule("dec_b", None, "tp_d")
+# mamba
+_rule("in_proj", None, "tp_d")
+_rule("out_proj", "tp_d", None)
+
+_LOGICAL_TO_MESH = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "tp_d": "model",
+    "mlp_fsdp": "data",
+}
+
+FSDP_MIN_SIZE = 2 ** 16
+
+
+def _lookup(name: str, ndim: int):
+    """Rules align to trailing dims; any leading stack dims are padded
+    with None by spec_for — so (name, None) matches every rank."""
+    if (name, ndim) in _RULES:
+        return _RULES[(name, ndim)]
+    if (name, None) in _RULES:
+        return _RULES[(name, None)]
+    return None
+
+
+def spec_for(path: str, shape, mesh_axes: Dict[str, int], *, fsdp: bool,
+             logical_map: Optional[dict] = None,
+             overrides: Optional[dict] = None) -> P:
+    """Build the PartitionSpec for one parameter."""
+    name = path.rsplit("/", 1)[-1]
+    ndim = len(shape)
+    lmap = dict(_LOGICAL_TO_MESH)
+    if logical_map:
+        lmap.update(logical_map)
+
+    logical = None
+    if overrides:
+        for pat, val in overrides.items():
+            if pat in path:
+                logical = val
+                break
+    if logical is None:
+        logical = _lookup(name, ndim)
+    if logical is None:
+        logical = (None,) * ndim
+    # left-pad to ndim (leading stack dims unassigned)
+    logical = (None,) * (ndim - len(logical)) + tuple(logical)
+
+    assigned = []
+    used_axes = set()
+    for dim, lg in zip(shape, logical):
+        ax = lmap.get(lg) if lg else None
+        if ax and ax in mesh_axes and dim % mesh_axes[ax] == 0 \
+                and ax not in used_axes:
+            assigned.append(ax)
+            used_axes.add(ax)
+        else:
+            assigned.append(None)
+
+    if fsdp and "data" in mesh_axes and "data" not in assigned \
+            and int(np.prod(shape)) >= FSDP_MIN_SIZE:
+        # shard the largest remaining dim over data
+        cands = [(dim, i) for i, (dim, a) in enumerate(zip(shape, assigned))
+                 if a is None and dim % mesh_axes["data"] == 0]
+        if cands:
+            _, i = max(cands)
+            assigned[i] = "data"
+    return P(*assigned)
+
+
+def param_specs(abstract_params, mesh: Mesh, *, fsdp: bool = True,
+                logical_map: Optional[dict] = None,
+                overrides: Optional[dict] = None):
+    mesh_axes = dict(mesh.shape)
+    mesh_axes.pop("pod", None)  # never shard params over pods
+    return map_with_path(
+        lambda p, x: spec_for(p, x.shape, mesh_axes, fsdp=fsdp,
+                              logical_map=logical_map, overrides=overrides),
+        abstract_params)
+
+
+def param_shardings(abstract_params, mesh: Mesh, **kw):
+    specs = param_specs(abstract_params, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------------
+# Activations / batch / cache
+# ----------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_specs(abstract_batch, mesh: Mesh, global_batch: int):
+    """Shard the leading batch dim of every batch leaf over pod+data; falls
+    back to sequence sharding (dim 1) when batch doesn't divide (batch=1
+    long-context cells)."""
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def one(x):
+        if x.shape and x.shape[0] % n == 0 and x.shape[0] >= n:
+            return P(ba, *([None] * (len(x.shape) - 1)))
+        if len(x.shape) >= 2 and x.shape[1] % n == 0:
+            return P(None, ba, *([None] * (len(x.shape) - 2)))
+        return P(*([None] * len(x.shape)))
+
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_specs(abstract_cache, mesh: Mesh, cfg, batch: int):
+    """KV/state cache sharding: batch over data when divisible, else the
+    sequence dim (sequence parallelism for batch=1 long-context); kv_heads /
+    state heads over model when divisible."""
+    mesh_axes = dict(mesh.shape)
+    dsize = mesh_axes.get("data", 1)
+    msize = mesh_axes.get("model", 1)
+
+    def one(path, x):
+        name = path.rsplit("/", 1)[-1]
+        nd = len(x.shape)
+        spec = [None] * nd
+        # leading L (stacked layers) never sharded; batch dim = 1
+        bdim = 1
+        if nd >= 2 and x.shape[bdim] % dsize == 0 and x.shape[bdim] >= dsize:
+            spec[bdim] = "data"
+        elif name in ("k", "v", "attn_k", "attn_v") and nd >= 3 \
+                and x.shape[2] % dsize == 0:
+            spec[2] = "data"  # sequence-parallel KV cache (batch=1 cells)
+        if name in ("k", "v", "attn_k", "attn_v") and nd >= 4:
+            if x.shape[3] % msize == 0:
+                spec[3] = "model"          # kv heads over TP
+            elif spec[2] is None and x.shape[2] % msize == 0:
+                spec[2] = "model"          # context-parallel fallback
+        if name in ("wkv", "ssd") and nd >= 3 and x.shape[2] % msize == 0:
+            spec[2] = "model"  # recurrent state heads
+        return P(*spec)
+
+    return map_with_path(one, abstract_cache)
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes_per_device(abstract_tree, specs, mesh: Mesh) -> int:
+    """Analytic per-device resident bytes of a sharded pytree."""
+    sizes = dict(mesh.shape)
+
+    def one(x, spec):
+        n = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                n *= sizes.get(a, 1)
+        return int(np.prod(x.shape)) * jnp_itemsize(x.dtype) // n
+
+    import jax.numpy as _j
+
+    def jnp_itemsize(dt):
+        return _j.dtype(dt).itemsize
+
+    total = 0
+    flat_x = jax.tree.leaves(abstract_tree)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    for x, s in zip(flat_x, flat_s):
+        total += one(x, s)
+    return total

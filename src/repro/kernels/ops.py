@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the compiled kernels run; elsewhere (this CPU container) they run in
+interpret mode (the kernel body executed in Python — semantics identical) or
+fall back to the jnp oracle. Batched variants vmap over profiles/slots.
+
+TPU deployment note: `bottleneck` b of 48/64 is below the 128 lane width; for
+peak MXU utilization pad Â/B̂'s b dim to 128 — LN must then mask the padded
+columns (ops here keep the unpadded semantics; the pad is a launch-config
+choice).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fused_adapter import fused_adapter as _fused_pallas
+from repro.kernels.mask_aggregate import mask_aggregate as _agg_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mask_aggregate(bank, idx, w, *, impl: str = "auto"):
+    """k-sparse bank aggregation. impl: auto|pallas|interpret|ref."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu() and bank.shape[1] > 4096):
+        return ref.mask_aggregate_ref(bank, idx, w)
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _agg_pallas(bank, idx, w, interpret=False)
+    return _agg_pallas(bank, idx, w, interpret=True)
+
+
+def mask_aggregate_batched(bank, idx, w, *, impl: str = "auto"):
+    """bank [N,d,b], idx [P,k], w [P,k] -> [P,d,b] (vmap over profiles)."""
+    return jax.vmap(lambda i, ww: mask_aggregate(bank, i, ww, impl=impl))(
+        idx, w)
+
+
+def fused_adapter(x, a_hat, b_hat, ln_scale, ln_bias, *,
+                  activation: str = "gelu", impl: str = "auto"):
+    """Fused bottleneck adapter. x [T,d] (or [B,T,d] -> vmapped)."""
+    if x.ndim == 3:
+        return jax.vmap(
+            lambda xx, aa, bb, ls, lb: fused_adapter(
+                xx, aa, bb, ls, lb, activation=activation, impl=impl)
+        )(x, a_hat, b_hat, ln_scale, ln_bias)
+    if impl == "ref" or (impl == "auto" and not _on_tpu() and x.shape[0] > 4096):
+        return ref.fused_adapter_ref(x, a_hat, b_hat, ln_scale, ln_bias,
+                                     activation=activation)
+    interpret = not (impl == "pallas" or (impl == "auto" and _on_tpu()))
+    return _fused_pallas(x, a_hat, b_hat, ln_scale, ln_bias,
+                         activation=activation, interpret=interpret)

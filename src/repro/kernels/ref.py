@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_aggregate_ref(bank, idx, w):
+    """bank [N, d, b], idx [k] int32, w [k] -> [d, b] fp32.
+
+    The k-sparse hard-mask aggregation: Â = Σ_j w_j · bank[idx_j].
+    """
+    g = jnp.take(bank, idx, axis=0).astype(jnp.float32)      # [k, d, b]
+    return jnp.einsum("k,kdb->db", w.astype(jnp.float32), g)
+
+
+def fused_adapter_ref(x, a_hat, b_hat, ln_scale, ln_bias, *,
+                      activation: str = "gelu", eps: float = 1e-6):
+    """x [T, d], a_hat [d, b], b_hat [b, d] -> [T, d].
+
+    y = x + B̂(act(LN(Â x)))  — the X-PEFT bottleneck with the paper's
+    LN-after-down-proj, fp32 internals.
+    """
+    h = jnp.dot(x.astype(jnp.float32), a_hat.astype(jnp.float32))
+    mu = h.mean(-1, keepdims=True)
+    var = h.var(-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    h = h * ln_scale.astype(jnp.float32) + ln_bias.astype(jnp.float32)
+    if activation == "gelu":
+        h = jax.nn.gelu(h)
+    y = jnp.dot(h, b_hat.astype(jnp.float32))
+    return (x.astype(jnp.float32) + y).astype(x.dtype)

@@ -1,0 +1,9 @@
+"""Model substrate: composable blocks + the unified scan-over-layers LM."""
+from repro.models.model import (  # noqa: F401
+    init_lm,
+    init_cache,
+    forward,
+    lm_logits,
+    cls_logits,
+    layer_meta,
+)

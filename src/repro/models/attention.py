@@ -1,0 +1,200 @@
+"""Attention: MHA/GQA/MQA with RoPE, sliding-window/global mix, KV cache.
+
+Long sequences use a chunked online-softmax (flash-style) path in pure JAX —
+lax.scan over query chunks with an inner scan over key chunks — so [T,S]
+logits never materialize. Causal chunk pairs above the diagonal are computed
+masked (rectangle); the §Perf log treats removing that waste as a hillclimb.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+from repro.models.common import apply_rope, dense_init, softcap
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, KV, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, KV, hd), d, dtype),
+        "wo": dense_init(ks[3], (H, hd, d), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KV, hd), jnp.float32)
+    return p
+
+
+def _mask(q_pos, k_pos, *, causal, window, kv_valid):
+    """q_pos [B,Tq], k_pos [S], kv_valid [B] -> bool [B,Tq,S]."""
+    qp = q_pos[:, :, None]
+    kp = k_pos[None, None, :]
+    m = kp < jnp.reshape(kv_valid, (-1, 1, 1))
+    if causal:
+        m = m & (kp <= qp)
+    if window is not None:
+        m = m & (qp - kp < window)
+    return m
+
+
+def _sdpa_dense(q, k, v, mask, scale, cap):
+    """q [B,KV,G,Tq,hd], k/v [B,KV,S,hd], mask [B,Tq,S]."""
+    logits = jnp.einsum("bkgth,bksh->bkgts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bksh->bkgth", w.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, kv_valid, scale,
+                  cap, q_chunk, k_chunk):
+    """Flash-style online softmax over key chunks, scanned over query chunks."""
+    B, KV, G, Tq, hd = q.shape
+    S = k.shape[2]
+    nq, nk = Tq // q_chunk, S // k_chunk
+    dv = v.shape[-1]
+
+    qs = q.reshape(B, KV, G, nq, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    # NOTE: re-pinning q-seq CP on the chunk dim here was measured WORSE
+    # (dbrx cp_qseq 40.9 -> 45.4s; §Perf it.7 refuted) — GSPMD handles the
+    # [T]->[nq,qc] reshape better than an explicit re-constraint.
+    qps = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    ks = k.reshape(B, KV, nk, k_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, KV, nk, k_chunk, dv).transpose(2, 0, 1, 3, 4)
+    ks = ctx.hint(ks, None, "batch", "kv_heads", "kv_seq", None)
+    vs = ctx.hint(vs, None, "batch", "kv_heads", "kv_seq", None)
+    kps = k_pos.reshape(nk, k_chunk)
+
+    def q_step(_, qc):
+        qi, qpi = qc
+
+        def k_step(carry, kc):
+            m_run, l_run, acc = carry
+            ki, vi, kpi = kc
+            logits = jnp.einsum("bkgth,bksh->bkgts", qi, ki,
+                                preferred_element_type=jnp.float32) * scale
+            logits = softcap(logits, cap)
+            msk = _mask(qpi, kpi, causal=causal, window=window,
+                        kv_valid=kv_valid)
+            logits = jnp.where(msk[:, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgts,bksh->bkgth", p.astype(vi.dtype), vi).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, dv), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(k_step, init, (ks, vs, kps))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, qps))
+    # outs: [nq, B, KV, G, q_chunk, hd] -> [B, KV, G, Tq, hd]
+    return outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, Tq, dv)
+
+
+def attention(params, x, *, positions, cfg, cache=None, cache_pos=None,
+              is_global=True, q_chunk=512, k_chunk=1024):
+    """x [B,T,d] -> (y [B,T,d], new_cache).
+
+    cache: {"k","v": [B, S, KV, hd]} functional KV cache; cache_pos: scalar
+    write offset. Without a cache, keys=queries (self-attention).
+    """
+    B, T, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # TP arbitration: head-shard Q only when the KV heads shard too —
+    # otherwise Q-heads and KV-seq would claim the model axis differently
+    # and GSPMD bounces activations every layer (dbrx/qwen3-moe: 7.5x
+    # collective blowup, see EXPERIMENTS.md §Perf it.4). With
+    # non-divisible KV, context-parallel K/V carries the TP instead.
+    msize = ctx.axis_size("model")
+    if msize <= 1 or KV % msize == 0:
+        q = ctx.hint(q, "batch", None, "heads", None)
+    else:
+        # non-divisible KV: q-seq CP if the launcher enabled the "q_seq"
+        # rule (no-op otherwise; K/V-seq CP carries the TP by default)
+        q = ctx.hint(q, "batch", "q_seq", None, None)
+
+    if cache is not None:
+        if jnp.ndim(cache_pos) == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        else:
+            # per-slot positions (continuous batching): scatter one step
+            assert T == 1, "vector cache_pos is a decode-only path"
+            ck = cache["k"].at[jnp.arange(B), cache_pos].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[jnp.arange(B), cache_pos].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+        new_cache = {"k": ck, "v": cv}
+        # quantized caches (e.g. f8) cast back to compute dtype on read
+        keys, vals = ck.astype(k.dtype), cv.astype(v.dtype)
+        S = ck.shape[1]
+        kv_valid = jnp.broadcast_to(cache_pos + T, (B,))
+        k_pos = jnp.arange(S)
+    else:
+        new_cache = None
+        keys, vals = k, v
+        S = T
+        kv_valid = jnp.full((B,), T, jnp.int32)
+        k_pos = jnp.arange(T)
+
+    keys = keys.transpose(0, 2, 1, 3)   # [B, KV, S, hd]
+    vals = vals.transpose(0, 2, 1, 3)
+    # TP arbitration: kv_heads claims the model axis when divisible, else
+    # the sequence dim does (context-parallel attention; ctx rule "kv_seq")
+    keys = ctx.hint(keys, "batch", "kv_heads", "kv_seq", None)
+    vals = ctx.hint(vals, "batch", "kv_heads", "kv_seq", None)
+    qg = q.reshape(B, T, KV, G, hd).transpose(0, 2, 3, 1, 4)  # [B,KV,G,T,hd]
+
+    window = None
+    if cfg.attn_type == "sliding_mix":
+        # traced per-layer flag: global layers get an "infinite" window
+        window = jnp.where(is_global, jnp.int32(2**30),
+                           jnp.int32(cfg.sliding_window))
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    use_chunked = (T > q_chunk) and (T % q_chunk == 0) and (S % k_chunk == 0)
+    if use_chunked:
+        out = _sdpa_chunked(qg, keys, vals, positions, k_pos,
+                            causal=cfg.causal, window=window,
+                            kv_valid=kv_valid, scale=scale,
+                            cap=cfg.logit_softcap,
+                            q_chunk=q_chunk, k_chunk=k_chunk)
+    else:
+        msk = _mask(positions, k_pos, causal=cfg.causal, window=window,
+                    kv_valid=kv_valid)
+        out = _sdpa_dense(qg, keys, vals, msk, scale, cfg.logit_softcap)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, new_cache

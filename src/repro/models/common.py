@@ -1,0 +1,71 @@
+"""Shared model primitives: norms, RoPE, activations, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.bfloat16):
+    """Fan-in normal init (truncated-normal-free for speed)."""
+    w = jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(in_axis_size)
+    return w.astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_apply(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+            "identity": lambda x: x}[name]
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [B, T, H, hd]; positions: [B, T] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [B, T, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,147 @@
+"""Chunked gated linear attention — the shared engine for RWKV6 (Finch,
+per-channel data-dependent decay) and Mamba2 (SSD, per-head scalar decay).
+
+Recurrence per head (state S in R^{dk x dv}):
+    S_t = diag(exp(lw_t)) . S_{t-1} + k_t v_t^T
+    o_t = q_t^T S_t                      (+ optional RWKV bonus-u diag term)
+
+The chunked form runs intra-chunk attention as dense MXU matmuls and carries
+the state across chunks with a lax.scan — O(T * c * d) compute, O(1) state:
+this is what makes long_500k a decode-able cell for the SSM/hybrid archs.
+
+Numerics (secondary chunking): naive factoring of exp(cum_i - cum_j) into
+exp(cum_i) * exp(-cum_j) overflows fp32 for strong decays, so intra-chunk
+scores are computed over sub-tiles of SUBTILE tokens where every factor is
+bounded by exp(SUBTILE * |lw|_max):
+
+    exp(cum_i - cum_j) = exp(cum_i - B_a) * exp(B_a - B_b) * exp(B_b - cum_j)
+
+with B_x the exclusive cum at sub-tile x's start; the first and third factors
+are bounded per sub-tile and the middle one is <= 1 (carried per channel into
+the score einsum). All inter-chunk factors are naturally <= 1.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+LW_MIN = -5.0      # per-step log-decay clamp (decay >= e^-5 ~ 0.0067)
+SUBTILE = 16
+
+
+def clamp_lw(lw):
+    return jnp.clip(lw, LW_MIN, -1e-6)
+
+
+def _intra_chunk(qc, kc, vc, cum, lwc, bonus):
+    """Strictly-causal (or inclusive) intra-chunk attention with sub-tiling.
+
+    qc,kc: [..., c, dk]; vc: [..., c, dv]; cum: inclusive cumsum of lw.
+    Returns o_intra [..., c, dv].
+    """
+    c, dk = qc.shape[-2], qc.shape[-1]
+    s = min(SUBTILE, c)
+    A = c // s
+    lead = qc.shape[:-2]
+
+    # Query-side exponent: plain GLA includes the current token's decay in
+    # the product (∏_{j+1..i}); RWKV's bonus form excludes it (∏_{j+1..i-1}).
+    q_cum = cum - lwc if bonus is not None else cum
+
+    # exclusive cumsum at each position, and B_a = exclusive cum at each
+    # sub-tile's first position: [..., A, dk]
+    excl = cum - lwc
+    Bt = excl.reshape(*lead, A, s, dk)[..., :, 0, :]
+
+    q2 = qc.reshape(*lead, A, s, dk)
+    k2 = kc.reshape(*lead, A, s, dk)
+    v2 = vc.reshape(*lead, A, s, vc.shape[-1])
+    qcum2 = q_cum.reshape(*lead, A, s, dk)
+    cum2 = cum.reshape(*lead, A, s, dk)
+
+    qloc = q2 * jnp.exp(qcum2 - Bt[..., :, None, :])       # <= 1 (or e^{|lw|})
+    kloc = k2 * jnp.exp(Bt[..., :, None, :] - cum2)        # <= e^{s*L}
+    D = jnp.exp(Bt[..., :, None, :] - Bt[..., None, :, :])  # [.., A, A, dk] <=1 for a>=b
+
+    scores = jnp.einsum("...aid,...abd,...bjd->...abij", qloc, D, kloc)
+    ii = jnp.arange(c)
+    strict = bonus is not None
+    causal = (ii[:, None] > ii[None, :]) if strict else (ii[:, None] >= ii[None, :])
+    causal = causal.reshape(A, s, A, s).transpose(0, 2, 1, 3)  # [A,A,s,s]
+    scores = jnp.where(causal, scores, 0.0)
+    o = jnp.einsum("...abij,...bjv->...aiv", scores, v2)
+    o = o.reshape(*lead, c, vc.shape[-1])
+    if bonus is not None:
+        coeff = jnp.einsum("...ik,...ik->...i", qc * bonus, kc)
+        o = o + coeff[..., None] * vc
+    return o
+
+
+def gla_chunked(q, k, v, lw, *, chunk: int, bonus: Optional[jnp.ndarray] = None,
+                state: Optional[jnp.ndarray] = None):
+    """q,k: [B,H,T,dk]; v: [B,H,T,dv]; lw: [B,H,T,dk] log-decay (<=0).
+
+    bonus: [H, dk] RWKV "u" — replaces the current-token diagonal term.
+    Returns (o [B,H,T,dv], final_state [B,H,dk,dv]).
+    """
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, T)
+    while T % chunk:  # ragged T (serving prefill): largest divisor wins
+        chunk -= 1
+    G = T // chunk
+    f32 = jnp.float32
+
+    lw = clamp_lw(lw.astype(f32))
+    q_, k_, v_ = (a.astype(f32) for a in (q, k, v))
+    rs = lambda a: a.reshape(B, H, G, chunk, a.shape[-1])
+    qc, kc, vc, lwc = rs(q_), rs(k_), rs(v_), rs(lw)
+    cum = jnp.cumsum(lwc, axis=-2)                     # [B,H,G,c,dk]
+    total = cum[..., -1, :]                            # [B,H,G,dk]
+
+    bonus_f = bonus.astype(f32) if bonus is not None else None
+    o_intra = _intra_chunk(
+        qc, kc, vc, cum, lwc,
+        bonus_f[None, :, None, None, :] if bonus_f is not None else None)
+
+    # inter-chunk: queries decayed from chunk start (exclusive for bonus form)
+    q_cum = cum - lwc if bonus is not None else cum
+    qd = qc * jnp.exp(q_cum)                           # <= 1
+    kt = kc * jnp.exp(total[..., None, :] - cum)       # <= 1
+
+    def step(s, xs):
+        qd_g, kt_g, v_g, tot_g = xs
+        o_inter = jnp.einsum("bhik,bhkv->bhiv", qd_g, s)
+        s_new = s * jnp.exp(tot_g)[..., None] + jnp.einsum(
+            "bhjk,bhjv->bhkv", kt_g, v_g)
+        return s_new, o_inter
+
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), f32)
+    xs = (qd.transpose(2, 0, 1, 3, 4), kt.transpose(2, 0, 1, 3, 4),
+          vc.transpose(2, 0, 1, 3, 4), total.transpose(2, 0, 1, 3))
+    state_f, o_inter = jax.lax.scan(step, state.astype(f32), xs)
+    o_inter = o_inter.transpose(1, 2, 0, 3, 4)         # [B,H,G,c,dv]
+
+    o = (o_intra + o_inter).reshape(B, H, T, dv)
+    return o.astype(v.dtype), state_f
+
+
+def gla_decode_step(q, k, v, lw, state, *, bonus: Optional[jnp.ndarray] = None):
+    """Single-token recurrent step. q,k: [B,H,dk]; v: [B,H,dv];
+    lw: [B,H,dk]; state: [B,H,dk,dv]. Returns (o [B,H,dv], new_state)."""
+    f32 = jnp.float32
+    q_, k_, v_ = (a.astype(f32) for a in (q, k, v))
+    lw = clamp_lw(lw.astype(f32))
+    decay = jnp.exp(lw)[..., None]                     # [B,H,dk,1]
+    kv = k_[..., :, None] * v_[..., None, :]           # [B,H,dk,dv]
+    if bonus is None:
+        s_new = state * decay + kv
+        o = jnp.einsum("bhk,bhkv->bhv", q_, s_new)
+    else:
+        o = jnp.einsum("bhk,bhkv->bhv", q_,
+                       state + bonus.astype(f32)[None, :, :, None] * kv)
+        s_new = state * decay + kv
+    return o.astype(v.dtype), s_new

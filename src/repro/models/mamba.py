@@ -1,0 +1,113 @@
+"""Mamba2 (SSD) block on the shared chunked-GLA engine.
+
+Structure follows the Mamba2 reference: fused in_proj -> (z, x, B, C, dt),
+causal depthwise conv over (x, B, C), scalar-per-head decay
+a_t = -exp(A_log) * softplus(dt + dt_bias), SSD recurrence, D skip, gated
+RMSNorm, out_proj. ngroups=1 (B/C shared across heads).
+
+Decode state per layer: conv tail [B, K-1, conv_dim] + ssd state
+[B, H, n, p] (n = ssm_state, p = head dim).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.linear_attn import gla_chunked, gla_decode_step
+
+CONV_K = 4
+
+
+def dims(cfg):
+    d_inner = 2 * cfg.d_model
+    nheads = d_inner // cfg.mamba_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba_block(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * n + nheads
+    return {
+        "in_proj": dense_init(ks[0], (d, in_dim), d, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "gn_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d), d_inner, dtype),
+    }
+
+
+def init_mamba_state(batch, cfg, dtype=jnp.float32):
+    d_inner, nheads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, nheads, cfg.ssm_state, cfg.mamba_headdim),
+                         jnp.float32),
+    }
+
+
+def _causal_conv(u, w, b, tail=None):
+    """Depthwise causal conv. u [B,T,C], w [K,C]; tail [B,K-1,C] carryover."""
+    B, T, C = u.shape
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, C), u.dtype)
+    ext = jnp.concatenate([tail.astype(u.dtype), u], axis=1)   # [B, T+K-1, C]
+    out = sum(ext[:, i:i + T, :] * w[i].astype(u.dtype) for i in range(K))
+    out = out + b.astype(u.dtype)
+    new_tail = ext[:, -(K - 1):, :]
+    return out, new_tail
+
+
+def mamba_block(p, x, cfg, norms, state=None):
+    """Pre-norm Mamba2 block: x [B,T,d] -> (x', new_state)."""
+    from repro.models.common import rmsnorm
+
+    B, T, d = x.shape
+    d_inner, nheads, conv_dim = dims(cfg)
+    n, hp = cfg.ssm_state, cfg.mamba_headdim
+
+    h = rmsnorm(x, norms["n1"]["scale"])
+    zxbcdt = h @ p["in_proj"]
+    z, xc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+
+    tail = state["conv"] if state is not None else None
+    xc, new_tail = _causal_conv(xc, p["conv_w"], p["conv_b"], tail)
+    xc = jax.nn.silu(xc)
+    xs, Bm, Cm = jnp.split(xc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B,T,H]
+    lw_h = -jnp.exp(p["A_log"]) * dt                                # [B,T,H] <=0
+
+    v = xs.reshape(B, T, nheads, hp) * dt[..., None].astype(xs.dtype)
+    v = v.transpose(0, 2, 1, 3)                                     # [B,H,T,p]
+    q = jnp.broadcast_to(Cm[:, None], (B, nheads, T, n))
+    k = jnp.broadcast_to(Bm[:, None], (B, nheads, T, n))
+    lw = jnp.broadcast_to(lw_h.transpose(0, 2, 1)[..., None],
+                          (B, nheads, T, n))
+
+    ssd0 = state["ssd"] if state is not None else None
+    if T == 1 and state is not None:
+        o, ssd = gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                 lw[:, :, 0], ssd0)
+        o = o[:, :, None, :]
+    else:
+        chunk = min(cfg.la_chunk, T)
+        o, ssd = gla_chunked(q, k, v, lw, chunk=chunk, state=ssd0)
+
+    y = o + p["D"][None, :, None, None].astype(o.dtype) * v
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, d_inner)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * p["gn_scale"].astype(x.dtype)
+    out = y @ p["out_proj"]
+    new_state = {"conv": new_tail, "ssd": ssd}
+    return x + out, new_state

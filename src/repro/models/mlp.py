@@ -1,0 +1,39 @@
+"""Feed-forward blocks: GLU (SwiGLU/GeGLU) and vanilla (BERT-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+from repro.models.common import activation, dense_init
+
+
+def init_mlp(key, cfg, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "glu":
+        return {
+            "wg": dense_init(ks[0], (d, ff), d, dtype),
+            "wu": dense_init(ks[1], (d, ff), d, dtype),
+            "wd": dense_init(ks[2], (ff, d), ff, dtype),
+        }
+    return {
+        "w1": dense_init(ks[0], (d, ff), d, dtype),
+        "b1": jnp.zeros((ff,), jnp.float32),
+        "w2": dense_init(ks[1], (ff, d), ff, dtype),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def mlp_apply(params, x, cfg):
+    act = activation(cfg.act)
+    if cfg.mlp_type == "glu":
+        g = jnp.einsum("btd,df->btf", x, params["wg"])
+        u = jnp.einsum("btd,df->btf", x, params["wu"])
+        h = act(g) * u
+        h = ctx.hint(h, "batch", None, "mlp")
+        return jnp.einsum("btf,fd->btd", h, params["wd"])
+    h = jnp.einsum("btd,df->btf", x, params["w1"]) + params["b1"].astype(x.dtype)
+    h = act(h)
+    h = ctx.hint(h, "batch", None, "mlp")
+    return jnp.einsum("btf,fd->btd", h, params["w2"]) + params["b2"].astype(x.dtype)

@@ -1,0 +1,348 @@
+"""The unified LM: scan-over-layers transformer substrate for every assigned
+arch (dense / MoE / RWKV6 / Mamba2 / Zamba2-hybrid / encoder) with X-PEFT
+adapter-bank hooks on every block's residual stream.
+
+Params are plain dict pytrees; layers are stacked on a leading L axis and run
+under jax.lax.scan (compact HLO => compilable 132B-param dry-runs on CPU).
+Abstract init for the dry-run comes from jax.eval_shape(init_lm, ...).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import xpeft as XP
+from repro.core.adapters import init_adapter_bank
+from repro.distributed import ctx
+from repro.models import attention as ATT
+from repro.models import mamba as MB
+from repro.models import mlp as MLP
+from repro.models import moe as MOE
+from repro.models import rwkv as RK
+from repro.models.common import init_norm, norm_apply, dense_init, softcap
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+
+def _init_stack(key, n, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _init_attn_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    block = {
+        "attn": ATT.init_attention(k1, cfg, dtype),
+        "n1": init_norm(cfg.norm, cfg.d_model),
+        "n2": init_norm(cfg.norm, cfg.d_model),
+    }
+    if cfg.moe:
+        block["moe"] = MOE.init_moe(k2, cfg, dtype)
+    else:
+        block["mlp"] = MLP.init_mlp(k2, cfg, dtype)
+    return block
+
+
+def _init_block(key, cfg, dtype):
+    if cfg.block_pattern == "rwkv":
+        return {"rwkv": RK.init_rwkv_block(key, cfg, dtype),
+                "n1": init_norm("rmsnorm", cfg.d_model),
+                "n2": init_norm("rmsnorm", cfg.d_model)}
+    if cfg.block_pattern in ("mamba", "zamba"):
+        return {"mamba": MB.init_mamba_block(key, cfg, dtype),
+                "n1": init_norm("rmsnorm", cfg.d_model)}
+    return _init_attn_block(key, cfg, dtype)
+
+
+def init_lm(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                            cfg.d_model, dtype),
+        "blocks": _init_stack(keys[1], cfg.num_layers,
+                              lambda k: _init_block(k, cfg, dtype)),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if cfg.pos == "learned":
+        params["pos_embed"] = dense_init(keys[2], (cfg.max_seq_len, cfg.d_model),
+                                         cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[3], (cfg.d_model, cfg.vocab_size),
+                                       cfg.d_model, dtype)
+    if cfg.block_pattern == "zamba":
+        shared_cfg = cfg.with_(attn_type="full")
+        params["shared_attn"] = _init_attn_block(keys[4], shared_cfg, dtype)
+    if cfg.num_labels:
+        params["cls"] = {
+            "pool_w": dense_init(keys[5], (cfg.d_model, cfg.d_model),
+                                 cfg.d_model, jnp.float32),
+            "pool_b": jnp.zeros((cfg.d_model,), jnp.float32),
+            "head_w": dense_init(keys[6], (cfg.d_model, cfg.num_labels),
+                                 cfg.d_model, jnp.float32),
+            "head_b": jnp.zeros((cfg.num_labels,), jnp.float32),
+        }
+    if cfg.xpeft.enabled:
+        params["xpeft_bank"] = init_adapter_bank(
+            keys[7], cfg.num_layers, cfg.xpeft.num_adapters, cfg.d_model,
+            cfg.xpeft.bottleneck, dtype)
+    return params
+
+
+def layer_meta(cfg) -> np.ndarray:
+    """Static per-layer flags: is_global (gemma3 5:1 local:global)."""
+    if cfg.attn_type == "sliding_mix":
+        return np.array([(l % cfg.global_every) == cfg.global_every - 1
+                         for l in range(cfg.num_layers)])
+    return np.ones((cfg.num_layers,), bool)
+
+
+# ----------------------------------------------------------------------------
+# KV / recurrent cache
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.cache_dtype or cfg.dtype)
+    L = cfg.num_layers
+    if cfg.block_pattern == "rwkv":
+        st = RK.init_rwkv_state(batch, cfg, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), st)
+    if cfg.block_pattern == "mamba":
+        st = MB.init_mamba_state(batch, cfg, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), st)
+    if cfg.block_pattern == "zamba":
+        st = MB.init_mamba_state(batch, cfg, dtype)
+        cache = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), st)
+        n_inv = cfg.num_layers // cfg.shared_attn_every
+        cache = dict(cache)
+        cache["attn_k"] = jnp.zeros(
+            (n_inv, batch, seq, cfg.num_kv_heads, cfg.head_dim), dtype)
+        cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+        return cache
+    return {
+        "k": jnp.zeros((L, batch, seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+
+def _xpeft_apply(x, bank_l, masks_l, cfg):
+    if masks_l is None or not cfg.xpeft.enabled:
+        return x
+    if "a_hat" in masks_l:
+        # admission-time aggregated adapters (serving fast path): per-example
+        # Â [B,d,b] / B̂ [B,b,d] already contracted against the bank.
+        from repro.core.adapters import apply_adapter
+        return apply_adapter(x, masks_l["a_hat"], masks_l["b_hat"],
+                             masks_l["ln_scale"][..., None, :],
+                             masks_l["ln_bias"][..., None, :],
+                             activation=cfg.xpeft.adapter_activation)
+    if "idx_a" in masks_l:
+        # k-sparse hard-mask aggregation: gather only the k selected
+        # adapters (N/k cheaper than the dense contraction; the jnp twin of
+        # kernels/mask_aggregate.py)
+        return XP.apply_xpeft_layer_sparse(
+            x, bank_l, masks_l["idx_a"], masks_l["w_a"],
+            masks_l["idx_b"], masks_l["w_b"],
+            masks_l["ln_scale"][..., None, :],
+            masks_l["ln_bias"][..., None, :], cfg.xpeft)
+    return XP.apply_xpeft_layer(x, bank_l, masks_l["w_a"], masks_l["w_b"],
+                                masks_l["ln_scale"][..., None, :],
+                                masks_l["ln_bias"][..., None, :], cfg.xpeft)
+
+
+def _attn_block_apply(block, x, cfg, *, positions, cache_l, cache_pos,
+                      is_global):
+    h = norm_apply(x, block["n1"], cfg.norm)
+    h, new_cache = ATT.attention(block["attn"], h, positions=positions,
+                                 cfg=cfg, cache=cache_l, cache_pos=cache_pos,
+                                 is_global=is_global)
+    x = x + h
+    h = norm_apply(x, block["n2"], cfg.norm)
+    if cfg.moe:
+        h, aux = MOE.moe_apply(block["moe"], h, cfg)
+    else:
+        h, aux = MLP.mlp_apply(block["mlp"], h, cfg), jnp.float32(0)
+    x = x + h
+    return x, new_cache, aux
+
+
+def _make_body(cfg, positions, cache_pos, use_cache):
+    """Scan body over stacked layers for uniform-block archs."""
+
+    def body(x, xs):
+        block, bank_l, masks_l, is_global, cache_l = xs
+        if not use_cache:
+            cache_l = None
+        if cfg.block_pattern == "rwkv":
+            x, new_cache = RK.rwkv_block(
+                block["rwkv"], x, cfg,
+                {"n1": block["n1"], "n2": block["n2"]}, cache_l)
+            aux = jnp.float32(0)
+        elif cfg.block_pattern in ("mamba", "zamba"):
+            x, new_cache = MB.mamba_block(block["mamba"], x, cfg,
+                                          {"n1": block["n1"]}, cache_l)
+            aux = jnp.float32(0)
+        else:
+            x, new_cache, aux = _attn_block_apply(
+                block, x, cfg, positions=positions, cache_l=cache_l,
+                cache_pos=cache_pos, is_global=is_global)
+        x = _xpeft_apply(x, bank_l, masks_l, cfg)
+        # re-pin the residual stream each layer (Megatron-SP: under
+        # act_rules {"seq": "model"} the scan carry — and therefore the
+        # remat-saved layer inputs — stay sequence-sharded over TP)
+        x = ctx.hint(x, "batch", "seq", "embed")
+        if new_cache is None:
+            new_cache = jnp.float32(0)
+        return x, (new_cache, aux)
+
+    return body
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params, tokens, cfg, *, prefix_embeds=None, profile_masks=None,
+            cache=None, cache_pos=0, positions=None):
+    """tokens [B,T] -> (hidden [B,T',d], new_cache, aux_loss).
+
+    profile_masks: {"w_a","w_b": [B,L,N], "ln_scale","ln_bias": [B,L,b]}
+    (per-example hydrated mask weights), or None.
+    cache: stacked cache pytree from init_cache; cache_pos: write offset.
+    """
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    Tt = x.shape[1]
+    if positions is None:
+        if jnp.ndim(cache_pos) == 0:
+            positions = cache_pos + jnp.arange(Tt, dtype=jnp.int32)[None, :]
+            positions = jnp.broadcast_to(positions, (B, Tt))
+        else:  # per-slot decode positions
+            positions = cache_pos[:, None] + jnp.arange(Tt, dtype=jnp.int32)
+    if cfg.pos == "learned":
+        if jnp.ndim(cache_pos) == 0:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], cache_pos, Tt, axis=0)[None]
+        else:
+            x = x + jnp.take(params["pos_embed"], positions, axis=0)
+    x = ctx.hint(x, "batch", "seq", "embed")
+
+    use_cache = cache is not None
+    bank = params.get("xpeft_bank")
+    if bank is None:
+        bank = jnp.zeros((cfg.num_layers,), jnp.float32)  # dummy scanned leaf
+    masks = None
+    if profile_masks is not None:
+        # [B, L, ...] -> [L, B, ...] for scan
+        masks = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), profile_masks)
+    meta = jnp.asarray(layer_meta(cfg))
+
+    if cfg.block_pattern == "zamba":
+        return _forward_zamba(params, x, cfg, positions, cache, cache_pos,
+                              bank, masks, meta)
+
+    body = _remat(_make_body(cfg, positions, cache_pos, use_cache), cfg)
+    dummy_cache = cache if use_cache else jnp.zeros((cfg.num_layers,), jnp.float32)
+    xs = (params["blocks"], bank, masks, meta, dummy_cache)
+    x, (new_cache, auxs) = jax.lax.scan(body, x, xs)
+    x = norm_apply(x, params["final_norm"], cfg.norm)
+    return x, (new_cache if use_cache else None), jnp.mean(auxs)
+
+
+def _forward_zamba(params, x, cfg, positions, cache, cache_pos, bank, masks,
+                   meta):
+    """Zamba2: groups of mamba layers with a SHARED attention block between.
+
+    38 layers, shared_attn_every=6 -> 6 shared-block invocations, each with
+    its own KV cache slice (cache["attn_k"][g]).
+    """
+    use_cache = cache is not None
+    E = cfg.shared_attn_every
+    n_inv = cfg.num_layers // E
+    body = _remat(_make_body(cfg, positions, cache_pos, use_cache), cfg)
+
+    def slice_tree(tree, lo, n):
+        return jax.tree.map(lambda a: a[lo:lo + n], tree)
+
+    mamba_cache = None
+    if use_cache:
+        mamba_cache = {k: v for k, v in cache.items()
+                       if k not in ("attn_k", "attn_v")}
+    new_mamba, new_ak, new_av, auxs = [], [], [], []
+    shared_cfg = cfg.with_(attn_type="full", moe=False)
+    bounds = [(g * E, E) for g in range(n_inv)]
+    rem = cfg.num_layers - n_inv * E
+    if rem:
+        bounds.append((n_inv * E, rem))
+    for gi, (lo, n) in enumerate(bounds):
+        xs = (slice_tree(params["blocks"], lo, n), slice_tree(bank, lo, n),
+              slice_tree(masks, lo, n) if masks is not None else None,
+              meta[lo:lo + n],
+              slice_tree(mamba_cache, lo, n) if use_cache else
+              jnp.zeros((n,), jnp.float32))
+        x, (nc, aux) = jax.lax.scan(body, x, xs)
+        if use_cache:
+            new_mamba.append(nc)
+        auxs.append(aux)
+        if gi < n_inv:
+            attn_cache_l = None
+            if use_cache:
+                attn_cache_l = {"k": cache["attn_k"][gi],
+                                "v": cache["attn_v"][gi]}
+            x, ac, _ = _attn_block_apply(
+                params["shared_attn"], x, shared_cfg, positions=positions,
+                cache_l=attn_cache_l, cache_pos=cache_pos, is_global=True)
+            if use_cache:
+                new_ak.append(ac["k"])
+                new_av.append(ac["v"])
+    new_cache = None
+    if use_cache:
+        new_cache = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *new_mamba)
+        new_cache["attn_k"] = jnp.stack(new_ak)
+        new_cache["attn_v"] = jnp.stack(new_av)
+    x = norm_apply(x, params["final_norm"], cfg.norm)
+    return x, new_cache, jnp.mean(jnp.concatenate(
+        [jnp.atleast_1d(a) for a in auxs]))
+
+
+# ----------------------------------------------------------------------------
+# Heads
+# ----------------------------------------------------------------------------
+
+def lm_logits(params, hidden, cfg):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", hidden, params["embed"])
+    else:
+        logits = jnp.einsum("btd,dv->btv", hidden, params["lm_head"])
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return ctx.hint(logits, "batch", "seq", "vocab")
+
+
+def cls_logits(params, hidden, cfg, head_override=None):
+    """Encoder classification: pooled [CLS] -> labels. head_override lets
+    per-profile heads (X-PEFT trainables) replace the shared head."""
+    pooled = jnp.tanh(hidden[:, 0, :].astype(jnp.float32)
+                      @ params["cls"]["pool_w"] + params["cls"]["pool_b"])
+    head = head_override if head_override is not None else params["cls"]
+    if head is params["cls"]:
+        return pooled @ head["head_w"] + head["head_b"]
+    # per-example heads: [B, d, C] / [B, C]
+    return jnp.einsum("bd,bdc->bc", pooled, head["head_w"]) + head["head_b"]

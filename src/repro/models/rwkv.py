@@ -1,0 +1,124 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Faithful-in-structure implementation: static token-shift mixing coefficients
+(mu) per projection, LoRA-parameterized data-dependent per-channel decay
+(w = -exp(w0 + tanh(x @ dec_a) @ dec_b)), per-head bonus u, head-wise
+normalization, silu output gate, and squared-ReLU channel-mix. The wkv engine
+is the shared chunked GLA (linear_attn.py).
+
+Decode state per layer: (tm_last [B,d], cm_last [B,d], wkv [B,H,dk,dk]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+from repro.models.linear_attn import gla_chunked, gla_decode_step
+
+DECAY_LORA = 64
+
+
+def init_rwkv_block(key, cfg, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,w,g shift mixes
+        "rwr": dense_init(ks[0], (d, H * hd), d, dtype),
+        "rwk": dense_init(ks[1], (d, H * hd), d, dtype),
+        "rwv": dense_init(ks[2], (d, H * hd), d, dtype),
+        "rwg": dense_init(ks[3], (d, H * hd), d, dtype),
+        "rwo": dense_init(ks[4], (H * hd, d), H * hd, dtype),
+        "w0": jnp.full((H, hd), -1.0, jnp.float32),   # base log decay rate
+        "dec_a": dense_init(ks[5], (d, DECAY_LORA), d, jnp.float32),
+        "dec_b": 0.01 * jax.random.normal(ks[6], (DECAY_LORA, H * hd), jnp.float32),
+        "u": 0.5 * jax.random.normal(ks[7], (H, hd), jnp.float32),
+        "ln_x_scale": jnp.ones((H, hd), jnp.float32),
+        # channel-mix
+        "cmu": 0.5 * jnp.ones((2, d), jnp.float32),   # k,r shift mixes
+        "cw_k": dense_init(ks[8], (d, ff), d, dtype),
+        "cw_v": dense_init(ks[9], (ff, d), ff, dtype),
+        "cw_r": dense_init(ks[10], (d, d), d, dtype),
+    }
+    return p
+
+
+def init_rwkv_state(batch, cfg, dtype=jnp.float32):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {
+        "tm_last": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_last": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def _shift(x, last):
+    """Token shift: x[t-1] with `last` at t=0. x [B,T,d], last [B,d]."""
+    prev = jnp.concatenate([last[:, None, :].astype(x.dtype), x[:, :-1]], 1)
+    return prev
+
+
+def _decay(p, xw):
+    raw = p["w0"].reshape(-1) + jnp.tanh(
+        xw.astype(jnp.float32) @ p["dec_a"]) @ p["dec_b"]
+    return -jnp.exp(raw)  # log-decay <= 0, data-dependent (Finch)
+
+
+def _headwise_norm(o, scale):
+    # per-head RMS norm over head_dim (stand-in for RWKV's GroupNorm)
+    var = jnp.mean(jnp.square(o.astype(jnp.float32)), -1, keepdims=True)
+    return (o * jax.lax.rsqrt(var + 1e-6) * scale).astype(o.dtype)
+
+
+def time_mix(p, x, cfg, state=None):
+    """x [B,T,d] -> (y, new_state{tm_last, wkv})."""
+    B, T, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    last = state["tm_last"] if state is not None else jnp.zeros((B, d), x.dtype)
+    prev = _shift(x, last)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (prev - x) * mu[i] for i in range(5))
+
+    r = (xr @ p["rwr"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    k = (xk @ p["rwk"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    v = (xv @ p["rwv"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    g = xg @ p["rwg"]
+    lw = _decay(p, xw).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    wkv0 = state["wkv"] if state is not None else None
+    if T == 1 and state is not None:
+        o, wkv = gla_decode_step(r[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                 lw[:, :, 0], wkv0, bonus=p["u"])
+        o = o[:, :, None, :]
+    else:
+        chunk = min(cfg.la_chunk, T)
+        o, wkv = gla_chunked(r, k, v, lw, chunk=chunk, bonus=p["u"],
+                             state=wkv0)
+    o = _headwise_norm(o, p["ln_x_scale"][:, None, :])
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+    y = (o * jax.nn.silu(g)) @ p["rwo"]
+    return y, {"tm_last": x[:, -1, :], "wkv": wkv}
+
+
+def channel_mix(p, x, state=None):
+    B, T, d = x.shape
+    last = state["cm_last"] if state is not None else jnp.zeros((B, d), x.dtype)
+    prev = _shift(x, last)
+    cmu = p["cmu"].astype(x.dtype)
+    xk = x + (prev - x) * cmu[0]
+    xr = x + (prev - x) * cmu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
+    y = jax.nn.sigmoid(xr @ p["cw_r"]) * (kk @ p["cw_v"])
+    return y, {"cm_last": x[:, -1, :]}
+
+
+def rwkv_block(p, x, cfg, norms, state=None):
+    """Full pre-norm RWKV6 block. norms: {"n1","n2"} rmsnorm params."""
+    h, st_tm = time_mix(p, rmsnorm(x, norms["n1"]["scale"]), cfg, state)
+    x = x + h
+    h, st_cm = channel_mix(p, rmsnorm(x, norms["n2"]["scale"]), state)
+    x = x + h
+    new_state = {**st_tm, **st_cm}
+    return x, new_state

@@ -1,0 +1,7 @@
+"""Optimizer substrate (no optax in env — built from scratch)."""
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    linear_decay_schedule,
+)

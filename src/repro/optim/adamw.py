@@ -1,0 +1,68 @@
+"""AdamW + schedules, from scratch (paper: AdamW, lr=1e-5, linear decay).
+
+Optimizer state mirrors the param pytree (m, v in fp32) so the sharding
+specs of the params apply verbatim to the state — FSDP shards optimizer
+state for free.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_decay_schedule(base_lr: float, total_steps: int,
+                          warmup_steps: int = 0) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+        frac = jnp.clip((total_steps - step)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return base_lr * jnp.where(step < warmup_steps, warm, frac)
+    return sched
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, opt_state, params, *, lr, b1=0.9, b2=0.999,
+                 eps=1e-8, weight_decay=0.0):
+    """Returns (new_params, new_opt_state). lr may be a schedule or scalar."""
+    step = opt_state["step"] + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr_t * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.steps import make_prefill_step, make_decode_step  # noqa: F401

@@ -1,0 +1,45 @@
+"""Serving steps: prefill (forward + KV cache build) and decode (one token
+against the cache). These are the functions the dry-run lowers for the
+`prefill_*` / `decode_*` / `long_*` shape cells.
+
+Per-request X-PEFT personalization rides in `profile_masks`; the decode hot
+path can instead take admission-time aggregated adapters ("a_hat"/"b_hat"),
+removing mask-bank aggregation from the critical path (DESIGN.md §3.4 —
+measured in the §Perf hillclimb).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MDL
+
+
+def make_prefill_step(cfg):
+    def prefill(params, tokens, cache, profile_masks=None,
+                prefix_embeds=None):
+        hidden, cache, _ = MDL.forward(
+            params, tokens, cfg, prefix_embeds=prefix_embeds,
+            profile_masks=profile_masks, cache=cache, cache_pos=0)
+        logits = MDL.lm_logits(params, hidden[:, -1:, :], cfg)
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(cfg):
+    def decode(params, tokens, cache, cache_pos, profile_masks=None):
+        """tokens [B,1]; cache_pos scalar int32 (current lengths assumed
+        uniform; the engine passes per-slot masking via positions)."""
+        hidden, cache, _ = MDL.forward(
+            params, tokens, cfg, profile_masks=profile_masks,
+            cache=cache, cache_pos=cache_pos)
+        logits = MDL.lm_logits(params, hidden, cfg)
+        return logits, cache
+    return decode
+
+
+def greedy_next(logits):
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

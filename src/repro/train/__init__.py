@@ -1,0 +1,7 @@
+from repro.train.steps import (  # noqa: F401
+    init_train_state,
+    init_xpeft_trainable,
+    lm_loss,
+    make_train_step,
+)
+from repro.train.trainer import Trainer  # noqa: F401

@@ -1,0 +1,261 @@
+"""Train steps for every fine-tuning arm of the paper + full pretrain.
+
+Modes (paper §4 baselines, one mechanism):
+- "xpeft":     trainable = per-profile mask table (+ per-profile heads for
+               encoders). THE paper workload: multi-profile mask training
+               against a frozen PLM + frozen shared adapter bank.
+- "adapter":   single_adapter baseline — one fresh Pfeiffer adapter (+head),
+               PLM frozen (bank of N=1 with fixed mask).
+- "head_only": head_only baseline.
+- "full":      full pretraining (framework completeness; the non-paper path).
+
+The trainable subtree is a SEPARATE pytree from the frozen params, so frozen
+weights enter grad as non-differentiated arguments and XLA drops their weight
+gradients (≈1/3 of backward FLOPs saved — visible in the roofline table).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+from repro.core import xpeft as XP
+from repro.core.adapters import init_adapter_bank
+from repro.models import model as MDL
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.utils import merge_trees
+
+
+# ----------------------------------------------------------------------------
+# Trainable init per mode
+# ----------------------------------------------------------------------------
+
+def init_xpeft_trainable(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    out = {"table": XP.init_profile_table(k1, cfg)}
+    if cfg.num_labels:
+        P = cfg.xpeft.max_profiles
+        out["heads"] = {
+            "head_w": 0.02 * jax.random.normal(
+                k2, (P, cfg.d_model, cfg.num_labels), jnp.float32),
+            "head_b": jnp.zeros((P, cfg.num_labels), jnp.float32),
+        }
+    return out
+
+
+def init_adapter_trainable(key, cfg) -> dict:
+    """single_adapter baseline: one adapter (bank with N=1) + LN + head."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    xp = cfg.xpeft
+    out = {
+        "bank": init_adapter_bank(k1, cfg.num_layers, 1, cfg.d_model,
+                                  xp.bottleneck, jnp.dtype(cfg.dtype)),
+        "ln_scale": jnp.ones((cfg.num_layers, xp.bottleneck), jnp.float32),
+        "ln_bias": jnp.zeros((cfg.num_layers, xp.bottleneck), jnp.float32),
+    }
+    if cfg.num_labels:
+        out["head"] = {
+            "head_w": 0.02 * jax.random.normal(
+                k3, (cfg.d_model, cfg.num_labels), jnp.float32),
+            "head_b": jnp.zeros((cfg.num_labels,), jnp.float32),
+        }
+    return out
+
+
+def init_head_trainable(key, cfg) -> dict:
+    return {"head": {
+        "head_w": 0.02 * jax.random.normal(
+            key, (cfg.d_model, cfg.num_labels), jnp.float32),
+        "head_b": jnp.zeros((cfg.num_labels,), jnp.float32),
+    }}
+
+
+def init_trainable(key, cfg, mode: str) -> dict:
+    if mode == "xpeft":
+        return init_xpeft_trainable(key, cfg)
+    if mode == "adapter":
+        return init_adapter_trainable(key, cfg)
+    if mode == "head_only":
+        return init_head_trainable(key, cfg)
+    raise ValueError(mode)
+
+
+def init_train_state(key, cfg, mode: str = "xpeft") -> dict:
+    """{"frozen", "trainable", "opt", "step"} — full training state."""
+    kf, kt = jax.random.split(key)
+    frozen = MDL.init_lm(kf, cfg)
+    if mode == "full":
+        trainable = frozen
+        frozen = {}
+        return {"frozen": frozen, "trainable": trainable,
+                "opt": adamw_init(trainable)}
+    trainable = init_trainable(kt, cfg, mode)
+    return {"frozen": frozen, "trainable": trainable,
+            "opt": adamw_init(trainable)}
+
+
+# ----------------------------------------------------------------------------
+# Losses
+# ----------------------------------------------------------------------------
+
+def lm_loss(logits, labels):
+    """Mean next-token CE. logits [B,T,V] fp32, labels [B,T]."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def lm_loss_chunked(params, hidden, labels, cfg, chunk: int = 512):
+    """CE without materializing [B,T,V]: scan over sequence chunks.
+
+    At vocab 256k / seq 4k / batch 256 the full fp32 logits tensor is ~1 PB
+    global; chunking bounds the live logits to [B, chunk, V/shard] and lets
+    XLA re-materialize per chunk in backward (jax.checkpoint on the body).
+    """
+    from repro.models import model as MDL
+
+    B, T, d = hidden.shape
+    if T <= chunk or T % chunk != 0:
+        return lm_loss(MDL.lm_logits(params, hidden, cfg), labels)
+    n = T // chunk
+    hs = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h, lab = xs
+        logits = MDL.lm_logits(params, h, cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), (hs, ls))
+    return total / (B * T)
+
+
+def cls_loss(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(lse - gold), acc
+
+
+# ----------------------------------------------------------------------------
+# Forward under each mode
+# ----------------------------------------------------------------------------
+
+def _forward_mode(frozen, trainable, batch, cfg, mode, rng, training=True):
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    masks = None
+    head_override = None
+    params = frozen
+
+    if mode == "xpeft":
+        prof = XP.gather_profiles(trainable["table"], batch["profile_ids"])
+        w_a, w_b = XP.profile_mask_weights(prof, cfg.xpeft, key=rng,
+                                           training=training)
+        masks = {"w_a": w_a, "w_b": w_b, "ln_scale": prof["ln_scale"],
+                 "ln_bias": prof["ln_bias"]}
+        if cfg.num_labels:
+            head_override = jax.tree.map(
+                lambda t: jnp.take(t, batch["profile_ids"], axis=0),
+                trainable["heads"])
+    elif mode == "adapter":
+        B = tokens.shape[0]
+        ones = jnp.ones((B, cfg.num_layers, 1), jnp.float32)
+        masks = {"w_a": ones, "w_b": ones,
+                 "ln_scale": jnp.broadcast_to(trainable["ln_scale"],
+                                              (B,) + trainable["ln_scale"].shape),
+                 "ln_bias": jnp.broadcast_to(trainable["ln_bias"],
+                                             (B,) + trainable["ln_bias"].shape)}
+        params = merge_trees(frozen, {"xpeft_bank": trainable["bank"]})
+        if cfg.num_labels:
+            head_override = trainable["head"]
+    elif mode == "head_only":
+        params = {k: v for k, v in frozen.items() if k != "xpeft_bank"}
+        head_override = trainable["head"]
+        cfg = cfg.with_xpeft(enabled=False)
+    elif mode == "full":
+        params = trainable
+
+    hidden, _, aux = MDL.forward(params, tokens, cfg, prefix_embeds=prefix,
+                                 profile_masks=masks)
+    return hidden, aux, head_override, params
+
+
+def loss_for_batch(frozen, trainable, batch, cfg, mode, rng, training=True):
+    hidden, aux, head_override, params = _forward_mode(
+        frozen, trainable, batch, cfg, mode, rng, training)
+    metrics = {}
+    if cfg.num_labels:  # encoder classification (paper experiments)
+        if head_override is not None and head_override.get("head_w") is not None \
+                and head_override["head_w"].ndim == 3:
+            logits = MDL.cls_logits(params, hidden, cfg, head_override)
+        elif head_override is not None:
+            pooled = jnp.tanh(hidden[:, 0, :].astype(jnp.float32)
+                              @ params["cls"]["pool_w"]
+                              + params["cls"]["pool_b"])
+            logits = pooled @ head_override["head_w"] + head_override["head_b"]
+        else:
+            logits = MDL.cls_logits(params, hidden, cfg)
+        loss, acc = cls_loss(logits, batch["labels"])
+        metrics["accuracy"] = acc
+    else:  # LM next-token (seq-chunked CE: never materializes [B,T,V])
+        P = 0 if batch.get("prefix_embeds") is None else \
+            batch["prefix_embeds"].shape[1]
+        loss = lm_loss_chunked(params, hidden[:, P:, :], batch["labels"], cfg)
+    total = loss + 0.01 * aux
+    metrics["loss"] = loss
+    metrics["aux_loss"] = aux
+    return total, metrics
+
+
+# ----------------------------------------------------------------------------
+# Step factory
+# ----------------------------------------------------------------------------
+
+def make_train_step(cfg, mode: str = "xpeft", *, lr=1e-3, weight_decay=0.0,
+                    clip_norm: float = 1.0, accum: int = 1):
+    """Returns step(state, batch, rng) -> (state, metrics); jit-ready."""
+
+    def step(state, batch, rng):
+        frozen = state["frozen"]
+
+        def loss_fn(trainable, mb):
+            return loss_for_batch(frozen, trainable, mb, cfg, mode, rng)
+
+        if accum > 1:
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["trainable"], mb)
+                return (jax.tree.map(jnp.add, g_acc, g),
+                        jax.tree.map(jnp.add, m_acc, m)), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            zeros_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                   state["trainable"])
+            zeros_m = {"loss": 0.0, "aux_loss": 0.0}
+            if cfg.num_labels:
+                zeros_m["accuracy"] = 0.0
+            (grads, metrics), _ = jax.lax.scan(micro, (zeros_g, zeros_m), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m / accum, metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["trainable"], batch)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = adamw_update(
+            grads, state["opt"], state["trainable"], lr=lr,
+            weight_decay=weight_decay)
+        metrics["grad_norm"] = gnorm
+        return {"frozen": frozen, "trainable": new_params,
+                "opt": new_opt}, metrics
+
+    return step

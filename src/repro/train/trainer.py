@@ -1,0 +1,88 @@
+"""Trainer loop: checkpoint hooks, straggler watchdog, preemption, resume.
+
+Production posture: the loop is restartable at any step (data position is
+part of the checkpoint), SIGTERM triggers checkpoint-and-exit, slow steps
+are recorded and fed to the data re-balancer.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.fault import PreemptionHandler, StepWatchdog
+
+
+class Trainer:
+    def __init__(self, step_fn: Callable, state, loader, *,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+                 keep_last: int = 3, watchdog: Optional[StepWatchdog] = None,
+                 preemption: Optional[PreemptionHandler] = None,
+                 log_every: int = 10, rng=None):
+        self.step_fn = step_fn
+        self.state = state
+        self.loader = loader
+        self.step = 0
+        self.ckpt_every = ckpt_every
+        self.mgr = CheckpointManager(ckpt_dir, keep_last) if ckpt_dir else None
+        self.watchdog = watchdog or StepWatchdog()
+        self.preemption = preemption
+        self.log_every = log_every
+        self.rng = rng if rng is not None else jax.random.key(0)
+        self.history = []
+
+    # ------------------------------------------------------------- recovery
+    def try_resume(self) -> bool:
+        if not self.mgr:
+            return False
+        latest = self.mgr.latest_step()
+        if latest is None:
+            return False
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+        self.state = self.mgr.restore(latest, abstract)
+        man = self.mgr.manifest(latest)
+        self.step = man["step"]
+        self.loader.load_state_dict(man["extra"]["loader"])
+        if "rng" in man["extra"]:
+            self.rng = jax.random.wrap_key_data(
+                jax.numpy.asarray(man["extra"]["rng"], dtype="uint32"))
+        return True
+
+    def checkpoint(self, blocking=True):
+        if self.mgr:
+            rng_data = np.asarray(jax.random.key_data(self.rng)).tolist()
+            self.mgr.save(self.step, self.state, blocking=blocking,
+                          extra={"loader": self.loader.state_dict(),
+                                 "rng": rng_data})
+
+    # ----------------------------------------------------------------- loop
+    def run(self, num_steps: int) -> list:
+        for _ in range(num_steps):
+            if self.preemption and self.preemption.preempted():
+                self.checkpoint(blocking=True)
+                break
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.loader.next().items()}
+            self.rng, sub = jax.random.split(self.rng)
+            self.watchdog.step_start()
+            self.state, metrics = self.step_fn(self.state, batch, sub)
+            jax.block_until_ready(metrics["loss"])
+            slow = self.watchdog.step_end()
+            self.step += 1
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = self.step
+            rec["straggler"] = slow
+            self.history.append(rec)
+            if self.step % self.log_every == 0:
+                print(f"step {self.step} " +
+                      " ".join(f"{k}={v:.4f}" for k, v in rec.items()
+                               if isinstance(v, float)))
+            if self.mgr and self.step % self.ckpt_every == 0:
+                self.checkpoint(blocking=False)
+        if self.mgr:
+            self.mgr.wait()
+        return self.history

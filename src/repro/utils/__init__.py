@@ -1,0 +1,10 @@
+"""Small shared utilities: pytree helpers, logging, sizes."""
+from repro.utils.tree import (  # noqa: F401
+    tree_paths,
+    leaf_name,
+    param_count,
+    param_bytes,
+    merge_trees,
+    tree_zeros_like,
+    map_with_path,
+)

@@ -1,0 +1,70 @@
+"""Pytree helpers used across the framework.
+
+Params everywhere are plain nested dicts of arrays (or ShapeDtypeStructs in
+abstract mode), so these helpers are the substrate the sharding rules, the
+optimizer and the checkpointer all share.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def tree_paths(tree) -> dict:
+    """Flatten a pytree to {'a/b/c': leaf} with slash-joined string paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {"/".join(_key_str(k) for k in path): leaf for path, leaf in flat}
+
+
+def leaf_name(path: str) -> str:
+    return path.rsplit("/", 1)[-1]
+
+
+def map_with_path(fn, tree):
+    """tree_map where fn receives (path_str, leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn("/".join(_key_str(k) for k in p), x), tree
+    )
+
+
+def _leaf_size(x) -> int:
+    return int(np.prod(x.shape)) if hasattr(x, "shape") else 1
+
+
+def _leaf_bytes(x) -> int:
+    itemsize = jnp.dtype(x.dtype).itemsize if hasattr(x, "dtype") else 4
+    return _leaf_size(x) * itemsize
+
+
+def param_count(tree) -> int:
+    return sum(_leaf_size(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(_leaf_bytes(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def merge_trees(a: dict, b: dict) -> dict:
+    """Recursively merge dict pytrees (b wins on conflicts at leaf level)."""
+    out = dict(a)
+    for k, v in b.items():
+        if k in out and isinstance(out[k], dict) and isinstance(v, dict):
+            out[k] = merge_trees(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)

@@ -1,0 +1,91 @@
+"""Checkpoint manager: atomicity, resume, keep-last-k, async."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.arange(4.0)},
+            "opt": {"m": jnp.zeros((8, 8)), "step": jnp.int32(7)}}
+
+
+def test_save_restore_bitwise(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    st = _state()
+    mgr.save(3, st, extra={"loader": {"step": 3}})
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            st)
+    out = mgr.restore(3, abstract)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert mgr.manifest(3)["extra"]["loader"]["step"] == 3
+
+
+def test_keep_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state())
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(1, _state(), blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+
+
+def test_partial_write_invisible(tmp_path):
+    """A .tmp dir from a crashed writer is never listed as a checkpoint."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000009.tmp"))
+    assert mgr.all_steps() == []
+
+
+def test_trainer_resume_bitwise(tmp_path):
+    """Train 6 steps w/ checkpoint at 3; crash; resume; states match a
+    straight 6-step run exactly (data position included)."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.data import MarkovLM
+    from repro.data.loader import ShardedLoader
+    from repro.train.steps import init_train_state, make_train_step
+    from repro.train.trainer import Trainer
+
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    key = jax.random.key(0)
+    step = jax.jit(make_train_step(cfg, "xpeft", lr=1e-2))
+
+    def mk_loader():
+        return ShardedLoader(MarkovLM(cfg.vocab_size, 4, seed=1), 4, 16)
+
+    # continuous run
+    t1 = Trainer(step, init_train_state(key, cfg, "xpeft"), mk_loader(),
+                 rng=jax.random.key(42), log_every=1000)
+    t1.run(6)
+
+    # checkpointed + resumed run
+    ck = str(tmp_path / "ck")
+    t2 = Trainer(step, init_train_state(key, cfg, "xpeft"), mk_loader(),
+                 ckpt_dir=ck, ckpt_every=3, rng=jax.random.key(42),
+                 log_every=1000)
+    t2.run(3)
+    t2.checkpoint(blocking=True)
+
+    t3 = Trainer(step, init_train_state(key, cfg, "xpeft"), mk_loader(),
+                 ckpt_dir=ck, rng=jax.random.key(0), log_every=1000)
+    assert t3.try_resume()  # restores state, step, data position AND rng
+    assert t3.step == 3
+    t3.run(3)
+
+    a = jax.tree.leaves(t1.state["trainable"])
+    b = jax.tree.leaves(t3.state["trainable"])
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

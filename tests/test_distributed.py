@@ -1,0 +1,200 @@
+"""Distribution layer: sharding rules, compressed collectives, pipeline,
+small-mesh pjit — multi-device pieces run in a subprocess with 8 host
+devices (never set device-count flags in this process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import spec_for
+
+MESH_AXES = {"data": 4, "model": 2}
+
+
+def test_rules_attention_heads_tp():
+    s = spec_for("blocks/attn/wq", (12, 64, 8, 16), MESH_AXES, fsdp=True)
+    assert s == P(None, "data", "model", None)
+
+
+def test_rules_mqa_kv_replicated():
+    # kv_heads=1 not divisible by model=2 -> replicated, FSDP elsewhere
+    s = spec_for("blocks/attn/wk", (12, 512, 1, 64), MESH_AXES, fsdp=True)
+    assert s == P(None, "data", None, None)
+
+
+def test_rules_small_tensors_skip_fsdp():
+    s = spec_for("blocks/attn/wk", (12, 64, 1, 16), MESH_AXES, fsdp=True)
+    assert s == P(None, None, None, None)  # < FSDP_MIN_SIZE
+
+
+def test_rules_divisibility_guard():
+    s = spec_for("blocks/mlp/wg", (10, 64, 31), MESH_AXES, fsdp=True)
+    assert s[2] is None  # 31 % 2 != 0
+
+
+def test_rules_bank_tp_and_fsdp():
+    s = spec_for("xpeft_bank/bank_a", (12, 256, 64, 8), MESH_AXES, fsdp=True)
+    assert s == P(None, "data", "model", None)
+
+
+def test_rules_small_params_not_fsdp():
+    s = spec_for("final_norm/scale", (64,), MESH_AXES, fsdp=True)
+    assert s == P(None)
+
+
+def test_rules_expert_pinned_fsdp():
+    s = spec_for("blocks/moe/ew_g", (4, 8, 64, 32), MESH_AXES, fsdp=True)
+    assert s == P(None, "model", None, "data")
+
+
+_SUB_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+"""
+
+
+def _run_sub(body: str):
+    code = _SUB_PRELUDE + textwrap.dedent(body)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=os.path.dirname(
+                           os.path.dirname(os.path.abspath(__file__))),
+                       timeout=600)
+    assert r.returncode == 0, f"STDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_compressed_psum_numerics():
+    _run_sub("""
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+    from repro.distributed.collectives import compressed_psum, compressed_psum_ef
+    mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    x = jax.random.normal(jax.random.key(0), (8, 64))
+
+    @partial(shard_map, mesh=mesh, in_specs=P("d", None), out_specs=P("d", None))
+    def f(xl):
+        return compressed_psum(xl, "d")
+    got = f(x)[0]
+    want = x.sum(0)
+    err = float(jnp.abs(got - want).max()) / float(jnp.abs(want).max())
+    assert err < 0.05, err
+
+    # error feedback: mean of quantized psums over repeated steps converges
+    @partial(shard_map, mesh=mesh, in_specs=(P("d", None), P("d", None)),
+             out_specs=(P("d", None), P("d", None)))
+    def g(xl, el):
+        y, e = compressed_psum_ef(xl, el, "d")
+        return y, e
+    err_buf = jnp.zeros_like(x)
+    acc = 0.0
+    for i in range(20):
+        y, err_buf = g(x, err_buf)
+        acc = acc + y[0]
+    rel = float(jnp.abs(acc / 20 - want).max()) / float(jnp.abs(want).max())
+    assert rel < 0.01, rel
+    print("compressed psum ok")
+    """)
+
+
+def test_pipeline_matches_single_device():
+    _run_sub("""
+    from repro.distributed.pipeline import pipeline_apply, stack_stages
+    mesh = jax.make_mesh((4, 2), ("pod", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    L, d = 8, 16
+    ks = jax.random.split(jax.random.key(0), L)
+    layers = jax.vmap(lambda k: {"w": jax.random.normal(k, (d, d)) / np.sqrt(d)})(ks)
+
+    def stage_fn(stage_params, x):
+        def body(c, lp):
+            return jnp.tanh(c @ lp["w"]), None
+        y, _ = jax.lax.scan(body, x, stage_params)
+        return y
+
+    x_micro = jax.random.normal(jax.random.key(1), (6, 4, d))  # M=6 microbatches
+    stacked = stack_stages(layers, 4)
+    y_pipe = pipeline_apply(stage_fn, stacked, x_micro, mesh, axis="pod")
+
+    # reference: run all layers sequentially
+    def ref_one(x):
+        def body(c, lp):
+            return jnp.tanh(c @ lp["w"]), None
+        y, _ = jax.lax.scan(body, x, layers)
+        return y
+    y_ref = jax.vmap(ref_one)(x_micro)
+    err = float(jnp.abs(y_pipe - y_ref).max())
+    assert err < 1e-4, err
+    print("pipeline ok", err)
+    """)
+
+
+def test_small_mesh_train_step_and_moe_parity():
+    """pjit xpeft train step on a 4x2 mesh == single-device result; also
+    checks the shard_map MoE path against the local path."""
+    _run_sub("""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.train.steps import init_train_state, make_train_step
+    from repro.distributed import ctx
+    from repro.distributed.sharding import param_specs, batch_specs, to_shardings
+    from repro.models.moe import init_moe, moe_apply
+
+    cfg = reduce_for_smoke(get_config("qwen3-moe-30b-a3b")).with_(
+        num_experts=8, top_k=2, capacity_factor=8.0)
+    key = jax.random.key(0)
+    state = init_train_state(key, cfg, "xpeft")
+    B, T = 8, 16
+    batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+             "profile_ids": jnp.arange(B) % 4}
+    step = make_train_step(cfg, "xpeft", lr=1e-3)
+    s1, m1 = jax.jit(step)(state, batch, jax.random.key(7))
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    with ctx.mesh_context(mesh):
+        st_sh = to_shardings(param_specs(state, mesh, fsdp=True), mesh)
+        b_sh = to_shardings(batch_specs(batch, mesh, B), mesh)
+        stepd = jax.jit(step, in_shardings=(st_sh, b_sh, None),
+                        out_shardings=(st_sh, None))
+        s2, m2 = stepd(state, batch, jax.random.key(7))
+    l1, l2 = float(m1["loss"]), float(m2["loss"])
+    assert abs(l1 - l2) / max(abs(l1), 1e-6) < 2e-2, (l1, l2)
+
+    # MoE parity: shard_map path vs local path on identical inputs
+    p = init_moe(jax.random.key(3), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(4), (B, T, cfg.d_model))
+    y_local, _ = moe_apply(p, x, cfg)          # no mesh ctx -> local
+    with ctx.mesh_context(mesh):
+        xs = jax.device_put(x, jax.sharding.NamedSharding(mesh, P(("data",), None, None)))
+        y_dist, _ = jax.jit(lambda pp, xx: moe_apply(pp, xx, cfg))(p, xs)
+    err = float(jnp.abs(y_local - y_dist).max())
+    assert err < 1e-3, err
+    print("mesh train + moe parity ok", l1, l2, err)
+    """)
+
+
+def test_elastic_reshard_smaller_mesh():
+    _run_sub("""
+    from repro.distributed.fault import reshard_state, surviving_mesh
+    from jax.sharding import NamedSharding
+    mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                       NamedSharding(mesh8, P("data", None)))
+    mesh4 = surviving_mesh(("data",), (8,), "data", 4)
+    y = reshard_state({"x": x}, {"x": NamedSharding(mesh4, P("data", None))})
+    np.testing.assert_array_equal(np.asarray(y["x"]), np.asarray(x))
+    print("elastic ok")
+    """)

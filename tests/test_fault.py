@@ -1,0 +1,60 @@
+"""Fault tolerance: watchdog, preemption, trainer integration."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.fault import (PreemptionHandler, StepWatchdog,
+                                     rebalance_assignment)
+
+
+def test_watchdog_flags_slow_steps():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    wd = StepWatchdog(deadline_factor=2.0, clock=clock)
+    for dur in [1.0] * 8:
+        wd.step_start()
+        t[0] += dur
+        assert not wd.step_end()
+    wd.step_start()
+    t[0] += 5.0  # straggler
+    assert wd.step_end()
+    assert wd.slow_steps == 1
+    assert abs(wd.median - 1.0) < 1e-6
+
+
+def test_preemption_checkpoints_and_stops(tmp_path):
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.data import MarkovLM
+    from repro.data.loader import ShardedLoader
+    from repro.train.steps import init_train_state, make_train_step
+    from repro.train.trainer import Trainer
+
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    step = jax.jit(make_train_step(cfg, "xpeft", lr=1e-3))
+    loader = ShardedLoader(MarkovLM(cfg.vocab_size, 4, seed=0), 2, 8)
+    pre = PreemptionHandler.__new__(PreemptionHandler)  # no signal handler
+    import threading
+    pre._flag = threading.Event()
+    tr = Trainer(step, init_train_state(jax.random.key(0), cfg, "xpeft"),
+                 loader, ckpt_dir=str(tmp_path), preemption=pre,
+                 log_every=1000)
+    tr.run(2)
+    pre.trigger()
+    tr.run(10)  # should stop immediately and checkpoint
+    assert tr.step == 2
+    assert tr.mgr.latest_step() == 2
+
+
+def test_rebalance_total_preserved_and_monotone():
+    for n in (7, 64, 100):
+        asg = rebalance_assignment(n, [0, 1, 2], {1: 0.25})
+        assert sum(len(r) for r in asg.values()) == n
+        ranges = [asg[h] for h in (0, 1, 2)]
+        # contiguous, ordered partition
+        assert ranges[0].start == 0
+        assert ranges[0].stop == ranges[1].start
+        assert ranges[1].stop == ranges[2].start
+        assert ranges[2].stop == n

@@ -1,0 +1,63 @@
+"""ProfileStore: byte-level persistence and Table-1 accounting."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.configs import get_config, reduce_for_smoke
+
+
+def _store_with_profiles(mask_type="hard"):
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    key = jax.random.key(0)
+    table = XP.init_profile_table(key, cfg)
+    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, mask_type, cfg.xpeft.k)
+    for pid in range(4):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    return cfg, table, store
+
+
+def test_hard_roundtrip_preserves_topk(tmp_path):
+    cfg, table, store = _store_with_profiles("hard")
+    store.save(str(tmp_path / "profiles.npz"))
+    loaded = ProfileStore.load(str(tmp_path / "profiles.npz"))
+    for pid in range(4):
+        wa, _ = store.mask_weights(pid)
+        wa2, _ = loaded.mask_weights(pid)
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(wa2))
+        # weights match binarized top-k of the trained logits
+        want = M.khot_weights_from_bits(
+            np.asarray(M.binarize(table["mA"][pid], cfg.xpeft.k)),
+            cfg.xpeft.k)
+        np.testing.assert_allclose(np.asarray(wa), np.asarray(want))
+
+
+def test_bytes_accounting_paper_factor():
+    """Hard-mask storage is ~10^4x smaller than a stored adapter
+    (paper Fig.1 / Table 1 claim at paper dims)."""
+    store = ProfileStore(num_layers=12, num_adapters=100, bottleneck=48,
+                         mask_type="hard", k=50)
+    per = store.bytes_per_profile()
+    adapter = M.adapter_bytes(768, 48, 12)  # fp32 Pfeiffer adapter
+    assert per == 312
+    factor = adapter / per
+    assert factor > 5_000, factor  # 3.5MB / 312B ≈ 11,340x
+
+
+def test_sparse_indices_match_dense_weights():
+    cfg, table, store = _store_with_profiles("hard")
+    ia, wa, ib, wb = store.sparse_indices(1)
+    dense_wa, _ = store.mask_weights(1)
+    k = cfg.xpeft.k
+    for l in range(cfg.num_layers):
+        sel = np.where(np.asarray(dense_wa[l]) > 0)[0]
+        np.testing.assert_array_equal(np.sort(np.asarray(ia[l])), sel)
+
+
+def test_soft_store_roundtrip(tmp_path):
+    cfg, table, store = _store_with_profiles("soft")
+    wa, wb = store.mask_weights(2)
+    np.testing.assert_allclose(np.asarray(wa.sum(-1)), 1.0, rtol=1e-3)
