@@ -1,0 +1,71 @@
+"""CI gate: BENCH_*.json emission sanity.
+
+Fails (exit 1) if the kernel/serve bench JSON artifacts are missing, have
+no records, or the k-sparse admission path stopped delivering its analytic
+bank-byte reduction (>= 4x at the full config's N=256, k=50)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+MIN_ADMISSION_REDUCTION = 4.0
+
+
+def fail(msg: str):
+    print(f"check_bench: FAIL — {msg}")
+    sys.exit(1)
+
+
+def load(path: str) -> dict:
+    if not os.path.exists(path):
+        fail(f"{path} missing (bench did not emit)")
+    with open(path) as f:
+        data = json.load(f)
+    if not data.get("records"):
+        fail(f"{path} has no records")
+    return data
+
+
+def main():
+    base = os.environ.get("BENCH_DIR", ".")
+    kernels = load(os.path.join(base, "BENCH_kernels.json"))
+    serve = load(os.path.join(base, "BENCH_serve.json"))
+
+    names = {r["name"] for r in kernels["records"]}
+    for required in ("mask_aggregate_batched.pallas_interpret",
+                     "fused_adapter_batched.decode.pallas_interpret"):
+        if required not in names:
+            fail(f"BENCH_kernels.json missing record {required!r}")
+
+    agg = next((r for r in serve["records"]
+                if r["name"] == "admission.aggregate_bytes"), None)
+    if agg is None:
+        fail("BENCH_serve.json missing admission.aggregate_bytes")
+    if agg["reduction"] < MIN_ADMISSION_REDUCTION:
+        fail(f"admission byte reduction {agg['reduction']}x < "
+             f"{MIN_ADMISSION_REDUCTION}x (bytes_dense={agg['bytes_dense']}, "
+             f"bytes_sparse={agg['bytes_sparse']})")
+    # the record the ENGINE wrote about the admission it actually ran: the
+    # hard-mask path must have gone sparse and read fewer bank bytes than
+    # the dense contraction would (ratio == N/k of the exercised config)
+    adm = next((r for r in serve["records"]
+                if r["name"] == "admission.batched"), None)
+    if adm is None:
+        fail("BENCH_serve.json missing admission.batched")
+    if adm.get("path") != "sparse":
+        fail(f"admission took the {adm.get('path')!r} path — the k-sparse "
+             "fast path is not being exercised")
+    if adm.get("measured_reduction", 0) < 2.0:
+        fail(f"measured admission reduction {adm.get('measured_reduction')}x "
+             "< 2x — sparse aggregation is reading too much of the bank")
+    tp = next((r for r in serve["records"]
+               if r["name"] == "decode.throughput"), None)
+    if tp is None or tp.get("tokens_per_s", 0) <= 0:
+        fail("BENCH_serve.json has no positive decode throughput")
+    print(f"check_bench: OK — admission reduction {agg['reduction']}x, "
+          f"decode {tp['tokens_per_s']} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: timing + the tiny paper-family config."""
+"""Shared benchmark utilities: timing, machine-readable BENCH_*.json
+emission, and the tiny paper-family config."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -29,3 +32,33 @@ def timeit(fn, *args, iters=20, warmup=3):
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+
+
+class BenchWriter:
+    """Collects records and writes BENCH_<suite>.json (the perf-trajectory
+    artifact: each record is {"name", "us", ...derived numeric columns}).
+
+    Output dir is $BENCH_DIR (default: cwd, i.e. the repo root when run via
+    `python benchmarks/run.py` / `make verify`).
+    """
+
+    def __init__(self, suite: str):
+        self.suite = suite
+        self.records = []
+
+    def emit(self, name: str, us: float | None = None, **derived):
+        rec = {"name": name, **derived}
+        if us is not None:
+            rec["us"] = round(us, 1)
+        self.records.append(rec)
+        cols = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{'' if us is None else f'{us:.1f}'},{cols}")
+
+    def write(self) -> str:
+        path = os.path.join(os.environ.get("BENCH_DIR", "."),
+                            f"BENCH_{self.suite}.json")
+        with open(path, "w") as f:
+            json.dump({"suite": self.suite, "records": self.records}, f,
+                      indent=1)
+        print(f"# wrote {path} ({len(self.records)} records)")
+        return path

@@ -1,61 +1,119 @@
 """Kernel microbench: Pallas (interpret) vs jnp reference + the analytic
-TPU win (HBM bytes moved) for each kernel.
+TPU win (HBM bytes moved) for each kernel, including the batched variants
+that the serve/train hot paths dispatch to (kernels/ops.py).
 
-Wall-clock here is CPU-interpret (not meaningful); the derived column is
-the analytic HBM-traffic ratio on TPU, which is what the kernel buys.
+Wall-clock here is CPU-interpret (not meaningful); the derived columns are
+the analytic HBM-traffic numbers on TPU, which is what each kernel buys.
+Emits BENCH_kernels.json (see benchmarks.common.BenchWriter).
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
-from repro.kernels import ref
+from benchmarks.common import BenchWriter, timeit
+from repro.kernels import ops, ref
 from repro.kernels.fused_adapter import fused_adapter
-from repro.kernels.mask_aggregate import mask_aggregate
+from repro.kernels.fused_adapter_batched import fused_adapter_batched
+from repro.kernels.mask_aggregate import mask_aggregate, mask_aggregate_batched
 
 
-def main():
+def _bench_mask_aggregate(w: BenchWriter, smoke: bool):
     print("# mask_aggregate: k-sparse vs dense bank aggregation")
-    N, d, b, k = 256, 1024, 64, 50
+    N, d, b, k = (64, 256, 32, 8) if smoke else (256, 1024, 64, 50)
     ks = jax.random.split(jax.random.key(0), 3)
     bank = jax.random.normal(ks[0], (N, d, b), jnp.bfloat16)
     idx = jax.random.permutation(ks[1], N)[:k].astype(jnp.int32)
-    w = jax.random.uniform(ks[2], (k,), jnp.float32)
-    dense_w = jnp.zeros((N,), jnp.float32).at[idx].set(w)
+    wgt = jax.random.uniform(ks[2], (k,), jnp.float32)
+    dense_w = jnp.zeros((N,), jnp.float32).at[idx].set(wgt)
 
     dense_bytes = N * d * b * 2          # whole bank read
     sparse_bytes = k * d * b * 2         # k slices read
-    us_ref = timeit(jax.jit(lambda: jnp.einsum(
+    us = timeit(jax.jit(lambda: jnp.einsum(
         "n,ndb->db", dense_w, bank.astype(jnp.float32))), iters=5)
-    emit("mask_aggregate.dense_ref", us_ref,
-         f"hbm_bytes={dense_bytes}")
-    us_sparse = timeit(jax.jit(lambda: ref.mask_aggregate_ref(bank, idx, w)),
-                       iters=5)
-    emit("mask_aggregate.sparse_ref", us_sparse,
-         f"hbm_bytes={sparse_bytes};tpu_win={dense_bytes / sparse_bytes:.1f}x")
-    us_pk = timeit(lambda: mask_aggregate(bank, idx, w, interpret=True),
-                   iters=2, warmup=1)
-    emit("mask_aggregate.pallas_interpret", us_pk, "semantics-check-only")
+    w.emit("mask_aggregate.dense_ref", us, hbm_bytes=dense_bytes)
+    us = timeit(jax.jit(lambda: ref.mask_aggregate_ref(bank, idx, wgt)),
+                iters=5)
+    w.emit("mask_aggregate.sparse_ref", us, hbm_bytes=sparse_bytes,
+           tpu_win=round(dense_bytes / sparse_bytes, 2))
+    us = timeit(lambda: mask_aggregate(bank, idx, wgt, interpret=True),
+                iters=2, warmup=1)
+    w.emit("mask_aggregate.pallas_interpret", us, semantics_check=1)
 
+    # batched (P profiles / layers in ONE launch — the admission shape)
+    P = 2 if smoke else 4
+    kb = jax.random.split(jax.random.key(1), P)
+    idx_b = jnp.stack([jax.random.permutation(kk, N)[:k] for kk in kb]
+                      ).astype(jnp.int32)
+    w_b = jax.random.uniform(kb[0], (P, k), jnp.float32)
+    us = timeit(jax.jit(lambda: ref.mask_aggregate_batched_ref(
+        bank, idx_b, w_b)), iters=5)
+    w.emit("mask_aggregate_batched.ref", us, P=P,
+           hbm_bytes=P * sparse_bytes)
+    us = timeit(lambda: mask_aggregate_batched(bank, idx_b, w_b,
+                                               interpret=True),
+                iters=2, warmup=1)
+    w.emit("mask_aggregate_batched.pallas_interpret", us, P=P,
+           hbm_bytes=P * sparse_bytes,
+           tpu_win=round(dense_bytes / sparse_bytes, 2))
+
+
+def _bench_fused_adapter(w: BenchWriter, smoke: bool):
     print("# fused_adapter: fused d->b->d vs unfused")
-    T, d2, b2 = 512, 1024, 64
-    x = jax.random.normal(ks[0], (T, d2), jnp.bfloat16)
-    a = jax.random.normal(ks[1], (d2, b2), jnp.bfloat16) * 0.02
-    bb = jax.random.normal(ks[2], (b2, d2), jnp.bfloat16) * 0.02
-    ls, lb = jnp.ones(b2), jnp.zeros(b2)
-    unfused_bytes = (2 * T * d2 * 2          # read x twice (matmul+residual)
-                     + 2 * T * b2 * 4        # h round-trip fp32
-                     + 2 * T * d2 * 2)       # write y + read back
-    fused_bytes = 2 * T * d2 * 2             # read x once, write y once
-    us_ref = timeit(jax.jit(lambda: ref.fused_adapter_ref(x, a, bb, ls, lb)),
-                    iters=5)
-    emit("fused_adapter.ref", us_ref, f"hbm_bytes~{unfused_bytes}")
-    us_pk = timeit(lambda: fused_adapter(x, a, bb, ls, lb, interpret=True),
-                   iters=2, warmup=1)
-    emit("fused_adapter.pallas_interpret", us_pk,
-         f"hbm_bytes~{fused_bytes};tpu_win={unfused_bytes / fused_bytes:.1f}x")
+    T, d, b = (128, 256, 32) if smoke else (512, 1024, 64)
+    ks = jax.random.split(jax.random.key(2), 3)
+    x = jax.random.normal(ks[0], (T, d), jnp.bfloat16)
+    a = jax.random.normal(ks[1], (d, b), jnp.bfloat16) * 0.02
+    bb = jax.random.normal(ks[2], (b, d), jnp.bfloat16) * 0.02
+    ls, lb = jnp.ones(b), jnp.zeros(b)
+    unfused_bytes = (2 * T * d * 2          # read x twice (matmul+residual)
+                     + 2 * T * b * 4        # h round-trip fp32
+                     + 2 * T * d * 2)       # write y + read back
+    fused_bytes = 2 * T * d * 2             # read x once, write y once
+    us = timeit(jax.jit(lambda: ref.fused_adapter_ref(x, a, bb, ls, lb)),
+                iters=5)
+    w.emit("fused_adapter.ref", us, hbm_bytes=unfused_bytes)
+    us = timeit(lambda: fused_adapter(x, a, bb, ls, lb, interpret=True),
+                iters=2, warmup=1)
+    w.emit("fused_adapter.pallas_interpret", us, hbm_bytes=fused_bytes,
+           tpu_win=round(unfused_bytes / fused_bytes, 2))
+
+    # batched: the decode-step (B rows, tiny T) and train (per-example Â/B̂)
+    # shapes — one grid (B, T/block_t) launch vs a vmap of B launches
+    for tag, (B, Tb) in {"decode": (8, 1),
+                         "train": (4, 64 if smoke else 128)}.items():
+        kb = jax.random.split(jax.random.key(3), 5)
+        xb = jax.random.normal(kb[0], (B, Tb, d), jnp.bfloat16)
+        ab = jax.random.normal(kb[1], (B, d, b), jnp.bfloat16) * 0.02
+        bbb = jax.random.normal(kb[2], (B, b, d), jnp.bfloat16) * 0.02
+        lsb = jnp.ones((B, b)), jnp.zeros((B, b))
+        batch_bytes = 2 * B * Tb * d * 2 + 2 * B * d * b * 2
+        unfused_b = B * (2 * Tb * d * 2 + 2 * Tb * b * 4 + 2 * Tb * d * 2) \
+            + 2 * B * d * b * 2
+        us = timeit(jax.jit(lambda: ref.fused_adapter_batched_ref(
+            xb, ab, bbb, *lsb)), iters=5)
+        w.emit(f"fused_adapter_batched.{tag}.ref", us, B=B, T=Tb,
+               hbm_bytes=unfused_b)
+        us = timeit(lambda: fused_adapter_batched(xb, ab, bbb, *lsb,
+                                                  interpret=True),
+                    iters=2, warmup=1)
+        w.emit(f"fused_adapter_batched.{tag}.pallas_interpret", us, B=B,
+               T=Tb, hbm_bytes=batch_bytes,
+               tpu_win=round(unfused_b / batch_bytes, 2))
+
+
+def main(smoke: bool = False):
+    w = BenchWriter("kernels")
+    _bench_mask_aggregate(w, smoke)
+    _bench_fused_adapter(w, smoke)
+    w.write()
+    return w.records
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small shapes / CI smoke")
+    main(smoke=p.parse_args().smoke)

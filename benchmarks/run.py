@@ -6,7 +6,10 @@ Prints ``name,us_per_call,derived`` CSV lines (plus per-table headers).
   Tables 2/3        -> glue_sim            (xp vs ho vs sa ordering proxy)
   Fig 5 a/b/c       -> ablations           (N, soft/hard, tied masks, k)
   Tables 8/9        -> train_time          (step time vs N)
-  kernels           -> kernel_bench        (sparse agg + fused adapter)
+  kernels           -> kernel_bench        (sparse agg + fused adapter,
+                                            emits BENCH_kernels.json)
+  serve             -> serve_bench         (decode tok/s + admission bytes,
+                                            emits BENCH_serve.json)
   dry-run roofline  -> roofline_report     (reads artifacts/dryrun)
 """
 from __future__ import annotations
@@ -17,11 +20,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (ablations, glue_sim, kernel_bench,
+    from benchmarks import (ablations, glue_sim, kernel_bench, serve_bench,
                             table1_memory, train_time)
     suites = [
         ("table1_memory", table1_memory.main),
         ("kernel_bench", kernel_bench.main),
+        ("serve_bench", serve_bench.main),
         ("train_time", train_time.main),
         ("ablations", ablations.main),
         ("glue_sim", glue_sim.main),

@@ -1,0 +1,118 @@
+"""Serve bench: decode throughput + admission-aggregation cost.
+
+Measured numbers come from the CPU-runnable smoke engine (reduced
+qwen1.5-family config); the analytic columns are computed at the FULL
+config's X-PEFT dimensions (N=256, k=50) — they are the acceptance
+numbers for the k-sparse admission path:
+
+    dense admission reads  N·L·d·b bank bytes per request,
+    sparse admission reads k·L·d·b  (ratio N/k = 5.12x at N=256, k=50).
+
+Emits BENCH_serve.json with tokens/s and bytes-per-admission records.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import BenchWriter
+from repro.configs import get_config, reduce_for_smoke
+
+
+def _build_engine(cfg, n_profiles: int, max_slots: int, max_seq: int,
+                  precompute: bool = True):
+    import jax.numpy as jnp  # noqa: F401  (keeps jax import ordering tidy)
+    from repro.core import xpeft as XP
+    from repro.core.profiles import ProfileStore
+    from repro.models import init_lm
+    from repro.serve.engine import ServeEngine
+
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, cfg.xpeft.mask_type,
+                         cfg.xpeft.k)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(n_profiles):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    eng = ServeEngine(cfg, params, store, max_slots=max_slots,
+                      max_seq=max_seq, precompute=precompute)
+    return eng
+
+
+def aggregation_bytes(cfg) -> dict:
+    """Analytic bank bytes read per admission (both banks), dense vs sparse."""
+    xp = cfg.xpeft
+    L, N, k, d, b = (cfg.num_layers, xp.num_adapters, xp.k, cfg.d_model,
+                     xp.bottleneck)
+    itemsize = 2 if cfg.dtype == "bfloat16" else 4
+    dense = 2 * N * L * d * b * itemsize
+    sparse = 2 * k * L * d * b * itemsize
+    return {"N": N, "k": k, "L": L, "d": d, "b": b,
+            "bytes_dense": dense, "bytes_sparse": sparse,
+            "reduction": round(dense / sparse, 2)}
+
+
+def main(smoke: bool = False):
+    from repro.serve.engine import Request
+
+    w = BenchWriter("serve")
+
+    # analytic admission-aggregation bytes at the FULL config dims
+    full = get_config("qwen1.5-0.5b")
+    agg = aggregation_bytes(full)
+    w.emit("admission.aggregate_bytes", None, **agg)
+
+    cfg = reduce_for_smoke(full)
+    max_slots = 2 if smoke else 4
+    steps = 8 if smoke else 32
+    n_prof = max_slots + 1
+    eng = _build_engine(cfg, n_prof, max_slots, max_seq=128)
+
+    def make_reqs(n, base=0):
+        return [Request(uid=base + i, prompt=np.arange(6 + i) % cfg.vocab_size,
+                        profile_id=i % n_prof, max_new_tokens=10_000)
+                for i in range(n)]
+
+    # warm up every jit variant (admission bucket, prefill buckets, decode)
+    eng.admit_many(make_reqs(max_slots))
+    for _ in range(2):
+        eng.step()
+    for slot in range(eng.n_slots):     # drain
+        eng.slot_req[slot] = None
+
+    # admission latency (batched, k-sparse aggregation + prefill); the
+    # path/bytes come from the ENGINE's record of what it actually ran,
+    # so check_bench gates on exercised behavior, not config arithmetic
+    t0 = time.perf_counter()
+    n_adm = eng.admit_many(make_reqs(max_slots, base=100))
+    adm_us = (time.perf_counter() - t0) / max(n_adm, 1) * 1e6
+    adm = eng.last_admission
+    smoke_dense = aggregation_bytes(cfg)["bytes_dense"]
+    w.emit("admission.batched", adm_us, requests=n_adm, path=adm["path"],
+           bank_bytes_per_request=adm["bank_bytes_per_request"],
+           measured_reduction=round(
+               smoke_dense / adm["bank_bytes_per_request"], 2))
+
+    # decode throughput with full slots
+    t0 = time.perf_counter()
+    toks = 0
+    for _ in range(steps):
+        toks += eng.step()
+    dt = time.perf_counter() - t0
+    w.emit("decode.throughput", dt / steps * 1e6, steps=steps,
+           slots=max_slots, tokens=toks,
+           tokens_per_s=round(toks / dt, 1))
+
+    w.write()
+    return w.records
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small shapes / CI smoke")
+    main(smoke=p.parse_args().smoke)

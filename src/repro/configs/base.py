@@ -27,6 +27,10 @@ class XPeftConfig:
     # "dense": masks @ bank einsum (soft or ST-hard training path)
     # "sparse": k-sparse gather-sum (inference / frozen-index training)
     aggregate: str = "dense"
+    # kernel backend for adapter application/aggregation hot paths
+    # (kernels/ops.py): "auto" = compiled Pallas on TPU, jnp ref elsewhere;
+    # "pallas" | "interpret" | "ref" force a backend.
+    kernel_impl: str = "auto"
     max_profiles: int = 1024         # rows in the per-profile mask table
 
 

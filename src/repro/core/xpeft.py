@@ -89,8 +89,60 @@ def precompute_effective_adapters(bank: dict, profile_params: dict, xp):
             "ln_bias": profile_params["ln_bias"]}
 
 
+def precompute_effective_adapters_dense_batched(bank: dict, w_a, w_b):
+    """Dense admission aggregation for a batch of profiles (soft masks).
+
+    w_*: [R, L, N] -> (Â [R, L, d, b], B̂ [R, L, b, d]) in bank dtype. The
+    R=1 case is precompute_effective_adapters' einsum with a request axis;
+    soft masks are dense by construction so there is no sparse shortcut.
+    """
+    a_hat = jnp.einsum("rln,lndb->rldb", w_a.astype(jnp.float32),
+                       bank["bank_a"].astype(jnp.float32))
+    b_hat = jnp.einsum("rln,lnbd->rlbd", w_b.astype(jnp.float32),
+                       bank["bank_b"].astype(jnp.float32))
+    return (a_hat.astype(bank["bank_a"].dtype),
+            b_hat.astype(bank["bank_b"].dtype))
+
+
+def precompute_effective_adapters_sparse(bank: dict, idx_a, w_a, idx_b, w_b,
+                                         xp):
+    """k-sparse admission aggregation through the kernel dispatch layer.
+
+    idx_*/w_*: [..., L, k] (a single profile's top-k mask indices, or a
+    leading request batch R for multi-request admission). Reads only
+    k·L·d·b bank bytes (N/k less than the dense einsum in
+    precompute_effective_adapters) by folding the layer axis into the
+    bank's N axis and issuing ONE batched aggregation of P = R·L rows.
+    """
+    from repro.kernels import ops
+
+    L, N = bank["bank_a"].shape[:2]
+    d, b = bank["bank_a"].shape[2], bank["bank_a"].shape[3]
+    batch = idx_a.shape[:-2]
+    # fold layers into the bank slot axis: row (l, n) -> l*N + n
+    flat_a = bank["bank_a"].reshape(L * N, d, b)
+    flat_b = bank["bank_b"].reshape(L * N, b, d)
+    off = (jnp.arange(L, dtype=jnp.int32) * N)[:, None]     # [L, 1]
+
+    def flatten(idx, w):
+        k = idx.shape[-1]
+        fi = (idx.astype(jnp.int32) + off).reshape(-1, k)
+        return fi, w.astype(jnp.float32).reshape(-1, k)
+
+    fia, fwa = flatten(idx_a, w_a)
+    fib, fwb = flatten(idx_b, w_b)
+    a_hat = ops.mask_aggregate_batched(flat_a, fia, fwa, impl=xp.kernel_impl)
+    b_hat = ops.mask_aggregate_batched(flat_b, fib, fwb, impl=xp.kernel_impl)
+    dt = bank["bank_a"].dtype
+    return (a_hat.reshape(*batch, L, d, b).astype(dt),
+            b_hat.reshape(*batch, L, b, d).astype(dt))
+
+
 def apply_precomputed_layer(x, eff_l: dict, xp):
     """Apply an admission-time-aggregated adapter slice (per layer)."""
-    return A.apply_adapter(x, eff_l["a_hat"], eff_l["b_hat"],
-                           eff_l["ln_scale"], eff_l["ln_bias"],
-                           activation=xp.adapter_activation)
+    from repro.kernels import ops
+
+    return ops.fused_adapter(x, eff_l["a_hat"], eff_l["b_hat"],
+                             eff_l["ln_scale"], eff_l["ln_bias"],
+                             activation=xp.adapter_activation,
+                             impl=xp.kernel_impl)

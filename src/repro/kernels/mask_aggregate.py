@@ -33,6 +33,16 @@ def _kernel(idx_ref, w_ref, bank_ref, out_ref):
     out_ref[...] += w_ref[ki] * bank_ref[0].astype(jnp.float32)
 
 
+def _kernel_batched(idx_ref, w_ref, bank_ref, out_ref):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += w_ref[0, ki] * bank_ref[...].astype(jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def mask_aggregate(bank, idx, w, *, block_d: int = 256,
                    interpret: bool = False):
@@ -56,5 +66,42 @@ def mask_aggregate(bank, idx, w, *, block_d: int = 256,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((d, b), jnp.float32),
+        interpret=interpret,
+    )(idx, w, bank)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mask_aggregate_batched(bank, idx, w, *, block_d: int = 256,
+                           interpret: bool = False):
+    """bank [N, d, b], idx [P, k] int32, w [P, k] f32 -> [P, d, b] f32.
+
+    One pallas_call for P profiles (serve admission batches the per-layer
+    aggregations of every admitted request into one P = R·L launch; the
+    layer axis is folded into the bank's N axis by the caller, see
+    core.xpeft.precompute_effective_adapters_sparse). Grid (P, d/block_d, k):
+    the output tile stays VMEM-resident across the minor k steps
+    (revisiting accumulation) while scalar-prefetched indices steer the
+    bank-row DMAs — HBM reads stay P·k·d·b, never N·d·b.
+    """
+    N, d, b = bank.shape
+    P, k = idx.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0, (d, block_d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P, d // block_d, k),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda pi, di, ki, idx_ref: (pi, 0)),
+            pl.BlockSpec((1, block_d, b),
+                         lambda pi, di, ki, idx_ref: (idx_ref[pi, ki], di, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d, b),
+                               lambda pi, di, ki, idx_ref: (pi, di, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, d, b), jnp.float32),
         interpret=interpret,
     )(idx, w, bank)

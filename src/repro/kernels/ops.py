@@ -1,56 +1,92 @@
-"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+"""Kernel dispatch layer: jit'd public wrappers for the Pallas kernels.
 
-On TPU the compiled kernels run; elsewhere (this CPU container) they run in
-interpret mode (the kernel body executed in Python — semantics identical) or
-fall back to the jnp oracle. Batched variants vmap over profiles/slots.
+Every model/serve hot path that applies or aggregates adapters routes
+through this module (models/model.py `_xpeft_apply`, core/xpeft.py
+`apply_precomputed_layer`, serve/engine.py admission). Callers pass
+``impl`` — normally ``cfg.xpeft.kernel_impl`` — and the wrapper picks the
+execution backend:
 
-TPU deployment note: `bottleneck` b of 48/64 is below the 128 lane width; for
-peak MXU utilization pad Â/B̂'s b dim to 128 — LN must then mask the padded
-columns (ops here keep the unpadded semantics; the pad is a launch-config
-choice).
+- ``auto``      — compiled Pallas on TPU; jnp reference elsewhere (this CPU
+                  container). The reference is the fast path off-TPU: Pallas
+                  interpret mode executes the kernel body op-by-op in the
+                  scheduler and is strictly a semantics check.
+- ``pallas``    — force the compiled Pallas kernel (TPU).
+- ``interpret`` — force Pallas interpret mode (CI/parity testing: the exact
+                  kernel body, runnable on CPU).
+- ``ref``       — force the jnp oracle in kernels/ref.py.
+
+Batched (ndim-3) inputs dispatch to the single-launch batched kernels
+(`fused_adapter_batched.py`, `mask_aggregate.mask_aggregate_batched`)
+rather than a vmap-of-kernel: one grid `(B, ...)` launch pipelines the
+per-row Â/B̂ fetches instead of serializing B independent pallas_calls.
+
+TPU deployment note: `bottleneck` b of 48/64 is below the 128 lane width;
+for peak MXU utilization pad Â/B̂'s b dim to 128 — LN must then mask the
+padded columns (ops here keep the unpadded semantics; the pad is a
+launch-config choice).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.fused_adapter import fused_adapter as _fused_pallas
+from repro.kernels.fused_adapter_batched import (
+    fused_adapter_batched as _fused_pallas_batched)
 from repro.kernels.mask_aggregate import mask_aggregate as _agg_pallas
+from repro.kernels.mask_aggregate import (
+    mask_aggregate_batched as _agg_pallas_batched)
+
+IMPLS = ("auto", "pallas", "interpret", "ref")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_impl(impl: str) -> str:
+    """'auto' -> 'pallas' on TPU, 'ref' elsewhere; others pass through."""
+    if impl not in IMPLS:
+        raise ValueError(f"kernel_impl {impl!r}; expected one of {IMPLS}")
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
 def mask_aggregate(bank, idx, w, *, impl: str = "auto"):
-    """k-sparse bank aggregation. impl: auto|pallas|interpret|ref."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu() and bank.shape[1] > 4096):
+    """k-sparse bank aggregation. bank [N,d,b], idx [k], w [k] -> [d,b]."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
         return ref.mask_aggregate_ref(bank, idx, w)
-    if impl == "pallas" or (impl == "auto" and _on_tpu()):
-        return _agg_pallas(bank, idx, w, interpret=False)
-    return _agg_pallas(bank, idx, w, interpret=True)
+    return _agg_pallas(bank, idx, w, interpret=impl == "interpret")
 
 
 def mask_aggregate_batched(bank, idx, w, *, impl: str = "auto"):
-    """bank [N,d,b], idx [P,k], w [P,k] -> [P,d,b] (vmap over profiles)."""
-    return jax.vmap(lambda i, ww: mask_aggregate(bank, i, ww, impl=impl))(
-        idx, w)
+    """bank [N,d,b], idx [P,k], w [P,k] -> [P,d,b] (single batched launch)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.mask_aggregate_batched_ref(bank, idx, w)
+    return _agg_pallas_batched(bank, idx, w, interpret=impl == "interpret")
 
 
 def fused_adapter(x, a_hat, b_hat, ln_scale, ln_bias, *,
                   activation: str = "gelu", impl: str = "auto"):
-    """Fused bottleneck adapter. x [T,d] (or [B,T,d] -> vmapped)."""
+    """Fused bottleneck adapter: y = x + B̂(act(LN(Â x))).
+
+    x [T,d] with a_hat [d,b], or x [B,T,d] with per-row a_hat [B,d,b]
+    (b_hat/ln_* likewise; 2-D adapter args broadcast across the batch).
+    """
+    impl = resolve_impl(impl)
     if x.ndim == 3:
-        return jax.vmap(
-            lambda xx, aa, bb, ls, lb: fused_adapter(
-                xx, aa, bb, ls, lb, activation=activation, impl=impl)
-        )(x, a_hat, b_hat, ln_scale, ln_bias)
-    if impl == "ref" or (impl == "auto" and not _on_tpu() and x.shape[0] > 4096):
+        if impl == "ref":
+            return ref.fused_adapter_batched_ref(
+                x, a_hat, b_hat, ln_scale, ln_bias, activation=activation)
+        return _fused_pallas_batched(x, a_hat, b_hat, ln_scale, ln_bias,
+                                     activation=activation,
+                                     interpret=impl == "interpret")
+    if impl == "ref":
         return ref.fused_adapter_ref(x, a_hat, b_hat, ln_scale, ln_bias,
                                      activation=activation)
-    interpret = not (impl == "pallas" or (impl == "auto" and _on_tpu()))
     return _fused_pallas(x, a_hat, b_hat, ln_scale, ln_bias,
-                         activation=activation, interpret=interpret)
+                         activation=activation, interpret=impl == "interpret")

@@ -30,3 +30,37 @@ def fused_adapter_ref(x, a_hat, b_hat, ln_scale, ln_bias, *,
         h = jax.nn.gelu(h)
     y = jnp.dot(h, b_hat.astype(jnp.float32))
     return (x.astype(jnp.float32) + y).astype(x.dtype)
+
+
+def mask_aggregate_batched_ref(bank, idx, w):
+    """bank [N, d, b], idx [P, k], w [P, k] -> [P, d, b] fp32."""
+    g = jnp.take(bank, idx, axis=0).astype(jnp.float32)      # [P, k, d, b]
+    return jnp.einsum("pk,pkdb->pdb", w.astype(jnp.float32), g)
+
+
+def fused_adapter_batched_ref(x, a_hat, b_hat, ln_scale, ln_bias, *,
+                              activation: str = "gelu", eps: float = 1e-6):
+    """x [B, T, d]; a_hat [B, d, b] or [d, b] (shared across the batch);
+    ln_* [B, b] or [b] -> [B, T, d]. Batched twin of fused_adapter_ref."""
+    x32 = x.astype(jnp.float32)
+    a32 = a_hat.astype(jnp.float32)
+    b32 = b_hat.astype(jnp.float32)
+    if a_hat.ndim == 2:
+        h = x32 @ a32
+    else:
+        h = jnp.einsum("btd,bdc->btc", x32, a32)
+    mu = h.mean(-1, keepdims=True)
+    var = h.var(-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    ls = ln_scale.astype(jnp.float32)
+    lb = ln_bias.astype(jnp.float32)
+    if ls.ndim == 2:
+        ls, lb = ls[:, None, :], lb[:, None, :]
+    h = h * ls + lb
+    if activation == "gelu":
+        h = jax.nn.gelu(h)
+    if b_hat.ndim == 2:
+        y = h @ b32
+    else:
+        y = jnp.einsum("btc,bcd->btd", h, b32)
+    return (x32 + y).astype(x.dtype)

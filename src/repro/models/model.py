@@ -139,12 +139,14 @@ def _xpeft_apply(x, bank_l, masks_l, cfg):
         return x
     if "a_hat" in masks_l:
         # admission-time aggregated adapters (serving fast path): per-example
-        # Â [B,d,b] / B̂ [B,b,d] already contracted against the bank.
-        from repro.core.adapters import apply_adapter
-        return apply_adapter(x, masks_l["a_hat"], masks_l["b_hat"],
-                             masks_l["ln_scale"][..., None, :],
-                             masks_l["ln_bias"][..., None, :],
-                             activation=cfg.xpeft.adapter_activation)
+        # Â [B,d,b] / B̂ [B,b,d] already contracted against the bank. Routed
+        # through the kernel dispatch layer — on TPU one batched Pallas
+        # launch keeps the [T,b] intermediate in VMEM (no HBM round-trip).
+        from repro.kernels import ops
+        return ops.fused_adapter(x, masks_l["a_hat"], masks_l["b_hat"],
+                                 masks_l["ln_scale"], masks_l["ln_bias"],
+                                 activation=cfg.xpeft.adapter_activation,
+                                 impl=cfg.xpeft.kernel_impl)
     if "idx_a" in masks_l:
         # k-sparse hard-mask aggregation: gather only the k selected
         # adapters (N/k cheaper than the dense contraction; the jnp twin of

@@ -4,6 +4,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.linear_attn import (clamp_lw, gla_chunked, gla_decode_step)
