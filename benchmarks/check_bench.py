@@ -1,8 +1,19 @@
 """CI gate: BENCH_*.json emission sanity.
 
 Fails (exit 1) if the kernel/serve bench JSON artifacts are missing, have
-no records, or the k-sparse admission path stopped delivering its analytic
-bank-byte reduction (>= 4x at the full config's N=256, k=50)."""
+no records, or the serving subsystem stopped delivering its measured
+properties:
+
+- k-sparse admission >= 4x analytic bank-byte reduction (N=256, k=50)
+- cold admission exercised the sparse path with a >= 2x measured reduction
+- WARM admission hit the profile cache and read ZERO bank bytes
+- bucketed prefill occupancy >= 0.5 (pow2 padding bounds the loss)
+- host syncs per decoded token < 1 (device-resident slot state)
+- windowed decode no slower than the SAME RUN's per-token-sync baseline
+  (the PR 1 architecture's cadence, so the gate is machine-independent);
+  BENCH_STRICT=1 additionally enforces the absolute PR 1 number — for
+  perf machines, not shared CI runners whose wall clock varies 2-4x
+"""
 from __future__ import annotations
 
 import json
@@ -10,6 +21,11 @@ import os
 import sys
 
 MIN_ADMISSION_REDUCTION = 4.0
+MIN_MEASURED_REDUCTION = 2.0
+MIN_PREFILL_OCCUPANCY = 0.5
+MAX_SYNCS_PER_TOKEN = 1.0
+MIN_VS_PER_TOKEN_BASELINE = 0.9   # windowed >= 0.9x same-run baseline
+MIN_DECODE_TOKENS_PER_S = 2723.0  # PR 1 absolute, BENCH_STRICT only
 
 
 def fail(msg: str):
@@ -27,6 +43,13 @@ def load(path: str) -> dict:
     return data
 
 
+def record(data: dict, name: str) -> dict:
+    rec = next((r for r in data["records"] if r["name"] == name), None)
+    if rec is None:
+        fail(f"BENCH_{data['suite']}.json missing record {name!r}")
+    return rec
+
+
 def main():
     base = os.environ.get("BENCH_DIR", ".")
     kernels = load(os.path.join(base, "BENCH_kernels.json"))
@@ -38,33 +61,66 @@ def main():
         if required not in names:
             fail(f"BENCH_kernels.json missing record {required!r}")
 
-    agg = next((r for r in serve["records"]
-                if r["name"] == "admission.aggregate_bytes"), None)
-    if agg is None:
-        fail("BENCH_serve.json missing admission.aggregate_bytes")
+    agg = record(serve, "admission.aggregate_bytes")
     if agg["reduction"] < MIN_ADMISSION_REDUCTION:
         fail(f"admission byte reduction {agg['reduction']}x < "
              f"{MIN_ADMISSION_REDUCTION}x (bytes_dense={agg['bytes_dense']}, "
              f"bytes_sparse={agg['bytes_sparse']})")
-    # the record the ENGINE wrote about the admission it actually ran: the
-    # hard-mask path must have gone sparse and read fewer bank bytes than
-    # the dense contraction would (ratio == N/k of the exercised config)
-    adm = next((r for r in serve["records"]
-                if r["name"] == "admission.batched"), None)
-    if adm is None:
-        fail("BENCH_serve.json missing admission.batched")
+
+    # the record the ENGINE wrote about the cold admission it actually ran:
+    # hard masks must go k-sparse and read fewer bank bytes than dense
+    adm = record(serve, "admission.batched")
     if adm.get("path") != "sparse":
-        fail(f"admission took the {adm.get('path')!r} path — the k-sparse "
-             "fast path is not being exercised")
-    if adm.get("measured_reduction", 0) < 2.0:
+        fail(f"cold admission took the {adm.get('path')!r} path — the "
+             "k-sparse fast path is not being exercised")
+    if adm.get("measured_reduction", 0) < MIN_MEASURED_REDUCTION:
         fail(f"measured admission reduction {adm.get('measured_reduction')}x "
-             "< 2x — sparse aggregation is reading too much of the bank")
-    tp = next((r for r in serve["records"]
-               if r["name"] == "decode.throughput"), None)
-    if tp is None or tp.get("tokens_per_s", 0) <= 0:
+             f"< {MIN_MEASURED_REDUCTION}x — sparse aggregation is reading "
+             "too much of the bank")
+
+    # warm admission: every request's profile was LRU-cached, so the wave
+    # must admit without touching the bank at all
+    warm = record(serve, "admission.profile_cache")
+    if warm.get("path") != "cached":
+        fail(f"warm admission took the {warm.get('path')!r} path — the "
+             "profile cache is not being hit")
+    if warm.get("bank_bytes_per_request", -1) != 0:
+        fail(f"cache-hit admission read {warm.get('bank_bytes_per_request')} "
+             "bank bytes/request — the hit path must read ZERO")
+    if warm.get("hit_rate", 0) <= 0:
+        fail("profile cache hit rate is zero")
+
+    pre = record(serve, "prefill.batched")
+    if pre.get("occupancy", 0) < MIN_PREFILL_OCCUPANCY:
+        fail(f"prefill batch occupancy {pre.get('occupancy')} < "
+             f"{MIN_PREFILL_OCCUPANCY} — bucketing is fragmenting waves")
+
+    sync = record(serve, "decode.host_syncs")
+    if sync.get("syncs_per_token", 1.0) >= MAX_SYNCS_PER_TOKEN:
+        fail(f"{sync.get('syncs_per_token')} host syncs per decoded token — "
+             "decode state is not staying device-resident")
+
+    tp = record(serve, "decode.throughput")
+    if tp.get("tokens_per_s", 0) <= 0:
         fail("BENCH_serve.json has no positive decode throughput")
+    base = record(serve, "decode.throughput_per_token_sync")
+    floor = MIN_VS_PER_TOKEN_BASELINE * base.get("tokens_per_s", 0)
+    if tp["tokens_per_s"] < floor:
+        fail(f"windowed decode {tp['tokens_per_s']} tok/s < "
+             f"{MIN_VS_PER_TOKEN_BASELINE}x the same-run per-token-sync "
+             f"baseline {base.get('tokens_per_s')} — device-resident slot "
+             "state stopped paying for itself")
+    if os.environ.get("BENCH_STRICT") and \
+            tp["tokens_per_s"] < MIN_DECODE_TOKENS_PER_S:
+        fail(f"decode {tp['tokens_per_s']} tok/s < PR 1 absolute baseline "
+             f"{MIN_DECODE_TOKENS_PER_S} on the smoke config (BENCH_STRICT)")
+
     print(f"check_bench: OK — admission reduction {agg['reduction']}x, "
-          f"decode {tp['tokens_per_s']} tok/s")
+          f"cache-hit admission {warm['bank_bytes_per_request']} B/req "
+          f"(hit rate {warm['hit_rate']}), prefill occupancy "
+          f"{pre['occupancy']}, {sync['syncs_per_token']} syncs/token, "
+          f"decode {tp['tokens_per_s']} tok/s "
+          f"(per-token-sync baseline {base.get('tokens_per_s')})")
 
 
 if __name__ == "__main__":

@@ -47,7 +47,10 @@ for precompute in (False, True):
     t0 = time.time()
     steps = eng.run_until_drained(list(reqs))
     label = "precomputed-adapters" if precompute else "paper-faithful"
-    print(f"[{label:22s}] {steps} engine steps, {time.time() - t0:.2f}s")
+    stats = eng.serve_stats()
+    print(f"[{label:22s}] {steps} engine steps, {time.time() - t0:.2f}s, "
+          f"cache hit rate {stats['profile_cache']['hit_rate']}, "
+          f"{stats['syncs_per_token']} host syncs/token")
     outs[precompute] = [tuple(r.generated) for r in reqs]
 
 # Parity check at the LOGIT level (greedy tokens of an untrained random
@@ -57,11 +60,10 @@ import jax.numpy as jnp
 from repro.models import forward, lm_logits
 
 wa, wb = store.mask_weights(0)
-rec = store._rec[0]
+ln_s, ln_b = store.ln_affines([0])
 toks = jnp.asarray(reqs[0].prompt[:6])[None]
 dense = {"w_a": wa[None], "w_b": wb[None],
-         "ln_scale": jnp.asarray(rec["ln_scale"], jnp.float32)[None],
-         "ln_bias": jnp.asarray(rec["ln_bias"], jnp.float32)[None]}
+         "ln_scale": ln_s, "ln_bias": ln_b}
 h1, _, _ = forward(params, toks, cfg, profile_masks=dense)
 bank = params["xpeft_bank"]
 pre = {"a_hat": jnp.einsum("ln,lndb->ldb", wa, bank["bank_a"].astype(

@@ -78,6 +78,25 @@ class ProfileStore:
         w = jnp.full(ia.shape, 1.0 / self.k, jnp.float32)
         return ia, w, ib, w
 
+    def batch_sparse_indices(self, pids: Iterable[int]):
+        """Stacked ([R, L, k] idx, [R, L, k] w) x2 for a batch of hard-mask
+        profiles — the vectorized hydration API serving admission uses
+        (engines must not reach into ``_rec``)."""
+        parts = [self.sparse_indices(pid) for pid in pids]
+        ia = jnp.stack([p[0] for p in parts])
+        wa = jnp.stack([p[1] for p in parts])
+        ib = jnp.stack([p[2] for p in parts])
+        wb = jnp.stack([p[3] for p in parts])
+        return ia, wa, ib, wb
+
+    def ln_affines(self, pids: Iterable[int]):
+        """Stacked adapter-LN affines ([R, L, b] scale, [R, L, b] bias) as
+        float32 — the other half of batched admission hydration."""
+        scales = np.stack([self._rec[int(pid)]["ln_scale"] for pid in pids])
+        biases = np.stack([self._rec[int(pid)]["ln_bias"] for pid in pids])
+        return (jnp.asarray(scales, jnp.float32),
+                jnp.asarray(biases, jnp.float32))
+
     # ------------------------------------------------------------- accounting
     def profile_ids(self):
         return sorted(self._rec)
@@ -100,10 +119,13 @@ class ProfileStore:
                 payload[f"{pid}:{k}"] = v
         meta = dict(L=self.L, N=self.N, b=self.b, mask_type=self.mask_type,
                     k=self.k, pids=sorted(self._rec))
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+        # mkstemp with a .npz suffix: np.savez appends ".npz" to names that
+        # lack it, which used to leave the original empty temp file behind
+        fd, tmp = tempfile.mkstemp(suffix=".npz",
+                                   dir=os.path.dirname(path) or ".")
         os.close(fd)
         np.savez(tmp, __meta__=json.dumps(meta), **payload)
-        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+        os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> "ProfileStore":

@@ -1,7 +1,8 @@
-"""Serving launcher: continuous-batching multi-profile inference demo.
+"""Serving launcher: continuous-batching multi-profile inference demo on
+the layered engine (scheduler / slot-state / profile-cache).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
-      --requests 8 --slots 4
+      --requests 8 --slots 4 --sync-every 8
 """
 from __future__ import annotations
 
@@ -21,6 +22,11 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--profiles", type=int, default=4)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode steps between host syncs (device-resident "
+                    "slot state; 1 = paper-era per-token round trips)")
+    ap.add_argument("--cache-mb", type=int, default=64,
+                    help="profile-cache capacity in MiB (0 disables)")
     ap.add_argument("--no-precompute", action="store_true",
                     help="paper-faithful per-step mask aggregation")
     args = ap.parse_args()
@@ -48,7 +54,9 @@ def main():
 
     eng = ServeEngine(cfg, params, store, max_slots=args.slots,
                       max_seq=args.max_seq,
-                      precompute=not args.no_precompute)
+                      precompute=not args.no_precompute,
+                      sync_every=args.sync_every,
+                      cache_bytes=args.cache_mb << 20)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -62,6 +70,14 @@ def main():
     toks = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests / {toks} tokens in {steps} engine "
           f"steps, {dt:.1f}s ({toks / dt:.1f} tok/s)")
+    st = eng.serve_stats()
+    print(f"profile cache: hit rate {st['profile_cache']['hit_rate']}, "
+          f"{st['profile_cache']['entries']} entries / "
+          f"{st['profile_cache']['bytes']} B; "
+          f"prefill occupancy {st['prefill_occupancy']} over "
+          f"{st['prefill_batches']} batches; "
+          f"{st['syncs_per_token']} host syncs/token "
+          f"(sync_every={st['sync_every']})")
     for r in reqs[:3]:
         print(f"  req {r.uid} (profile {r.profile_id}): {r.generated}")
 

@@ -66,9 +66,8 @@ def main():
         shape_s, axes_s = args.mesh.split(":")
         shape = tuple(int(x) for x in shape_s.split("x"))
         axes = tuple(axes_s.split(","))
-        mesh = jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(axes))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat(shape, axes)
         cm = ctx.mesh_context(mesh)
         cm.__enter__()
         st_sh = to_shardings(param_specs(state, mesh), mesh)

@@ -1,2 +1,5 @@
-from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.slots import SlotState, SlotSync  # noqa: F401
+from repro.serve.profile_cache import ProfileCache  # noqa: F401
 from repro.serve.steps import make_prefill_step, make_decode_step  # noqa: F401

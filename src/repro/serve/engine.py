@@ -1,30 +1,38 @@
-"""Slot-based continuous-batching serving engine with per-request X-PEFT
-profiles.
+"""Serving engine orchestrator: scheduler + slot state + profile cache.
 
-Design (DESIGN.md §2 Serve):
-- Fixed slot count; every decode step advances ALL slots in one jitted call
-  (inactive slots compute on pad tokens; their outputs are ignored and their
-  state is overwritten at the next admission).
-- Per-slot cache positions -> ragged lengths without re-batching.
-- Admission hydrates the request's profile from the byte-level ProfileStore
-  and (fast path) aggregates its adapters ONCE against the bank
-  (`precompute=True`), so the decode loop applies two tiny matmuls per layer
-  instead of a mask-bank contraction — the serving optimization the paper's
-  "disable out-of-top-k gradients" remark gestures at, taken to its TPU
-  conclusion.
-- Hard-mask admission is k-SPARSE: a single jitted aggregation gathers only
-  the profile's top-k bank rows (k·L·d·b bank bytes instead of the dense
-  einsum's N·L·d·b — 5.1x less at N=256, k=50) through
-  kernels/ops.mask_aggregate_batched. Multi-request admission batches the
-  aggregations of every admitted request into ONE launch (`admit_many`);
-  request counts are padded to power-of-two buckets to bound jit variants.
-- Prompt lengths are padded to power-of-two buckets to bound jit variants.
+The engine wires four layers (DESIGN.md §2 Serve, restructured):
+
+- `serve/scheduler.py` — request queue + admission policy: FIFO waves,
+  bucket-grouped so same-length prompts share one prefill launch.
+- `serve/profile_cache.py` — byte-capacity LRU of admission-time
+  aggregated Â/B̂ keyed by profile_id: a hit admits with ZERO bank reads
+  (the dominant case when R requests share P ≪ R profiles).
+- `serve/slots.py` — device-resident decode state (`last_tok`/`lengths`/
+  `active`) advanced by ONE jitted step that also decides termination on
+  device; the host syncs every `sync_every` steps, not every token.
+- this module — hydration + batched bucketed prefill + the public API
+  (`admit_many`, `step`, `sync`, `run_until_drained`).
+
+Admission of a wave:
+1. hydrate masks: per-request profile-cache lookup; only MISSING profiles
+   are aggregated against the bank — k-sparse (top-k rows only) for hard
+   masks, dense einsum for soft — in one jitted call padded to a pow2
+   profile-count bucket; results are cached and the wave's rows gathered.
+2. ONE scatter of the stacked rows into the per-slot mask buffers.
+3. batched bucketed prefill: every same-length-bucket group goes through
+   ONE jitted prefill call (stacked [B, pad] batch, per-request last-token
+   argmax on device), then one batched KV-cache scatter per group.
+   Attention archs pad prompts to pow2 buckets; recurrent-state archs
+   (rwkv/mamba/zamba) prefill at exact length (pad tokens cannot be
+   masked out of a recurrent state).
+
+The engine never touches `ProfileStore` internals — hydration goes through
+the store's vectorized public API (`batch_sparse_indices`, `ln_affines`,
+`batch_mask_weights`).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 import jax
@@ -33,48 +41,28 @@ import jax.numpy as jnp
 from repro.core import xpeft as XP
 from repro.core.profiles import ProfileStore
 from repro.models import model as MDL
+from repro.serve.profile_cache import ProfileCache
+from repro.serve.scheduler import Request, Scheduler
+from repro.serve.slots import SlotState
 from repro.serve.steps import greedy_next
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # [T] int32
-    profile_id: int
-    max_new_tokens: int = 16
-    generated: List[int] = field(default_factory=list)
-    done: bool = False
-
-
-def _bucket(n: int) -> int:
-    b = 8
-    while b < n:
-        b *= 2
-    return b
-
-
-def _pow2(n: int) -> int:
-    """Request-count bucket: next power of two from 1 (no floor — padding
-    rows cost real aggregation DMA, unlike pad tokens)."""
-    b = 1
-    while b < n:
-        b *= 2
-    return b
+from repro.utils import pow2_count
 
 
 class ServeEngine:
     def __init__(self, cfg, params, store: ProfileStore, *, max_slots: int = 4,
-                 max_seq: int = 256, precompute: bool = True):
+                 max_seq: int = 256, precompute: bool = True,
+                 sync_every: int = 8, cache_bytes: Optional[int] = 64 << 20):
         self.cfg = cfg
         self.params = params
         self.store = store
         self.S = max_seq
         self.n_slots = max_slots
         self.precompute = precompute and cfg.xpeft.enabled
+        self.sync_every = sync_every
         self.cache = MDL.init_cache(cfg, max_slots, max_seq)
-        self.lengths = np.zeros(max_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
-        self.last_tok = np.zeros(max_slots, np.int32)
+        self.scheduler = Scheduler(cfg.block_pattern)
+        self.profile_cache = ProfileCache(cache_bytes)
         xp = cfg.xpeft
         L, N, b, d = cfg.num_layers, xp.num_adapters, xp.bottleneck, cfg.d_model
         if self.precompute:
@@ -94,177 +82,318 @@ class ServeEngine:
             }
         else:
             self.masks = None
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl,
-                                static_argnames=("prompt_len",))
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,),
-                               static_argnames=())
-        # single jitted admission aggregations (padded-R bucketed); the
-        # sparse path reads only k·L·d·b bank bytes per request
+
+        def decode_fn(params, cache, last_tok, lengths, masks):
+            hidden, cache, _ = MDL.forward(params, last_tok[:, None], cfg,
+                                           profile_masks=masks, cache=cache,
+                                           cache_pos=lengths)
+            return greedy_next(MDL.lm_logits(params, hidden, cfg)), cache
+
+        self.slots = SlotState(max_slots, max_seq, sync_every, decode_fn)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._scatter_masks = jax.jit(
+            lambda buf, slots, rows: jax.tree.map(
+                lambda b_, r_: b_.at[slots].set(r_.astype(b_.dtype)),
+                buf, rows))
+        # jitted admission aggregations (padded to pow2 profile counts); the
+        # sparse path reads only k·L·d·b bank bytes per aggregated profile
         self._aggregate_sparse = jax.jit(
             lambda bank, ia, wa, ib, wb:
             XP.precompute_effective_adapters_sparse(bank, ia, wa, ib, wb, xp))
         self._aggregate_dense = jax.jit(
             XP.precompute_effective_adapters_dense_batched)
-        # which aggregation path the last admission took + the bank bytes it
-        # actually read (from the shapes handed to the kernel) — serve_bench
-        # reports these so CI gates on exercised behavior, not config math
+        # what the last admission actually did (path, cache hits, bank bytes,
+        # prefill occupancy) — serve_bench reports these so CI gates on
+        # exercised behavior, not config math
         self.last_admission: Optional[dict] = None
+        self.decode_tokens = 0
+        self.prefill_batches = 0
+        self.prefill_rows = 0
+        self.prefill_real = 0
+        # current sync window: sync_every capped by the host's upper bound
+        # on tokens any live request can still emit, so slots never
+        # dead-step a full window after every request in it finished
+        self._window = sync_every
 
     # ------------------------------------------------------------- jit impls
-    def _prefill_impl(self, params, tokens, masks_row, length, *, prompt_len):
-        mini = MDL.init_cache(self.cfg, 1, self.S)
-        masks = None
-        if masks_row is not None:
-            masks = jax.tree.map(lambda a: a[None], masks_row)
+    def _prefill_impl(self, params, tokens, masks, lengths):
+        """Batched prefill of one length bucket: tokens [B, pad], per-request
+        masks [B, ...] (or None), lengths [B] -> (next_tok [B], mini cache)."""
+        B, P = tokens.shape
+        mini = MDL.init_cache(self.cfg, B, self.S)
         hidden, mini, _ = MDL.forward(params, tokens, self.cfg,
                                       profile_masks=masks, cache=mini,
                                       cache_pos=0)
-        idx = length - 1
-        logits = MDL.lm_logits(
-            params, jax.lax.dynamic_slice_in_dim(hidden, idx, 1, axis=1),
-            self.cfg)
-        return jnp.argmax(logits[0, -1]).astype(jnp.int32), mini
+        idx = jnp.clip(lengths - 1, 0, P - 1)
+        last_h = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+        logits = MDL.lm_logits(params, last_h, self.cfg)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), mini
 
-    def _insert_impl(self, cache, mini, slot):
+    def _insert_impl(self, cache, mini, slots):
+        B = slots.shape[0]
+
         def ins(big, small):
-            # batch dim of the big cache is axis 1 for stacked caches
-            return big.at[:, slot].set(small[:, 0].astype(big.dtype))
+            # batch dim of stacked caches is axis 1; drop padded prefill rows
+            return big.at[:, slots].set(small[:, :B].astype(big.dtype))
         return jax.tree.map(ins, cache, mini)
 
-    def _decode_impl(self, params, cache, tokens, lengths, masks):
-        hidden, cache, _ = MDL.forward(params, tokens[:, None], self.cfg,
-                                       profile_masks=masks, cache=cache,
-                                       cache_pos=lengths)
-        logits = MDL.lm_logits(params, hidden, self.cfg)
-        return greedy_next(logits), cache
+    # ------------------------------------------------------------- hydration
+    def _hydrate_stacked(self, reqs: List[Request]):
+        """Stacked [R, ...] mask-row tree for an admission wave (or None).
+
+        precompute=True: profile-cache lookups first; only missing profiles
+        hit the bank, in ONE jitted aggregation padded to a pow2 count.
+        precompute=False (paper-faithful): per-step mask weights hydrated
+        through the store's public batch API; no cache involved.
+        """
+        if self.masks is None:
+            return None
+        R = len(reqs)
+        pids = [int(r.profile_id) for r in reqs]
+        if not self.precompute:
+            wa, wb, ls, lb = self.store.batch_mask_weights(pids)
+            self.last_admission = {"path": "per_step", "requests": R,
+                                   "cache_hits": 0, "cache_misses": R,
+                                   "bank_bytes_per_request": 0}
+            return {"w_a": wa, "w_b": wb, "ln_scale": ls, "ln_bias": lb}
+
+        entries = {}
+        hits = misses = 0
+        missing: List[int] = []  # unique uncached pids, admission order
+        for pid in pids:
+            entry = self.profile_cache.get(pid)
+            if entry is not None:
+                hits += 1
+                entries[pid] = entry
+            else:
+                misses += 1
+                if pid not in missing:
+                    missing.append(pid)
+
+        bank = self.params["xpeft_bank"]
+        L, N = bank["bank_a"].shape[:2]
+        slice_bytes = int(np.prod(bank["bank_a"].shape[2:])
+                          * 2 * bank["bank_a"].dtype.itemsize)  # Â+B̂ per row
+        bank_bytes = 0
+        aggregated = 0
+        if missing:
+            M = len(missing)
+            Mp = pow2_count(M)
+            aggregated = Mp
+            if self.store.mask_type == "hard":
+                # k-sparse fast path: only the top-k bank rows are read
+                ia, wa, ib, wb = self.store.batch_sparse_indices(missing)
+                pad_i = jnp.zeros((Mp - M,) + ia.shape[1:], ia.dtype)
+                pad_w = jnp.zeros((Mp - M,) + wa.shape[1:], wa.dtype)
+                a_hat, b_hat = self._aggregate_sparse(
+                    bank, jnp.concatenate([ia, pad_i]),
+                    jnp.concatenate([wa, pad_w]),
+                    jnp.concatenate([ib, pad_i]),
+                    jnp.concatenate([wb, pad_w]))
+                k = ia.shape[-1]
+                path = "sparse"
+                bank_bytes = Mp * k * L * slice_bytes
+                ln_s, ln_b = self.store.ln_affines(missing)
+            else:
+                # soft masks are dense by construction; the jitted einsum
+                # reads the bank once per call, amortized over the batch
+                wa, wb, ln_s, ln_b = self.store.batch_mask_weights(missing)
+                pad_w = jnp.zeros((Mp - M,) + wa.shape[1:], wa.dtype)
+                a_hat, b_hat = self._aggregate_dense(
+                    bank, jnp.concatenate([wa, pad_w]),
+                    jnp.concatenate([wb, pad_w]))
+                path = "dense"
+                bank_bytes = N * L * slice_bytes
+            for i, pid in enumerate(missing):
+                entry = {"a_hat": a_hat[i], "b_hat": b_hat[i],
+                         "ln_scale": ln_s[i], "ln_bias": ln_b[i]}
+                self.profile_cache.put(pid, entry)
+                entries[pid] = entry
+        else:
+            path = "cached"
+
+        self.last_admission = {
+            "path": path, "requests": R, "cache_hits": hits,
+            "cache_misses": misses, "unique_profiles": len(set(pids)),
+            "aggregated_profiles": aggregated,
+            "bank_bytes_per_request": bank_bytes // R}
+        return {key: jnp.stack([entries[pid][key] for pid in pids])
+                for key in ("a_hat", "b_hat", "ln_scale", "ln_bias")}
 
     # ---------------------------------------------------------------- public
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def _hydrate_mask_rows(self, reqs: List[Request]):
-        """-> (per-request mask rows for prefill, stacked [R,...] tree for
-        the slot-buffer scatter). Precompute aggregations run as ONE jitted
-        batched call (k-sparse for hard masks) padded to a pow2 request
-        bucket so retraces stay bounded."""
-        if self.masks is None:
-            return [None] * len(reqs), None
-        R = len(reqs)
-        recs = [self.store._rec[int(r.profile_id)] for r in reqs]
-        ln_s = jnp.asarray(np.stack([r["ln_scale"] for r in recs]),
-                           jnp.float32)
-        ln_b = jnp.asarray(np.stack([r["ln_bias"] for r in recs]),
-                           jnp.float32)
-        if not self.precompute:
-            was, wbs = zip(*(self.store.mask_weights(r.profile_id)
-                             for r in reqs))
-            stacked = {"w_a": jnp.stack(was), "w_b": jnp.stack(wbs),
-                       "ln_scale": ln_s, "ln_bias": ln_b}
-            rows = [jax.tree.map(lambda t: t[r], stacked) for r in range(R)]
-            return rows, stacked
-        bank = self.params["xpeft_bank"]
-        L, N = bank["bank_a"].shape[:2]
-        slice_bytes = int(np.prod(bank["bank_a"].shape[2:])
-                          * 2 * bank["bank_a"].dtype.itemsize)  # Â+B̂ per row
-        Rp = _pow2(R)
-        if self.store.mask_type == "hard":
-            # k-sparse fast path: only the top-k bank rows are read
-            ia, wa, ib, wb = zip(*(self.store.sparse_indices(r.profile_id)
-                                   for r in reqs))
-            pad_i = np.zeros((Rp - R,) + np.asarray(ia[0]).shape, np.int32)
-            pad_w = np.zeros((Rp - R,) + np.asarray(wa[0]).shape, np.float32)
-            idx_a = jnp.asarray(np.concatenate([np.stack(ia), pad_i]))
-            w_a = jnp.asarray(np.concatenate([np.stack(wa), pad_w]))
-            idx_b = jnp.asarray(np.concatenate([np.stack(ib), pad_i]))
-            w_b = jnp.asarray(np.concatenate([np.stack(wb), pad_w]))
-            a_hat, b_hat = self._aggregate_sparse(bank, idx_a, w_a,
-                                                  idx_b, w_b)
-            k = idx_a.shape[-1]
-            # bytes the kernel was actually handed, padding rows included
-            self.last_admission = {"path": "sparse", "requests": R,
-                                   "padded_requests": Rp,
-                                   "bank_bytes_per_request":
-                                   Rp * k * L * slice_bytes // R}
-        else:
-            # soft masks are dense by construction; jitted dense einsum
-            # (reads the bank once per call, amortized over the batch)
-            was, wbs = zip(*(self.store.mask_weights(r.profile_id)
-                             for r in reqs))
-            pad_w = np.zeros((Rp - R,) + np.asarray(was[0]).shape, np.float32)
-            w_a = jnp.asarray(np.concatenate([np.stack(was), pad_w]))
-            w_b = jnp.asarray(np.concatenate([np.stack(wbs), pad_w]))
-            a_hat, b_hat = self._aggregate_dense(bank, w_a, w_b)
-            self.last_admission = {"path": "dense", "requests": R,
-                                   "padded_requests": Rp,
-                                   "bank_bytes_per_request":
-                                   N * L * slice_bytes // R}
-        stacked = {"a_hat": a_hat[:R], "b_hat": b_hat[:R],
-                   "ln_scale": ln_s, "ln_bias": ln_b}
-        rows = [jax.tree.map(lambda t: t[r], stacked) for r in range(R)]
-        return rows, stacked
+    def active_count(self) -> int:
+        """Host-visible count of occupied slots (refreshed at syncs)."""
+        return sum(r is not None for r in self.slot_req)
 
     def admit_many(self, reqs: List[Request]) -> int:
-        """Admit up to len(free_slots()) requests; one batched aggregation,
-        then per-request (length-bucketed) prefill. Returns #admitted."""
+        """Admit up to len(free_slots()) requests: one cache-aware batched
+        hydration, one mask scatter, one prefill per length bucket, one
+        slot-state scatter. Returns #admitted."""
+        if self.slots.buf_fill:
+            self.sync()  # flush the window before touching slot state
         free = self.free_slots()
         reqs = reqs[:len(free)]
         if not reqs:
             return 0
-        rows, stacked = self._hydrate_mask_rows(reqs)
+        stacked = self._hydrate_stacked(reqs)
+        assigned = free[:len(reqs)]
+        slot_of = {id(r): s for r, s in zip(reqs, assigned)}
         if stacked is not None:
-            # ONE scatter into the per-slot buffers for all admitted
-            # requests (not one full-buffer copy per request)
-            slots = jnp.asarray(free[:len(reqs)])
-            self.masks = jax.tree.map(
-                lambda buf, rs: buf.at[slots].set(rs.astype(buf.dtype)),
-                self.masks, stacked)
-        for req, slot, masks_row in zip(reqs, free, rows):
-            T = len(req.prompt)
-            # recurrent-state archs can't mask pad tokens out of their state:
-            # prefill exactly; attention archs pad to pow2 buckets (fewer jits)
-            pad = _bucket(T) if self.cfg.block_pattern == "attn" else T
-            toks = np.zeros((1, pad), np.int32)
-            toks[0, :T] = req.prompt
-            nxt, mini = self._prefill(self.params, jnp.asarray(toks),
-                                      masks_row, jnp.int32(T), prompt_len=pad)
-            self.cache = self._insert(self.cache, mini, slot)
-            self.slot_req[slot] = req
-            self.lengths[slot] = T
-            self.last_tok[slot] = int(nxt)
-            req.generated.append(int(nxt))
+            # ONE scatter into the per-slot buffers for the whole wave
+            self.masks = self._scatter_masks(
+                self.masks, jnp.asarray(assigned), stacked)
+
+        idx_of = {id(r): i for i, r in enumerate(reqs)}
+        groups = self.scheduler.group_by_bucket(reqs)
+        next_toks = {}
+        for pad, group in sorted(groups.items()):
+            B = len(group)
+            Bp = pow2_count(B)
+            toks = np.zeros((Bp, pad), np.int32)
+            lens = np.ones((Bp,), np.int32)
+            for j, r in enumerate(group):
+                toks[j, :len(r.prompt)] = r.prompt
+                lens[j] = len(r.prompt)
+            rows = None
+            if stacked is not None:
+                sel = jnp.asarray([idx_of[id(r)] for r in group]
+                                  + [0] * (Bp - B))
+                rows = jax.tree.map(lambda t: t[sel], stacked)
+            nxt, mini = self._prefill(self.params, jnp.asarray(toks), rows,
+                                      jnp.asarray(lens))
+            gslots = jnp.asarray([slot_of[id(r)] for r in group])
+            self.cache = self._insert(self.cache, mini, gslots)
+            nxt_h = np.asarray(nxt[:B])
+            for j, r in enumerate(group):
+                next_toks[id(r)] = int(nxt_h[j])
+            self.prefill_batches += 1
+            self.prefill_rows += Bp
+            self.prefill_real += B
+        if self.last_admission is not None:
+            self.last_admission["prefill_batches"] = len(groups)
+            self.last_admission["prefill_occupancy"] = round(
+                len(reqs) / max(sum(pow2_count(len(g))
+                                    for g in groups.values()), 1), 3)
+
+        lens_all = [len(r.prompt) for r in reqs]
+        toks_all = [next_toks[id(r)] for r in reqs]
+        self.slots.admit(assigned, toks_all, lens_all,
+                         [r.max_new_tokens for r in reqs])
+        for r, slot in zip(reqs, assigned):
+            r.generated.append(next_toks[id(r)])
+            if r.max_new_tokens <= 1 or len(r.prompt) >= self.S - 1:
+                r.done = True  # budget spent by the prefill token
+            else:
+                self.slot_req[slot] = r
+        self._refresh_window()
         return len(reqs)
 
     def admit(self, req: Request) -> bool:
         return self.admit_many([req]) == 1
 
     def step(self) -> int:
-        """One decode step for all active slots; returns #active."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        """One device decode step for all slots. Host state refreshes only
+        at the `sync_every` cadence; returns the host-visible active count
+        as of the last sync (an upper bound on live slots)."""
+        active = self.active_count()
         if not active:
             return 0
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_tok),
-            jnp.asarray(self.lengths), self.masks)
-        nxt = np.asarray(nxt)
-        for i in active:
-            req = self.slot_req[i]
-            self.lengths[i] += 1
-            req.generated.append(int(nxt[i]))
-            self.last_tok[i] = int(nxt[i])
-            if len(req.generated) >= req.max_new_tokens \
-                    or self.lengths[i] >= self.S - 1:
+        self.cache = self.slots.step(self.params, self.cache, self.masks)
+        if self.slots.buf_fill >= self._window:
+            self.sync()
+        return active
+
+    def sync(self) -> int:
+        """Force a device→host sync: distribute the window's tokens to
+        their requests, mark finished requests done, free their slots.
+        Returns the number of still-active slots."""
+        s = self.slots.sync()
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            c = int(s.counts[i])
+            if c:
+                toks = s.tokens[i, :c]
+                assert (toks >= 0).all(), "non-contiguous slot activity"
+                req.generated.extend(int(t) for t in toks)
+                self.decode_tokens += c
+            if not s.active[i]:
                 req.done = True
                 self.slot_req[i] = None
-        return len(active)
+        self._refresh_window()
+        return self.active_count()
 
-    def run_until_drained(self, queue: List[Request], max_steps: int = 10_000):
+    def _refresh_window(self) -> None:
+        # device capacity stop is lengths >= S-1 post-increment with
+        # lengths = prompt + generated - 1, so a slot can still emit
+        # S - prompt - generated tokens (not S-1 - ...)
+        remaining = [min(r.max_new_tokens - len(r.generated),
+                         self.S - len(r.prompt) - len(r.generated))
+                     for r in self.slot_req if r is not None]
+        bound = max(remaining) if remaining else self.sync_every
+        self._window = max(1, min(self.sync_every, bound))
+
+    def submit(self, reqs) -> None:
+        """Queue requests with the scheduler (admitted as slots free up)."""
+        self.scheduler.submit(reqs)
+
+    def invalidate_profile(self, pid: int) -> bool:
+        """Drop a profile's cached Â/B̂ — REQUIRED after re-training updates
+        its masks in the store (cache entries are keyed by pid alone, so a
+        stale entry would otherwise keep serving the old adapters). Already
+        -admitted slots keep their scattered copy; only future admissions
+        re-aggregate."""
+        return self.profile_cache.invalidate(pid)
+
+    def abort_all(self) -> None:
+        """Abort every in-flight request (tokens already decoded are kept);
+        slots become free, caches/masks are left to be overwritten."""
+        if self.slots.buf_fill:
+            self.sync()
+        self.slots.deactivate_all()
+        for i, req in enumerate(self.slot_req):
+            if req is not None:
+                req.done = True
+                self.slot_req[i] = None
+        self._refresh_window()
+
+    def run_until_drained(self, queue: Optional[List[Request]] = None,
+                          max_steps: int = 10_000) -> int:
+        """Serve until the queue and all slots are empty. Admission happens
+        whenever the host view shows free slots (i.e. after syncs)."""
+        if queue:
+            self.scheduler.submit(list(queue))
         steps = 0
-        while (queue or any(r is not None for r in self.slot_req)) \
-                and steps < max_steps:
-            if queue and self.free_slots():
-                n = self.admit_many(queue[:len(self.free_slots())])
-                del queue[:n]
+        while steps < max_steps:
+            free = self.free_slots()
+            if free and self.scheduler.pending():
+                self.admit_many(self.scheduler.next_batch(len(free)))
+            if not self.active_count():
+                if not self.scheduler.pending():
+                    break
+                continue  # admission freed nothing; next wave will
             self.step()
             steps += 1
+        if self.slots.buf_fill:
+            self.sync()
         return steps
+
+    def serve_stats(self) -> dict:
+        """Counters the bench reports (and operators can scrape)."""
+        toks = max(self.decode_tokens, 1)
+        return {
+            "host_syncs": self.slots.host_syncs,
+            "device_steps": self.slots.device_steps,
+            "decode_tokens": self.decode_tokens,
+            "syncs_per_token": round(self.slots.host_syncs / toks, 4),
+            "sync_every": self.sync_every,
+            "prefill_batches": self.prefill_batches,
+            "prefill_occupancy": round(
+                self.prefill_real / max(self.prefill_rows, 1), 4),
+            "profile_cache": self.profile_cache.stats(),
+            "scheduler": self.scheduler.stats(),
+        }

@@ -1,0 +1,99 @@
+"""LRU cache of admission-time aggregated profile adapters.
+
+The extreme multi-profile regime is R requests over P ≪ R profiles: most
+admissions re-request a profile the engine has already aggregated. Caching
+the aggregated Â/B̂ (plus the adapter-LN affine) keyed by ``profile_id``
+makes the repeat admission a pure gather — ZERO bank bytes read — and the
+entry is exactly the decode-hot-path representation, so a hit feeds the
+slot-buffer scatter directly.
+
+Capacity is budgeted in BYTES, not entries: an entry is 2·L·d·b values of
+bank dtype plus the [L, b] affines, so the operator knob maps directly to
+device memory (`ServeEngine(cache_bytes=...)`). Eviction is LRU.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional
+
+
+def entry_nbytes(entry: dict) -> int:
+    return sum(int(v.size) * int(v.dtype.itemsize) for v in entry.values())
+
+
+class ProfileCache:
+    """LRU of {"a_hat", "b_hat", "ln_scale", "ln_bias"} device-array trees.
+
+    capacity_bytes=None means unbounded; capacity_bytes=0 disables caching
+    (every get misses, puts are dropped) — the paper-faithful baseline.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = 64 << 20):
+        self.capacity = capacity_bytes
+        self._entries: "OrderedDict[int, dict]" = OrderedDict()
+        self._sizes: Dict[int, int] = {}
+        self.bytes_used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, pid) -> bool:
+        return int(pid) in self._entries
+
+    def get(self, pid: int) -> Optional[dict]:
+        entry = self._entries.get(int(pid))
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(int(pid))
+        self.hits += 1
+        return entry
+
+    def peek(self, pid: int) -> Optional[dict]:
+        """get() without touching LRU order or hit/miss counters."""
+        return self._entries.get(int(pid))
+
+    def put(self, pid: int, entry: dict) -> None:
+        pid = int(pid)
+        size = entry_nbytes(entry)
+        if self.capacity is not None and size > self.capacity:
+            return  # larger than the whole budget; don't thrash the cache
+        if pid in self._entries:
+            self.bytes_used -= self._sizes.pop(pid)
+            del self._entries[pid]
+        self._entries[pid] = entry
+        self._sizes[pid] = size
+        self.bytes_used += size
+        while (self.capacity is not None and self.bytes_used > self.capacity
+               and len(self._entries) > 1):
+            old_pid, _ = self._entries.popitem(last=False)
+            self.bytes_used -= self._sizes.pop(old_pid)
+            self.evictions += 1
+
+    def invalidate(self, pid: int) -> bool:
+        """Drop a profile (e.g. after re-training updated its masks)."""
+        pid = int(pid)
+        if pid not in self._entries:
+            return False
+        del self._entries[pid]
+        self.bytes_used -= self._sizes.pop(pid)
+        return True
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._sizes.clear()
+        self.bytes_used = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "bytes": self.bytes_used,
+                "capacity_bytes": self.capacity, "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "hit_rate": round(self.hit_rate, 4)}

@@ -1,0 +1,104 @@
+"""Request queue + admission policy for the serving engine.
+
+The scheduler decides WHICH queued requests enter the engine when slots
+free up; the engine then prefills each same-bucket group in ONE jitted
+call. Policy: FIFO overall (the oldest request is always admitted), but
+the rest of the admission wave is filled with other requests from the SAME
+length bucket first — same-bucket requests share a prefill launch, so
+grouping them maximizes prefill-batch occupancy without starving anyone
+(a request can only be overtaken by same-wave peers, never delayed past
+the wave its bucket leads).
+
+Length buckets: attention archs pad prompts to pow2 buckets (pad tokens
+are masked out of the KV range); recurrent-state archs (rwkv/mamba/zamba)
+cannot mask pad tokens out of their state, so their bucket is the EXACT
+prompt length — only identical-length prompts share a prefill.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.utils import pow2_bucket
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [T] int32
+    profile_id: int
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Scheduler:
+    """Bounded-bucket FIFO admission queue.
+
+    `window_mult` bounds how far past the head the bucket-grouping looks:
+    an admission wave considers at most window_mult * n_free queued
+    requests, so matching stays O(window), and a deep queue cannot starve
+    its own head.
+    """
+
+    def __init__(self, block_pattern: str = "attn", *, floor: int = 8,
+                 window_mult: int = 4):
+        self.exact_length = block_pattern != "attn"
+        self.floor = floor
+        self.window_mult = window_mult
+        self._queue: "deque[Request]" = deque()
+        self.n_submitted = 0
+        self.n_admitted = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, reqs) -> None:
+        if isinstance(reqs, Request):
+            reqs = [reqs]
+        self._queue.extend(reqs)
+        self.n_submitted += len(reqs)
+
+    def bucket_of(self, req: Request) -> int:
+        """Padded prompt length this request prefills at."""
+        T = len(req.prompt)
+        return T if self.exact_length else pow2_bucket(T, self.floor)
+
+    def next_batch(self, n_free: int) -> List[Request]:
+        """Pop up to n_free requests for admission, bucket-grouped FIFO."""
+        if n_free <= 0 or not self._queue:
+            return []
+        window = list(self._queue)[:self.window_mult * n_free]
+        picked: List[Request] = []
+        remaining = window
+        while remaining and len(picked) < n_free:
+            lead_bucket = self.bucket_of(remaining[0])
+            same = [r for r in remaining
+                    if self.bucket_of(r) == lead_bucket]
+            take = same[:n_free - len(picked)]
+            picked.extend(take)
+            taken = set(id(r) for r in take)
+            remaining = [r for r in remaining if id(r) not in taken]
+        picked_ids = set(id(r) for r in picked)
+        self._queue = deque(r for r in self._queue
+                            if id(r) not in picked_ids)
+        self.n_admitted += len(picked)
+        return picked
+
+    def group_by_bucket(self, reqs: List[Request]) -> Dict[int, List[Request]]:
+        """Admission-wave requests -> {padded_len: [reqs]} prefill groups."""
+        groups: Dict[int, List[Request]] = {}
+        for r in reqs:
+            groups.setdefault(self.bucket_of(r), []).append(r)
+        return groups
+
+    def stats(self) -> dict:
+        return {"pending": len(self._queue),
+                "submitted": self.n_submitted,
+                "admitted": self.n_admitted}

@@ -1,0 +1,151 @@
+"""Device-resident decode state for the serving slot batch.
+
+`SlotState` owns everything the per-token loop touches — ``last_tok``,
+``lengths``, ``active``, generation counters, and a token ring buffer — as
+DEVICE arrays, and advances all of it in ONE jitted step that also decides
+per-slot termination on device. The host only sees the state at an explicit
+``sync()``: one device→host transfer every ``sync_every`` steps instead of
+a round-trip per token, so steady-state decode never blocks on Python.
+
+Invariants the engine relies on:
+- activity is contiguous within a sync window: a slot admitted at window
+  position 0 emits tokens at buffer positions 0..c-1 and then goes (and
+  stays) inactive, so the sync can hand exactly ``n_gen`` deltas of tokens
+  to the request without per-step bookkeeping;
+- admission must be preceded by a sync (the engine flushes the window
+  before touching slot state), so buffers always start a window clean.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def _admit_scatter(arrays, slots, last_toks, lengths, max_news, actives):
+    """One batched scatter of the admission wave into the slot arrays."""
+    return {"last_tok": arrays["last_tok"].at[slots].set(last_toks),
+            "lengths": arrays["lengths"].at[slots].set(lengths),
+            "active": arrays["active"].at[slots].set(actives),
+            "n_gen": arrays["n_gen"].at[slots].set(jnp.ones_like(slots)),
+            "max_new": arrays["max_new"].at[slots].set(max_news),
+            "tok_buf": arrays["tok_buf"]}
+
+
+class SlotSync(NamedTuple):
+    """Host view of slot state at a sync point."""
+    tokens: np.ndarray       # [n_slots, <=sync_every] int32, -1 padded
+    counts: np.ndarray       # [n_slots] tokens emitted since last sync
+    lengths: np.ndarray      # [n_slots] int32
+    active: np.ndarray       # [n_slots] bool
+
+
+class SlotState:
+    """Slot decode state + the single jitted step advancing it.
+
+    decode_fn(params, cache, last_tok [S], lengths [S], masks) ->
+    (next_tok [S], cache) is the model-side half the engine provides.
+    """
+
+    def __init__(self, n_slots: int, max_seq: int, sync_every: int,
+                 decode_fn: Callable):
+        assert sync_every >= 1
+        self.n_slots = n_slots
+        self.S = max_seq
+        self.sync_every = sync_every
+        self.last_tok = jnp.zeros((n_slots,), jnp.int32)
+        self.lengths = jnp.zeros((n_slots,), jnp.int32)
+        self.active = jnp.zeros((n_slots,), bool)
+        self.n_gen = jnp.zeros((n_slots,), jnp.int32)
+        self.max_new = jnp.zeros((n_slots,), jnp.int32)
+        self.tok_buf = jnp.full((n_slots, sync_every), -1, jnp.int32)
+        self.buf_fill = 0            # host: steps since last sync
+        self._prev_n_gen = np.zeros((n_slots,), np.int32)  # host mirror
+        self.host_syncs = 0
+        self.device_steps = 0
+
+        def step_impl(params, cache, masks, arrays, step_idx):
+            nxt, cache = decode_fn(params, cache, arrays["last_tok"],
+                                   arrays["lengths"], masks)
+            was_active = arrays["active"]
+            lengths = arrays["lengths"] + was_active.astype(jnp.int32)
+            n_gen = arrays["n_gen"] + was_active.astype(jnp.int32)
+            last_tok = jnp.where(was_active, nxt, arrays["last_tok"])
+            # on-device termination: token budget or sequence capacity
+            done = (n_gen >= arrays["max_new"]) | (lengths >= self.S - 1)
+            tok_buf = arrays["tok_buf"].at[:, step_idx].set(
+                jnp.where(was_active, nxt, -1))
+            return cache, {"last_tok": last_tok, "lengths": lengths,
+                           "active": was_active & ~done, "n_gen": n_gen,
+                           "max_new": arrays["max_new"], "tok_buf": tok_buf}
+
+        self._step = jax.jit(step_impl)
+
+    # ----------------------------------------------------------------- device
+    def _arrays(self) -> dict:
+        return {"last_tok": self.last_tok, "lengths": self.lengths,
+                "active": self.active, "n_gen": self.n_gen,
+                "max_new": self.max_new, "tok_buf": self.tok_buf}
+
+    def _set_arrays(self, arrays: dict) -> None:
+        self.last_tok = arrays["last_tok"]
+        self.lengths = arrays["lengths"]
+        self.active = arrays["active"]
+        self.n_gen = arrays["n_gen"]
+        self.max_new = arrays["max_new"]
+        self.tok_buf = arrays["tok_buf"]
+
+    def step(self, params, cache, masks):
+        """One decode step for ALL slots (inactive ones pad-compute);
+        returns the updated model cache. No host transfer happens here."""
+        assert self.buf_fill < self.sync_every, "sync() before stepping more"
+        cache, arrays = self._step(params, cache, masks, self._arrays(),
+                                   self.buf_fill)
+        self._set_arrays(arrays)
+        self.buf_fill += 1
+        self.device_steps += 1
+        return cache
+
+    def admit(self, slots, last_toks, lengths, max_news) -> None:
+        """Scatter freshly prefilled requests into the slot arrays (one
+        jitted update for the whole admission batch). The prefill's first
+        generated token counts toward ``max_new`` (n_gen starts at 1); a
+        request whose budget is exhausted by that token (or whose prompt
+        already fills the sequence) never becomes active."""
+        assert self.buf_fill == 0, "engine must sync() before admission"
+        slots_h = np.asarray(slots, np.int32)
+        lengths_h = np.asarray(lengths, np.int32)
+        max_news_h = np.asarray(max_news, np.int32)
+        actives_h = (max_news_h > 1) & (lengths_h < self.S - 1)
+        arrays = _admit_scatter(
+            self._arrays(), jnp.asarray(slots_h),
+            jnp.asarray(np.asarray(last_toks, np.int32)),
+            jnp.asarray(lengths_h), jnp.asarray(max_news_h),
+            jnp.asarray(actives_h))
+        self._set_arrays(arrays)
+        self._prev_n_gen[slots_h] = 1
+
+    def deactivate_all(self) -> None:
+        """Mark every slot inactive on device (abort; engine syncs first)."""
+        assert self.buf_fill == 0, "sync() before deactivating"
+        self.active = jnp.zeros_like(self.active)
+
+    # ------------------------------------------------------------------- host
+    def sync(self) -> SlotSync:
+        """ONE device→host transfer of the window's tokens + slot status;
+        resets the window. The engine distributes tokens to requests."""
+        fill = self.buf_fill
+        tok_buf, lengths, active, n_gen = jax.device_get(
+            (self.tok_buf[:, :fill] if fill else self.tok_buf[:, :0],
+             self.lengths, self.active, self.n_gen))
+        counts = np.asarray(n_gen) - self._prev_n_gen
+        self._prev_n_gen = np.asarray(n_gen).copy()
+        if fill:
+            self.tok_buf = jnp.full_like(self.tok_buf, -1)
+        self.buf_fill = 0
+        self.host_syncs += 1
+        return SlotSync(np.asarray(tok_buf), counts, np.asarray(lengths),
+                        np.asarray(active))

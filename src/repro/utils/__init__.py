@@ -1,4 +1,5 @@
-"""Small shared utilities: pytree helpers, logging, sizes."""
+"""Small shared utilities: pytree helpers, padding buckets, logging, sizes."""
+from repro.utils.padding import pow2_bucket, pow2_count  # noqa: F401
 from repro.utils.tree import (  # noqa: F401
     tree_paths,
     leaf_name,

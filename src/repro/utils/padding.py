@@ -1,0 +1,25 @@
+"""Power-of-two padding buckets, shared by the serve scheduler and benches.
+
+Jitted serving functions retrace per distinct shape; padding prompt lengths
+and request counts to pow2 buckets bounds the number of variants at
+log2(max) while wasting at most 2x pad compute.
+"""
+from __future__ import annotations
+
+
+def pow2_bucket(n: int, floor: int = 8) -> int:
+    """Length bucket: next power of two >= n, floored at `floor` (pad tokens
+    are cheap, so a floor trades a little compute for fewer jit variants)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def pow2_count(n: int) -> int:
+    """Request-count bucket: next power of two from 1 (no floor — padding
+    rows cost real aggregation/prefill work, unlike pad tokens)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b

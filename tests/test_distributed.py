@@ -61,6 +61,7 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh_compat
 """
 
 
@@ -81,7 +82,7 @@ def test_compressed_psum_numerics():
     from functools import partial
     from jax.experimental.shard_map import shard_map
     from repro.distributed.collectives import compressed_psum, compressed_psum_ef
-    mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((8,), ("d",))
     x = jax.random.normal(jax.random.key(0), (8, 64))
 
     @partial(shard_map, mesh=mesh, in_specs=P("d", None), out_specs=P("d", None))
@@ -112,8 +113,7 @@ def test_compressed_psum_numerics():
 def test_pipeline_matches_single_device():
     _run_sub("""
     from repro.distributed.pipeline import pipeline_apply, stack_stages
-    mesh = jax.make_mesh((4, 2), ("pod", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh_compat((4, 2), ("pod", "model"))
     L, d = 8, 16
     ks = jax.random.split(jax.random.key(0), L)
     layers = jax.vmap(lambda k: {"w": jax.random.normal(k, (d, d)) / np.sqrt(d)})(ks)
@@ -162,8 +162,7 @@ def test_small_mesh_train_step_and_moe_parity():
     step = make_train_step(cfg, "xpeft", lr=1e-3)
     s1, m1 = jax.jit(step)(state, batch, jax.random.key(7))
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     with ctx.mesh_context(mesh):
         st_sh = to_shardings(param_specs(state, mesh, fsdp=True), mesh)
         b_sh = to_shardings(batch_specs(batch, mesh, B), mesh)
@@ -190,7 +189,7 @@ def test_elastic_reshard_smaller_mesh():
     _run_sub("""
     from repro.distributed.fault import reshard_state, surviving_mesh
     from jax.sharding import NamedSharding
-    mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh8 = make_mesh_compat((8,), ("data",))
     x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                        NamedSharding(mesh8, P("data", None)))
     mesh4 = surviving_mesh(("data",), (8,), "data", 4)

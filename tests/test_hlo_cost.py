@@ -79,8 +79,8 @@ def test_collectives_counted(tmp_path):
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.analysis.hlo_cost import analyze
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("d",))
         w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
         x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
         sh_w = NamedSharding(mesh, P("d", None))

@@ -58,6 +58,44 @@ def test_sparse_indices_match_dense_weights():
 
 
 def test_soft_store_roundtrip(tmp_path):
+    """Soft masks survive save→load: fp16 logits and LN affines byte-exact,
+    hydrated softmax weights identical."""
     cfg, table, store = _store_with_profiles("soft")
     wa, wb = store.mask_weights(2)
     np.testing.assert_allclose(np.asarray(wa.sum(-1)), 1.0, rtol=1e-3)
+    store.save(str(tmp_path / "soft.npz"))
+    loaded = ProfileStore.load(str(tmp_path / "soft.npz"))
+    assert loaded.mask_type == "soft"
+    for pid in range(4):
+        wa, wb = store.mask_weights(pid)
+        wa2, wb2 = loaded.mask_weights(pid)
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(wa2))
+        np.testing.assert_array_equal(np.asarray(wb), np.asarray(wb2))
+        ls, lb = store.ln_affines([pid])
+        ls2, lb2 = loaded.ln_affines([pid])
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(ls2))
+        np.testing.assert_array_equal(np.asarray(lb), np.asarray(lb2))
+
+
+def test_save_leaves_no_temp_files(tmp_path):
+    """np.savez appends .npz to suffix-less temp names; save() must not
+    leave the original empty mkstemp file behind."""
+    _, _, store = _store_with_profiles("hard")
+    store.save(str(tmp_path / "profiles.npz"))
+    store.save(str(tmp_path / "profiles.npz"))  # overwrite path too
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["profiles.npz"]
+
+
+def test_batch_public_hydration_api():
+    """batch_sparse_indices/ln_affines (the serving hydration API) match
+    the per-profile calls, stacked."""
+    cfg, table, store = _store_with_profiles("hard")
+    pids = [2, 0, 1]
+    ia, wa, ib, wb = store.batch_sparse_indices(pids)
+    assert ia.shape == (3, cfg.num_layers, cfg.xpeft.k)
+    ls, lb = store.ln_affines(pids)
+    assert ls.shape == (3, cfg.num_layers, cfg.xpeft.bottleneck)
+    for r, pid in enumerate(pids):
+        pia, pwa, pib, pwb = store.sparse_indices(pid)
+        np.testing.assert_array_equal(np.asarray(ia[r]), np.asarray(pia))
+        np.testing.assert_array_equal(np.asarray(ib[r]), np.asarray(pib))

@@ -42,13 +42,11 @@ def test_precompute_parity(setup):
     cfg, params, store = setup
     from repro.core import xpeft as XPC
     wa, wb = store.mask_weights(0)
-    rec = store._rec[0]
-    prof = {"ln_scale": jnp.asarray(rec["ln_scale"], jnp.float32),
-            "ln_bias": jnp.asarray(rec["ln_bias"], jnp.float32)}
+    ln_s, ln_b = store.ln_affines([0])
+    prof = {"ln_scale": ln_s[0], "ln_bias": ln_b[0]}
     toks = jnp.arange(8)[None] % cfg.vocab_size
     dense = {"w_a": wa[None], "w_b": wb[None],
-             "ln_scale": prof["ln_scale"][None],
-             "ln_bias": prof["ln_bias"][None]}
+             "ln_scale": ln_s, "ln_bias": ln_b}
     h1, _, _ = forward(params, toks, cfg, profile_masks=dense)
     bank = params["xpeft_bank"]
     a_hat = jnp.einsum("ln,lndb->ldb", wa, bank["bank_a"].astype(jnp.float32))
@@ -72,10 +70,9 @@ def test_profiles_change_generation(setup):
     outs = []
     for pid in (0, 1):
         wa, wb = store.mask_weights(pid)
-        rec = store._rec[pid]
+        ln_s, ln_b = store.ln_affines([pid])
         masks = {"w_a": wa[None], "w_b": wb[None],
-                 "ln_scale": jnp.asarray(rec["ln_scale"], jnp.float32)[None],
-                 "ln_bias": jnp.asarray(rec["ln_bias"], jnp.float32)[None]}
+                 "ln_scale": ln_s, "ln_bias": ln_b}
         h, _, _ = forward(params, toks, cfg, profile_masks=masks)
         outs.append(np.asarray(lm_logits(params, h[:, -1:], cfg)))
     assert not np.allclose(outs[0], outs[1], atol=1e-5)
@@ -93,10 +90,9 @@ def test_engine_decode_matches_full_forward(setup):
     for _ in range(3):
         eng.step()
     wa, wb = store.mask_weights(0)
-    rec = store._rec[0]
+    ln_s, ln_b = store.ln_affines([0])
     masks = {"w_a": wa[None], "w_b": wb[None],
-             "ln_scale": jnp.asarray(rec["ln_scale"], jnp.float32)[None],
-             "ln_bias": jnp.asarray(rec["ln_bias"], jnp.float32)[None]}
+             "ln_scale": ln_s, "ln_bias": ln_b}
     seq = list(prompt)
     for t, expect in enumerate(req.generated):
         h, _, _ = forward(params, jnp.asarray([seq]), cfg,

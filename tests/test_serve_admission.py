@@ -125,6 +125,94 @@ def test_sparse_admission_tokens_match_dense_admission(setup):
     assert gens[0] == gens[1]
 
 
+def test_cached_admission_reads_zero_bank_bytes(setup):
+    """R requests sharing ONE already-cached profile must admit without
+    touching the bank: path == "cached", zero bank bytes, zero store
+    hydration calls."""
+    cfg, params, store = setup
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64)
+    # first wave aggregates profile 0 (cold)
+    eng.admit_many([Request(uid=0, prompt=np.arange(4) % cfg.vocab_size,
+                            profile_id=0, max_new_tokens=2)])
+    assert eng.last_admission["path"] == "sparse"
+    assert eng.last_admission["bank_bytes_per_request"] > 0
+    eng.abort_all()
+    # count store hydration calls during the warm wave
+    calls = {"n": 0}
+    orig = store.batch_sparse_indices
+    store.batch_sparse_indices = \
+        lambda pids: calls.__setitem__("n", calls["n"] + 1) or orig(pids)
+    try:
+        n = eng.admit_many(
+            [Request(uid=10 + i, prompt=np.arange(4) % cfg.vocab_size,
+                     profile_id=0, max_new_tokens=2) for i in range(2)])
+    finally:
+        store.batch_sparse_indices = orig
+    assert n == 2
+    adm = eng.last_admission
+    assert adm["path"] == "cached"
+    assert adm["cache_hits"] == 2 and adm["cache_misses"] == 0
+    assert adm["bank_bytes_per_request"] == 0
+    assert calls["n"] == 0  # the bank-reading hydration never ran
+
+
+def test_invalidate_profile_forces_reaggregation(setup):
+    """After a profile's masks are updated in the store, invalidate_profile
+    must make the next admission re-aggregate (sparse path), not serve the
+    stale cached adapters."""
+    cfg, params, store = setup
+    eng = ServeEngine(cfg, params, store, max_slots=1, max_seq=64)
+
+    def admit_one(uid):
+        n = eng.admit_many([Request(uid=uid,
+                                    prompt=np.arange(4) % cfg.vocab_size,
+                                    profile_id=0, max_new_tokens=2)])
+        assert n == 1
+        eng.abort_all()
+        return eng.last_admission["path"]
+
+    assert admit_one(0) == "sparse"   # cold
+    assert admit_one(1) == "cached"   # warm
+    assert eng.invalidate_profile(0)
+    assert admit_one(2) == "sparse"   # re-aggregated after invalidation
+
+
+class _PublicOnlyStore:
+    """Proxy exposing ONLY ProfileStore's public API — any engine reach
+    into ``_rec`` (or other privates) raises AttributeError."""
+
+    _PUBLIC = ("mask_weights", "batch_mask_weights", "sparse_indices",
+               "batch_sparse_indices", "ln_affines", "profile_ids",
+               "bytes_per_profile", "total_bytes", "mask_type", "k",
+               "L", "N", "b")
+
+    def __init__(self, store):
+        object.__setattr__(self, "_store", store)
+
+    def __getattr__(self, name):
+        if name not in self._PUBLIC:
+            raise AttributeError(
+                f"engine accessed non-public ProfileStore attr {name!r}")
+        return getattr(self._store, name)
+
+
+def test_engine_uses_only_public_store_api(setup):
+    cfg, params, store = setup
+    eng = ServeEngine(cfg, params, _PublicOnlyStore(store), max_slots=2,
+                      max_seq=64)
+    reqs = [Request(uid=i, prompt=np.arange(4 + i) % cfg.vocab_size,
+                    profile_id=i % 3, max_new_tokens=3) for i in range(3)]
+    eng.run_until_drained(list(reqs))
+    assert all(r.done for r in reqs)
+    # and the paper-faithful per-step path stays public-API-only too
+    eng2 = ServeEngine(cfg, params, _PublicOnlyStore(store), max_slots=2,
+                       max_seq=64, precompute=False)
+    reqs2 = [Request(uid=9, prompt=np.arange(5) % cfg.vocab_size,
+                     profile_id=1, max_new_tokens=3)]
+    eng2.run_until_drained(list(reqs2))
+    assert reqs2[0].done
+
+
 def test_apply_precomputed_layer_routes_through_ops(setup):
     """The per-layer public API for precomputed adapters matches the core
     apply_adapter semantics under both CPU backends, for 2-D and batched x."""
@@ -132,9 +220,8 @@ def test_apply_precomputed_layer_routes_through_ops(setup):
     cfg, params, store = setup
     bank = params["xpeft_bank"]
     wa, wb = store.mask_weights(0)
-    rec = store._rec[0]
-    prof = {"ln_scale": jnp.asarray(rec["ln_scale"], jnp.float32),
-            "ln_bias": jnp.asarray(rec["ln_bias"], jnp.float32)}
+    ln_s, ln_b = store.ln_affines([0])
+    prof = {"ln_scale": ln_s[0], "ln_bias": ln_b[0]}
     a_hat = jnp.einsum("ln,lndb->ldb", wa, bank["bank_a"].astype(jnp.float32))
     b_hat = jnp.einsum("ln,lnbd->lbd", wb, bank["bank_b"].astype(jnp.float32))
     eff_l = {"a_hat": a_hat[0].astype(bank["bank_a"].dtype),

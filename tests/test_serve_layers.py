@@ -1,0 +1,137 @@
+"""The layered serving subsystem: scheduler bucketing, device-resident slot
+state + windowed host syncs, profile-cache LRU accounting, pow2 helpers,
+and a recurrent-arch (exact-length prefill) engine smoke."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.models import init_lm
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.profile_cache import ProfileCache, entry_nbytes
+from repro.serve.scheduler import Scheduler
+from repro.utils import pow2_bucket, pow2_count
+
+
+# ---------------------------------------------------------------- pow2 utils
+
+def test_pow2_helpers():
+    assert [pow2_bucket(n) for n in (1, 8, 9, 17)] == [8, 8, 16, 32]
+    assert pow2_bucket(3, floor=2) == 4
+    assert [pow2_count(n) for n in (1, 2, 3, 5)] == [1, 2, 4, 8]
+
+
+# ----------------------------------------------------------------- scheduler
+
+def _req(uid, T, pid=0, max_new=4):
+    return Request(uid=uid, prompt=np.arange(T, dtype=np.int64) % 97,
+                   profile_id=pid, max_new_tokens=max_new)
+
+
+def test_scheduler_fifo_and_bucket_grouping():
+    s = Scheduler("attn")
+    # head is length-5 (bucket 8); lengths 20/21 share bucket 32
+    s.submit([_req(0, 5), _req(1, 20), _req(2, 6), _req(3, 21)])
+    wave = s.next_batch(3)
+    # FIFO: uid 0 first; its bucket-8 peer uid 2 rides along before uid 1
+    assert [r.uid for r in wave] == [0, 2, 1]
+    assert s.pending() == 1
+    groups = s.group_by_bucket(wave)
+    assert sorted(groups) == [8, 32]
+    assert [r.uid for r in groups[8]] == [0, 2]
+
+
+def test_scheduler_exact_length_for_recurrent():
+    s = Scheduler("rwkv")
+    s.submit([_req(0, 5), _req(1, 5), _req(2, 6)])
+    wave = s.next_batch(3)
+    groups = s.group_by_bucket(wave)
+    assert sorted(groups) == [5, 6]  # exact lengths, no pow2 padding
+    assert len(groups[5]) == 2
+
+
+# ------------------------------------------------------------- profile cache
+
+def _entry(scale=1):
+    return {"a_hat": jnp.zeros((2, 8, 4 * scale), jnp.float32),
+            "b_hat": jnp.zeros((2, 4 * scale, 8), jnp.float32),
+            "ln_scale": jnp.ones((2, 4), jnp.float32),
+            "ln_bias": jnp.zeros((2, 4), jnp.float32)}
+
+
+def test_profile_cache_lru_eviction_by_bytes():
+    one = entry_nbytes(_entry())
+    cache = ProfileCache(capacity_bytes=2 * one)
+    cache.put(0, _entry())
+    cache.put(1, _entry())
+    assert cache.get(0) is not None      # 0 is now most-recent
+    cache.put(2, _entry())               # evicts 1 (LRU), not 0
+    assert 1 not in cache and 0 in cache and 2 in cache
+    assert cache.evictions == 1
+    assert cache.bytes_used == 2 * one
+
+
+def test_profile_cache_zero_capacity_disables():
+    cache = ProfileCache(capacity_bytes=0)
+    cache.put(0, _entry())
+    assert cache.get(0) is None
+    assert cache.misses == 1
+
+
+def test_profile_cache_invalidate_and_stats():
+    cache = ProfileCache()
+    cache.put(7, _entry())
+    assert cache.get(7) is not None
+    assert cache.invalidate(7) and not cache.invalidate(7)
+    assert cache.get(7) is None
+    st = cache.stats()
+    assert st["hits"] == 1 and st["misses"] == 1 and st["bytes"] == 0
+
+
+# ------------------------------------------------------- engine on rwkv/ssm
+
+@pytest.fixture(scope="module", params=["rwkv6-7b", "zamba2-1.2b"])
+def recurrent_setup(request):
+    cfg = reduce_for_smoke(get_config(request.param))
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, "hard", cfg.xpeft.k)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(3):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    return cfg, params, store
+
+
+def test_recurrent_engine_exact_length_prefill(recurrent_setup):
+    """block_pattern != "attn": prompts prefill at EXACT length (recurrent
+    state can't mask pad tokens); same-length prompts still share one
+    batched prefill launch, and the engine drains correctly."""
+    cfg, params, store = recurrent_setup
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                      sync_every=4)
+    # two length-5 prompts (one exact-length batch) + a length-7 straggler
+    reqs = [_req(0, 5, pid=0), _req(1, 5, pid=1), _req(2, 7, pid=2)]
+    eng.run_until_drained(list(reqs))
+    for r in reqs:
+        assert r.done and len(r.generated) >= 4, (r.uid, r.generated)
+    st = eng.serve_stats()
+    assert st["prefill_occupancy"] == 1.0  # exact batches: no pad rows
+    assert st["syncs_per_token"] < 1.0
+
+
+def test_recurrent_tokens_invariant_to_sync_cadence(recurrent_setup):
+    """sync_every only changes WHEN the host learns tokens, never WHICH
+    tokens are generated."""
+    cfg, params, store = recurrent_setup
+    gens = []
+    for sync_every in (1, 4):
+        eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                          sync_every=sync_every)
+        reqs = [_req(0, 5, pid=0, max_new=6), _req(1, 6, pid=1, max_new=6)]
+        eng.run_until_drained(list(reqs))
+        gens.append([tuple(r.generated) for r in reqs])
+    assert gens[0] == gens[1]
