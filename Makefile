@@ -1,13 +1,14 @@
 # Repo verification entry points. `make verify` is what CI runs
 # (.github/workflows/ci.yml): the FULL tier-1 test suite (the 7 seed-era
 # multi-device failures were jax-version API breaks, fixed in PR 2 — no
-# deselects remain) plus a kernel/serve bench smoke that gates on
-# BENCH_*.json emission.
+# deselects remain) plus a kernel/serve/train bench smoke that gates on
+# BENCH_*.json emission, and the onboarding smoke (--onboard through the
+# launcher: roster admission, graduation, store emission).
 
 PY      := python
 PP      := PYTHONPATH=src:.
 
-.PHONY: verify test bench-smoke bench
+.PHONY: verify test bench-smoke onboard-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -15,10 +16,18 @@ test:
 bench-smoke:
 	$(PP) $(PY) benchmarks/kernel_bench.py --smoke
 	$(PP) $(PY) benchmarks/serve_bench.py --smoke
+	$(PP) $(PY) benchmarks/train_bench.py --smoke
 	$(PP) $(PY) benchmarks/check_bench.py
+
+onboard-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.train --onboard --smoke \
+		--arch qwen1.5-0.5b --profiles 6 --roster-slots 2 \
+		--per-slot-batch 2 --seq 16 --graduate-min-steps 4 \
+		--graduate-max-steps 10 --steps 200 \
+		--store-out /tmp/onboard_smoke_store.npz
 
 bench:
 	$(PP) $(PY) benchmarks/run.py
 
-verify: test bench-smoke
+verify: test bench-smoke onboard-smoke
 	@echo "verify: OK"

@@ -13,6 +13,16 @@ properties:
   (the PR 1 architecture's cadence, so the gate is machine-independent);
   BENCH_STRICT=1 additionally enforces the absolute PR 1 number — for
   perf machines, not shared CI runners whose wall clock varies 2-4x
+
+and the training-side lifecycle (BENCH_train.json, PR 3):
+
+- host syncs per TRAINING step < 1 (metrics buffered on device between
+  log/checkpoint boundaries)
+- every pending profile is accounted for (graduated + evicted == streamed)
+- the gang step retraced ZERO times across admission waves
+- the graduation roundtrip is bit-exact (persisted store == trained masks)
+- BENCH_STRICT=1 additionally enforces an absolute profiles-graduated/min
+  floor (perf machines only, same policy as the decode floor)
 """
 from __future__ import annotations
 
@@ -26,6 +36,8 @@ MIN_PREFILL_OCCUPANCY = 0.5
 MAX_SYNCS_PER_TOKEN = 1.0
 MIN_VS_PER_TOKEN_BASELINE = 0.9   # windowed >= 0.9x same-run baseline
 MIN_DECODE_TOKENS_PER_S = 2723.0  # PR 1 absolute, BENCH_STRICT only
+MAX_SYNCS_PER_TRAIN_STEP = 1.0
+MIN_PROFILES_PER_MIN = 300.0      # smoke-config absolute, BENCH_STRICT only
 
 
 def fail(msg: str):
@@ -54,6 +66,7 @@ def main():
     base = os.environ.get("BENCH_DIR", ".")
     kernels = load(os.path.join(base, "BENCH_kernels.json"))
     serve = load(os.path.join(base, "BENCH_serve.json"))
+    train = load(os.path.join(base, "BENCH_train.json"))
 
     names = {r["name"] for r in kernels["records"]}
     for required in ("mask_aggregate_batched.pallas_interpret",
@@ -115,12 +128,43 @@ def main():
         fail(f"decode {tp['tokens_per_s']} tok/s < PR 1 absolute baseline "
              f"{MIN_DECODE_TOKENS_PER_S} on the smoke config (BENCH_STRICT)")
 
+    # ---- training lifecycle (roster / onboarding / gang-step) -----------
+    tsync = record(train, "train.host_syncs")
+    if tsync.get("syncs_per_step", 1.0) >= MAX_SYNCS_PER_TRAIN_STEP:
+        fail(f"{tsync.get('syncs_per_step')} host syncs per TRAIN step — "
+             "metrics are not staying device-resident between boundaries")
+    life = record(train, "onboard.lifecycle")
+    if life.get("graduated", 0) <= 0:
+        fail("onboarding graduated zero profiles")
+    if life.get("graduated", 0) + life.get("evicted", 0) != \
+            life.get("profiles", -1):
+        fail(f"onboarding lost profiles: {life.get('graduated')} graduated "
+             f"+ {life.get('evicted')} evicted != {life.get('profiles')} "
+             "streamed")
+    if life.get("retraces", 1) != 0:
+        fail(f"gang step retraced {life.get('retraces')} times across "
+             f"{life.get('admission_waves')} admission waves — slot "
+             "admission must not invalidate the jitted step")
+    rt = record(train, "graduation.roundtrip")
+    if not rt.get("ok"):
+        fail("graduation roundtrip is not bit-exact: persisted store masks "
+             "differ from the trained profiles'")
+    if os.environ.get("BENCH_STRICT") and \
+            life.get("profiles_per_min", 0) < MIN_PROFILES_PER_MIN:
+        fail(f"onboarding {life.get('profiles_per_min')} profiles/min < "
+             f"absolute floor {MIN_PROFILES_PER_MIN} on the smoke config "
+             "(BENCH_STRICT)")
+
     print(f"check_bench: OK — admission reduction {agg['reduction']}x, "
           f"cache-hit admission {warm['bank_bytes_per_request']} B/req "
           f"(hit rate {warm['hit_rate']}), prefill occupancy "
           f"{pre['occupancy']}, {sync['syncs_per_token']} syncs/token, "
           f"decode {tp['tokens_per_s']} tok/s "
-          f"(per-token-sync baseline {base.get('tokens_per_s')})")
+          f"(per-token-sync baseline {base.get('tokens_per_s')}); "
+          f"train {tsync['syncs_per_step']} syncs/step, onboarding "
+          f"{life['graduated']}/{life['profiles']} graduated @ "
+          f"{life['profiles_per_min']} profiles/min, {life['retraces']} "
+          "gang retraces")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV lines (plus per-table headers).
                                             emits BENCH_kernels.json)
   serve             -> serve_bench         (decode tok/s + admission bytes,
                                             emits BENCH_serve.json)
+  train lifecycle   -> train_bench         (gang step + onboarding rate,
+                                            emits BENCH_train.json)
   dry-run roofline  -> roofline_report     (reads artifacts/dryrun)
 """
 from __future__ import annotations
@@ -21,11 +23,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablations, glue_sim, kernel_bench, serve_bench,
-                            table1_memory, train_time)
+                            table1_memory, train_bench, train_time)
     suites = [
         ("table1_memory", table1_memory.main),
         ("kernel_bench", kernel_bench.main),
         ("serve_bench", serve_bench.main),
+        ("train_bench", train_bench.main),
         ("train_time", train_time.main),
         ("ablations", ablations.main),
         ("glue_sim", glue_sim.main),

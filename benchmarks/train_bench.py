@@ -1,0 +1,95 @@
+"""Train bench: gang-step cost + onboarding lifecycle throughput across the
+layered training subsystem (roster / onboarding / gang-step).
+
+Runs a full onboarding pass on the CPU-runnable paper-family smoke config
+(bert + classification, the paper workload) streaming P profiles through S
+roster slots, then records what the subsystem actually did. Records emitted
+into BENCH_train.json (gated by benchmarks/check_bench.py):
+
+- gang_step.time          us per jitted slot-packed gang step (S slots x m)
+- train.host_syncs        host syncs per training step, counting metric
+                          flushes AND lifecycle EMA/graduation fetches
+                          (< 1: the host is off the per-step path)
+- onboard.lifecycle       profiles graduated/evicted, admission waves,
+                          gang-step retraces (must be 0), profiles/min
+- graduation.roundtrip    store save/load bit-exactness of a graduated
+                          profile's k-sparse masks (the train→serve loop)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import BenchWriter, bench_config, timeit
+
+
+def main(smoke: bool = False):
+    from repro.data import ProfileClassification
+    from repro.train import GraduationPolicy
+    from repro.train.onboarding import build_onboarding_run
+
+    w = BenchWriter("train")
+    S, m, seq = 4, 4, 16
+    P = 8 if smoke else 16
+    cfg = bench_config(num_labels=4, vocab=128, N=16, k=4, profiles=P)
+    policy = GraduationPolicy(min_steps=8, max_steps=20, target_acc=0.95)
+
+    # ---- gang-step cost (jitted, steady state) ---------------------------
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=P, seed=3)
+    trainer, gang = build_onboarding_run(
+        cfg, data, range(P), slots=S, per_slot=m, seq_len=seq,
+        policy=policy, lr=3e-2, log_every=10)
+    store = trainer.scheduler.store
+    batch = {k: jax.numpy.asarray(v) for k, v in trainer.loader.next().items()}
+    rng = jax.random.key(9)
+    us = timeit(lambda: trainer.step_fn(trainer.state, batch, rng)[1]["loss"],
+                iters=10, warmup=2)
+    w.emit("gang_step.time", us, slots=S, per_slot_batch=m, seq_len=seq)
+
+    # ---- full onboarding run --------------------------------------------
+    t0 = time.perf_counter()
+    trainer.run_until_drained(max_steps=5_000)
+    wall = time.perf_counter() - t0
+    st = trainer.scheduler.stats()
+    steps = max(trainer.step, 1)
+    w.emit("train.host_syncs", steps=trainer.step,
+           host_syncs=trainer.host_syncs,
+           syncs_per_step=round(trainer.host_syncs / steps, 4),
+           log_every=trainer.log_every)
+    w.emit("onboard.lifecycle", wall * 1e6,
+           profiles=P, graduated=st["graduated"], evicted=st["evicted"],
+           admission_waves=st["admission_waves"],
+           retraces=gang.trace_counter["traces"] - 1,
+           profiles_per_min=round(st["graduated"] / max(wall / 60, 1e-9), 1))
+
+    # ---- graduation roundtrip: persisted store == in-memory store --------
+    fd, path = tempfile.mkstemp(suffix=".npz")
+    os.close(fd)
+    try:
+        store.save(path)
+        from repro.core.profiles import ProfileStore
+        loaded = ProfileStore.load(path)
+        ok = loaded.profile_ids() == store.profile_ids()
+        for pid in store.profile_ids():
+            a = [np.asarray(x) for x in store.sparse_indices(pid)]
+            b = [np.asarray(x) for x in loaded.sparse_indices(pid)]
+            ok = ok and all(np.array_equal(x, y) for x, y in zip(a, b))
+    finally:
+        os.remove(path)
+    w.emit("graduation.roundtrip", ok=int(ok),
+           profiles=len(store.profile_ids()),
+           bytes_per_profile=store.bytes_per_profile())
+    w.write()
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small shapes / CI smoke")
+    main(smoke=p.parse_args().smoke)

@@ -7,6 +7,12 @@ Reduced preset runs a ~1M-param model for 120 steps on CPU (~2 min);
 
   PYTHONPATH=src python examples/train_multiprofile.py
   PYTHONPATH=src python examples/train_multiprofile.py --preset paper
+
+--onboard switches to the profile-lifecycle flow: stream P profiles
+through an S-slot roster, graduating converged profiles (binarized masks +
+per-profile head) into a serving ProfileStore:
+
+  PYTHONPATH=src python examples/train_multiprofile.py --onboard
 """
 import argparse
 import os
@@ -26,12 +32,81 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--preset", default="tiny", choices=["tiny", "paper"])
 ap.add_argument("--steps", type=int, default=120)
 ap.add_argument("--ckpt", default="/tmp/xpeft_ck")
+ap.add_argument("--onboard", action="store_true",
+                help="profile-lifecycle flow: stream P >> S profiles "
+                     "through the roster into a ProfileStore")
+ap.add_argument("--resume", action="store_true",
+                help="resume --onboard from its checkpoint dir")
+ap.add_argument("--profiles", type=int, default=12)
+ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--store-out", default="/tmp/xpeft_profiles.npz")
 args = ap.parse_args()
 
 cfg = get_config("bert-base-xpeft")
 if args.preset == "tiny":
     cfg = reduce_for_smoke(cfg).with_(num_labels=4, vocab_size=256)
 cfg = cfg.with_xpeft(max_profiles=16)
+
+
+def run_onboarding():
+    """P profiles stream through S roster slots; converged ones graduate
+    into a ProfileStore the serving stack admits from directly."""
+    from repro.train import GraduationPolicy
+    from repro.train.onboarding import build_onboarding_run
+
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=args.profiles, seed=3)
+    trainer, gang = build_onboarding_run(
+        cfg, data, range(args.profiles), slots=args.slots, per_slot=4,
+        seq_len=24, lr=3e-2,
+        policy=GraduationPolicy(min_steps=20, max_steps=60, target_acc=0.85),
+        store_path=args.store_out, ckpt_dir=args.ckpt + "_onboard",
+        ckpt_every=40, watchdog=StepWatchdog(),
+        preemption=PreemptionHandler(), log_every=20, rng=jax.random.key(1))
+    scheduler, store = trainer.scheduler, trainer.scheduler.store
+    frozen = trainer.state["frozen"]
+    if args.resume and trainer.try_resume():
+        print(f"[resume] continuing onboarding from step {trainer.step}")
+    trainer.run_until_drained(max_steps=10 * args.profiles * 60)
+
+    st = scheduler.stats()
+    print(f"done at step {trainer.step}: {st['graduated']} graduated / "
+          f"{st['evicted']} evicted over {st['admission_waves']} waves; "
+          f"gang-step traces={gang.trace_counter['traces']}, "
+          f"host syncs/step={trainer.host_syncs / max(trainer.step, 1):.3f}")
+    for g in scheduler.graduated[:6]:
+        print(f"  profile {g['pid']:3d}: slot {g['slot']} steps {g['steps']}"
+              f" ema_acc {g['ema_acc']:.3f}")
+    store.save(args.store_out)
+    print(f"store: {len(store.profile_ids())} profiles @ "
+          f"{store.bytes_per_profile()} B masks "
+          f"({store.total_bytes()} B total) -> {args.store_out}")
+
+    if not store.profile_ids():
+        print("no graduated profiles to evaluate")
+        return
+    # graduated-profile eval: hydrate masks + head back OUT of the store
+    # (the exact bytes serving admits from) and score held-out data
+    from repro.models import model as MDL
+    accs = []
+    for pid in store.profile_ids()[:4]:
+        b = data.sample(90_000 + pid, 32, 24, profile_ids=[pid] * 32)
+        wa, wb, ls, lb = store.batch_mask_weights([pid] * 32)
+        masks = {"w_a": wa, "w_b": wb, "ln_scale": ls, "ln_bias": lb}
+        hidden, _, _ = MDL.forward(frozen, jnp.asarray(b["tokens"]), cfg,
+                                   profile_masks=masks)
+        hw, hb = store.head(pid)
+        head = {"head_w": jnp.broadcast_to(hw, (32,) + hw.shape),
+                "head_b": jnp.broadcast_to(hb, (32,) + hb.shape)}
+        logits = MDL.cls_logits(frozen, hidden, cfg, head)
+        accs.append(float((jnp.argmax(logits, -1) ==
+                           jnp.asarray(b["labels"])).mean()))
+    print(f"store-hydrated held-out accuracy: {np.mean(accs):.3f}")
+
+
+if args.onboard:
+    run_onboarding()
+    raise SystemExit(0)
 
 key = jax.random.key(0)
 data = ProfileClassification(cfg.vocab_size, cfg.num_labels,

@@ -22,6 +22,22 @@ import jax
 from repro.utils import tree_paths
 
 
+def _jsonify(obj):
+    """Manifest extras must survive a JSON round-trip: lifecycle state
+    (pending-queue positions, slot→profile assignments, per-slot step
+    counts) arrives as numpy scalars/arrays from device fetches, which
+    ``json.dump`` rejects — convert recursively to native Python types."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep_last: int = 3):
         self.dir = directory
@@ -36,7 +52,7 @@ class CheckpointManager:
         async). The device->host copy is the only blocking part."""
         host_flat = {k: np.asarray(v) for k, v in tree_paths(state).items()}
         meta = {"step": int(step), "time": time.time(),
-                "extra": extra or {}}
+                "extra": _jsonify(extra or {})}
         if blocking:
             self._write(step, host_flat, meta)
         else:

@@ -30,7 +30,12 @@ class ProfileStore:
 
     # ------------------------------------------------------------------ add
     def add_profile(self, pid: int, profile_params: dict) -> None:
-        """Freeze a trained profile into its byte-level record."""
+        """Freeze a trained profile into its byte-level record.
+
+        `profile_params` carries mask logits mA/mB + adapter-LN affines,
+        and optionally a per-profile classifier head (head_w/head_b) —
+        graduated encoder profiles keep their head so serving/eval can
+        reproduce classification logits, not just masks."""
         rec = {
             "ln_scale": np.asarray(profile_params["ln_scale"], np.float16),
             "ln_bias": np.asarray(profile_params["ln_bias"], np.float16),
@@ -41,6 +46,9 @@ class ProfileStore:
         else:
             rec["mA"] = np.asarray(profile_params["mA"], np.float16)
             rec["mB"] = np.asarray(profile_params["mB"], np.float16)
+        if "head_w" in profile_params:
+            rec["head_w"] = np.asarray(profile_params["head_w"], np.float16)
+            rec["head_b"] = np.asarray(profile_params["head_b"], np.float16)
         self._rec[int(pid)] = rec
 
     # ---------------------------------------------------------------- fetch
@@ -89,6 +97,15 @@ class ProfileStore:
         wb = jnp.stack([p[3] for p in parts])
         return ia, wa, ib, wb
 
+    def head(self, pid: int):
+        """Per-profile classifier head (fp16-stored) as float32 jnp arrays,
+        or None for profiles graduated without one."""
+        rec = self._rec[int(pid)]
+        if "head_w" not in rec:
+            return None
+        return (jnp.asarray(rec["head_w"], jnp.float32),
+                jnp.asarray(rec["head_b"], jnp.float32))
+
     def ln_affines(self, pids: Iterable[int]):
         """Stacked adapter-LN affines ([R, L, b] scale, [R, L, b] bias) as
         float32 — the other half of batched admission hydration."""
@@ -100,6 +117,15 @@ class ProfileStore:
     # ------------------------------------------------------------- accounting
     def profile_ids(self):
         return sorted(self._rec)
+
+    def merge_from(self, other: "ProfileStore") -> None:
+        """Adopt another store's records (the onboarding resume path:
+        re-hydrate already-graduated profiles from the persisted store so
+        they are never re-trained)."""
+        assert (self.L, self.N, self.b, self.mask_type, self.k) == \
+            (other.L, other.N, other.b, other.mask_type, other.k), \
+            "store shape mismatch"
+        self._rec.update(other._rec)
 
     def bytes_per_profile(self, include_ln: bool = False) -> int:
         core = M.bytes_per_profile(self.N, self.L, self.mask_type)
@@ -133,7 +159,10 @@ class ProfileStore:
         meta = json.loads(str(z["__meta__"]))
         store = cls(meta["L"], meta["N"], meta["b"], meta["mask_type"], meta["k"])
         for pid in meta["pids"]:
+            # records carry a variable key set (optional per-profile heads):
+            # adopt every "<pid>:<key>" entry rather than a fixed tuple
+            prefix = f"{pid}:"
             store._rec[int(pid)] = {
-                k: z[f"{pid}:{k}"] for k in ("mA", "mB", "ln_scale", "ln_bias")
-            }
+                key[len(prefix):]: z[key] for key in z.files
+                if key.startswith(prefix)}
         return store

@@ -48,6 +48,25 @@ class StepWatchdog:
             self.slow_steps += 1
         return slow
 
+    def window_end(self, n_steps: int, elapsed: float) -> bool:
+        """Attribute a flushed window's wall time evenly across its steps.
+
+        With async dispatch the per-step device time is only observable at
+        the sync boundary (the trainer buffers metrics between log /
+        checkpoint flushes), so the watchdog scores the window's per-step
+        AVERAGE against the trailing median. Returns True if the window
+        straggled; `slow_steps` then counts the whole window."""
+        if n_steps <= 0:
+            return False
+        per_step = elapsed / n_steps
+        hist = self._durations[-self.window:]
+        slow = bool(hist) and \
+            per_step > self.deadline_factor * float(np.median(hist))
+        self._durations.extend([per_step] * n_steps)
+        if slow:
+            self.slow_steps += n_steps
+        return slow
+
     @property
     def median(self) -> float:
         return float(np.median(self._durations)) if self._durations else 0.0

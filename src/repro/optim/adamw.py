@@ -38,6 +38,86 @@ def clip_by_global_norm(grads, max_norm: float):
     return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
 
 
+def adamw_init_rows(params, num_rows: int) -> dict:
+    """Row-packed optimizer state for slot-axis tables (train roster).
+
+    Moments mirror the ``[S, ...]`` param tables exactly (the slot axis is
+    just axis 0 of every leaf), but ``step`` is PER ROW so bias correction
+    restarts from zero when a slot is evicted and re-admitted for a new
+    profile — a freshly admitted profile must not inherit the previous
+    occupant's Adam schedule position.
+    """
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((num_rows,), jnp.int32)}
+
+
+def _bcast_rows(x, like):
+    """Broadcast a per-row [S] vector over a [S, ...] leaf."""
+    return x.reshape((x.shape[0],) + (1,) * (like.ndim - 1))
+
+
+def clip_by_row_norm(grads, max_norm: float):
+    """Per-row global-norm clip over slot-packed grads (axis 0 = slot).
+
+    Each row is clipped against its OWN norm across all leaves, so one
+    slot's gradient spike never rescales another slot's update — the
+    isolation property the roster gang step relies on (a global clip would
+    couple slot trajectories through the shared norm).
+    """
+    sq = [jnp.sum(jnp.square(g.astype(jnp.float32)),
+                  axis=tuple(range(1, g.ndim)))
+          for g in jax.tree.leaves(grads)]
+    gn = jnp.sqrt(sum(sq))                                   # [S]
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    clipped = jax.tree.map(
+        lambda g: g * _bcast_rows(scale, g).astype(g.dtype), grads)
+    return clipped, gn
+
+
+def adamw_update_rows(grads, opt_state, params, active, *, lr, b1=0.9,
+                      b2=0.999, eps=1e-8, weight_decay=0.0):
+    """Slot-packed AdamW: every leaf is [S, ...]; ``active`` is a [S] bool.
+
+    Rows where ``active`` is False keep params AND moments bit-identical —
+    a zero grad through plain Adam would still decay m/v and advance bias
+    correction, silently perturbing a parked slot. Per-row ``step`` only
+    advances for active rows.
+    """
+    step = opt_state["step"] + active.astype(jnp.int32)
+    lr_t = lr(step) if callable(lr) else lr
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        # inactive rows have step 0; clamp so the debias denom never hits
+        # zero (their values are discarded by the where below anyway)
+        s = _bcast_rows(jnp.maximum(step, 1).astype(jnp.float32), g)
+        mhat = m_new / (1 - b1 ** s)
+        vhat = v_new / (1 - b2 ** s)
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        lt = _bcast_rows(lr_t, g) if getattr(lr_t, "ndim", 0) else lr_t
+        p_new = (p.astype(jnp.float32) - lt * delta).astype(p.dtype)
+        a = _bcast_rows(active, g)
+        return (jnp.where(a, p_new, p), jnp.where(a, m_new, m),
+                jnp.where(a, v_new, v))
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
 def adamw_update(grads, opt_state, params, *, lr, b1=0.9, b2=0.999,
                  eps=1e-8, weight_decay=0.0):
     """Returns (new_params, new_opt_state). lr may be a schedule or scalar."""

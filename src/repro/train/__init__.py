@@ -2,6 +2,17 @@ from repro.train.steps import (  # noqa: F401
     init_train_state,
     init_xpeft_trainable,
     lm_loss,
+    make_gang_step,
     make_train_step,
+)
+from repro.train.roster import (  # noqa: F401
+    Roster,
+    init_roster_state,
+)
+from repro.train.onboarding import (  # noqa: F401
+    GraduationPolicy,
+    OnboardingScheduler,
+    OnboardingTrainer,
+    RosterBatcher,
 )
 from repro.train.trainer import Trainer  # noqa: F401

@@ -1,0 +1,288 @@
+"""Profile onboarding: stream P >> S profiles through the training roster
+and graduate converged ones into the serving `ProfileStore`.
+
+This is the training-side mirror of the PR-2 serving split:
+
+- `train/roster.py`      — device-resident slot bank (the SlotState analogue)
+- `RosterBatcher`        — deterministic per-slot batch assembly from any
+                           profile-conditioned data source
+- `OnboardingScheduler`  — host-side lifecycle: pending queue, slot→profile
+                           assignment, convergence polling at sync cadence,
+                           graduation (binarize masks → byte-level store
+                           record) and eviction
+- `OnboardingTrainer`    — Trainer subclass driving the jitted gang step;
+                           all lifecycle work happens in `on_sync`, so the
+                           hot loop never blocks on the host
+
+Graduation closes the train→serve loop: the store record is written through
+`ProfileStore.add_profile` (the same binarize/pack path serving admission
+hydrates from), so a graduated profile is immediately admittable by
+`ServeEngine` with bit-identical k-sparse masks.
+"""
+from __future__ import annotations
+
+import os
+from collections import deque
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+import jax
+
+from repro.core.profiles import ProfileStore
+from repro.train.roster import Roster
+from repro.train.trainer import Trainer
+
+
+@dataclass
+class GraduationPolicy:
+    """When a slot's occupant is done training.
+
+    A slot graduates once it has trained `min_steps` AND its debiased EMA
+    crosses a target (`target_loss` and/or `target_acc` — either suffices).
+    At `max_steps` an unconverged profile is force-graduated, or evicted
+    (dropped, recorded) when `evict_at_max` is set.
+    """
+    min_steps: int = 30
+    max_steps: int = 300
+    ema_decay: float = 0.9
+    target_loss: Optional[float] = None
+    target_acc: Optional[float] = None
+    evict_at_max: bool = False
+
+
+class RosterBatcher:
+    """Assembles [S, m, ...] gang batches: row s carries slot s's profile.
+
+    Each slot's rows are sampled with that slot's profile id; free slots get
+    a placeholder id (their loss/grads are masked by the roster's `active`
+    mask, and their rows occupy fixed example indices, so occupied slots'
+    data streams are independent of admission activity elsewhere).
+    """
+
+    def __init__(self, source, capacity: int, per_slot: int, seq_len: int):
+        self.source = source
+        self.S = capacity
+        self.m = per_slot
+        self.seq_len = seq_len
+        self.step = 0
+        self.slot_pids: List[Optional[int]] = [None] * capacity
+
+    def next(self) -> dict:
+        pids = np.repeat([0 if p is None else int(p)
+                          for p in self.slot_pids], self.m)
+        b = self.source.sample(self.step, self.S * self.m, self.seq_len,
+                               profile_ids=pids)
+        self.step += 1
+        return {k: np.asarray(v).reshape((self.S, self.m) + v.shape[1:])
+                for k, v in b.items()}
+
+    # -- checkpointable position ------------------------------------------
+    def state_dict(self) -> dict:
+        return {"step": self.step}
+
+    def load_state_dict(self, s: dict) -> None:
+        self.step = int(s["step"])
+
+
+class OnboardingScheduler:
+    """Host-side lifecycle over (roster state, store): admit pending
+    profiles into free slots, poll convergence at sync cadence, graduate or
+    evict. Never touches the device outside `Roster`'s jitted ops and the
+    single `metrics()` fetch per poll."""
+
+    def __init__(self, roster: Roster, store: ProfileStore,
+                 policy: GraduationPolicy, pending_profiles):
+        self.roster = roster
+        self.store = store
+        self.policy = policy
+        self.pending = deque(int(p) for p in pending_profiles)
+        self.slot_pid: List[Optional[int]] = [None] * roster.capacity
+        self.graduated: List[dict] = []
+        self.evicted: List[dict] = []
+        self.admission_waves = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def fill(self, rstate: dict, batcher: RosterBatcher) -> dict:
+        """Admit pending profiles into every free slot (one wave)."""
+        admitted = False
+        for slot in range(self.roster.capacity):
+            if self.slot_pid[slot] is None and self.pending:
+                pid = self.pending.popleft()
+                rstate = self.roster.admit(rstate, slot, pid)
+                self.slot_pid[slot] = pid
+                batcher.slot_pids[slot] = pid
+                admitted = True
+        if admitted:
+            self.admission_waves += 1
+        return rstate
+
+    def poll(self, rstate: dict, batcher: RosterBatcher) -> dict:
+        """Sync-cadence pass: ONE device fetch, then graduate/evict/refill."""
+        met = self.roster.metrics(rstate, self.policy.ema_decay)
+        pol = self.policy
+        for slot, pid in enumerate(self.slot_pid):
+            if pid is None:
+                continue
+            steps = int(met["slot_step"][slot])
+            if steps < pol.min_steps:
+                continue
+            converged = (
+                (pol.target_loss is not None
+                 and met["ema_loss"][slot] <= pol.target_loss) or
+                (pol.target_acc is not None
+                 and met["ema_acc"][slot] >= pol.target_acc))
+            if converged or steps >= pol.max_steps:
+                if converged or not pol.evict_at_max:
+                    rstate = self.graduate(rstate, slot, met)
+                else:
+                    rstate = self.evict(rstate, slot, met)
+                batcher.slot_pids[slot] = None
+        return self.fill(rstate, batcher)
+
+    def _record(self, slot: int, met: dict) -> dict:
+        return {"pid": int(self.slot_pid[slot]), "slot": int(slot),
+                "steps": int(met["slot_step"][slot]),
+                "ema_loss": round(float(met["ema_loss"][slot]), 6),
+                "ema_acc": round(float(met["ema_acc"][slot]), 6)}
+
+    def graduate(self, rstate: dict, slot: int, met: dict) -> dict:
+        """Freeze the slot's trained row into the serving store (binarized,
+        byte-level) and free the slot."""
+        pid = self.slot_pid[slot]
+        self.store.add_profile(pid, self.roster.slot_params(rstate, slot))
+        self.graduated.append(self._record(slot, met))
+        rstate = self.roster.evict(rstate, slot)
+        self.slot_pid[slot] = None
+        return rstate
+
+    def evict(self, rstate: dict, slot: int, met: dict) -> dict:
+        """Drop an unconverged occupant without graduating it."""
+        self.evicted.append(self._record(slot, met))
+        rstate = self.roster.evict(rstate, slot)
+        self.slot_pid[slot] = None
+        return rstate
+
+    def finished(self) -> bool:
+        return not self.pending and all(p is None for p in self.slot_pid)
+
+    def stats(self) -> dict:
+        return {"pending": len(self.pending),
+                "in_training": sum(p is not None for p in self.slot_pid),
+                "graduated": len(self.graduated),
+                "evicted": len(self.evicted),
+                "admission_waves": self.admission_waves}
+
+    # -------------------------------------------------------------- persist
+    def state_dict(self) -> dict:
+        return {"pending": [int(p) for p in self.pending],
+                "slot_pid": [None if p is None else int(p)
+                             for p in self.slot_pid],
+                "graduated": list(self.graduated),
+                "evicted": list(self.evicted),
+                "admission_waves": int(self.admission_waves)}
+
+    def load_state_dict(self, s: dict) -> None:
+        self.pending = deque(int(p) for p in s["pending"])
+        self.slot_pid = [None if p is None else int(p)
+                         for p in s["slot_pid"]]
+        self.graduated = list(s["graduated"])
+        self.evicted = list(s["evicted"])
+        self.admission_waves = int(s["admission_waves"])
+
+
+class OnboardingTrainer(Trainer):
+    """Drives the gang step; lifecycle runs ONLY at host-sync boundaries.
+
+    state is {"frozen": ..., "roster": ...}; `loader` is a RosterBatcher.
+    The scheduler's host state (pending queue position, slot→profile
+    assignment) rides in the checkpoint manifest, the roster's device state
+    in the checkpoint arrays, and graduated profiles in the store file at
+    `store_path` — so `--resume` restarts mid-onboarding without
+    re-training anything already graduated.
+    """
+
+    def __init__(self, step_fn, state, batcher: RosterBatcher,
+                 scheduler: OnboardingScheduler, *,
+                 store_path: Optional[str] = None, **kw):
+        super().__init__(step_fn, state, batcher, **kw)
+        self.scheduler = scheduler
+        self.store_path = store_path
+        self.state["roster"] = scheduler.fill(self.state["roster"],
+                                              self.loader)
+
+    # ----------------------------------------------------------------- hooks
+    def on_sync(self, recs: list) -> None:
+        n_grad = len(self.scheduler.graduated)
+        self.state["roster"] = self.scheduler.poll(self.state["roster"],
+                                                   self.loader)
+        # the poll's EMA fetch + each graduation's slot-row fetch are
+        # device→host transfers too: count them so syncs/step reports the
+        # subsystem's TOTAL host traffic, not just metric flushes
+        self.host_syncs += 1 + (len(self.scheduler.graduated) - n_grad)
+
+    def should_stop(self) -> bool:
+        return self.scheduler.finished()
+
+    # --------------------------------------------------------------- persist
+    def extra_state(self) -> dict:
+        extra = super().extra_state()
+        extra["onboarding"] = self.scheduler.state_dict()
+        return extra
+
+    def restore_extra(self, extra: dict) -> None:
+        super().restore_extra(extra)
+        if "onboarding" in extra:
+            self.scheduler.load_state_dict(extra["onboarding"])
+            for slot in range(self.loader.S):
+                self.loader.slot_pids[slot] = self.scheduler.slot_pid[slot]
+        if self.store_path and os.path.exists(self.store_path):
+            self.scheduler.store.merge_from(ProfileStore.load(self.store_path))
+
+    def checkpoint(self, blocking=True):
+        if self.mgr and self.store_path:
+            self.scheduler.store.save(self.store_path)
+        super().checkpoint(blocking=blocking)
+
+    def run_until_drained(self, max_steps: int = 100_000) -> list:
+        """Train until every pending profile has graduated (or been
+        evicted); `max_steps` is the runaway backstop."""
+        return self.run(max_steps)
+
+
+def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
+                         per_slot: int = 4, seq_len: int = 16,
+                         policy: Optional[GraduationPolicy] = None,
+                         lr: float = 1e-3, ema_decay: float = 0.9,
+                         seed: int = 0, frozen=None, **trainer_kw):
+    """Wire the whole lifecycle stack — frozen PLM, roster, gang step,
+    batcher, store, scheduler, trainer — the one assembly the launcher,
+    example, and bench all share. Returns (trainer, gang_step_fn); the
+    un-jitted gang fn carries `.trace_counter`. Reach the pieces via
+    `trainer.scheduler` (store/roster) and `trainer.state` (frozen/roster
+    state)."""
+    import jax as _jax
+
+    from repro.models import init_lm
+    from repro.train.roster import init_roster_state
+    from repro.train.steps import make_gang_step
+
+    key = _jax.random.key(seed)
+    kf, kr = _jax.random.split(key)
+    if frozen is None:
+        frozen = init_lm(kf, cfg)
+    roster = Roster(cfg, _jax.random.key(seed + 2), slots)
+    state = {"frozen": frozen,
+             "roster": init_roster_state(kr, cfg, slots)}
+    policy = policy or GraduationPolicy(ema_decay=ema_decay)
+    # the step's EMA decay and the policy's debias decay must agree
+    gang = make_gang_step(cfg, lr=lr, ema_decay=policy.ema_decay)
+    batcher = RosterBatcher(source, slots, per_slot, seq_len)
+    xp = cfg.xpeft
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k)
+    scheduler = OnboardingScheduler(roster, store, policy, pending)
+    trainer_kw.setdefault("rng", _jax.random.key(seed + 1))
+    trainer = OnboardingTrainer(_jax.jit(gang), state, batcher, scheduler,
+                                **trainer_kw)
+    return trainer, gang

@@ -1,0 +1,143 @@
+"""Device-resident roster of profile-training slots.
+
+The training-side counterpart of `serve/slots.py`: a fixed-capacity bank of
+S slots, each holding one onboarding profile's trainables (mask-table row +
+optional per-profile head row), its Adam moments, and its convergence EMAs —
+all packed along a leading slot axis as DEVICE arrays, gated by an
+``active`` mask. `max_profiles` stops being a training-run constant:
+P >> S profiles stream through the S slots.
+
+Invariants the onboarding layer relies on:
+- admission/eviction are jitted scatters taking the slot index as a traced
+  scalar, so cycling profiles through slots never retraces anything — the
+  gang step (train/steps.py `make_gang_step`) sees static shapes and traces
+  exactly once per run;
+- a freshly admitted slot is bit-identical to a from-scratch init for that
+  profile: params are re-derived from `fold_in(base_key, profile_id)`,
+  moments and EMAs are zeroed, per-slot Adam step restarts at 0;
+- eviction only clears ``active`` (+ EMAs); parked rows are dead weight the
+  gang step masks out of both grads and optimizer updates, so neighbouring
+  slots' trajectories are unaffected by any admit/evict sequence;
+- convergence signals (loss/accuracy EMAs, per-slot step counts) live on
+  device and cross to the host in ONE transfer at `metrics()` — called at
+  the trainer's sync cadence, never per step.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+from repro.optim import adamw_init_rows
+
+
+def init_slot_trainable(key, cfg) -> dict:
+    """One slot row (no slot axis): mask-table row + optional head row."""
+    k1, k2 = jax.random.split(key)
+    row = {"table": M.init_profile_params(k1, cfg.num_layers,
+                                          cfg.xpeft.num_adapters,
+                                          cfg.xpeft.bottleneck)}
+    if cfg.num_labels:
+        row["heads"] = {
+            "head_w": 0.02 * jax.random.normal(
+                k2, (cfg.d_model, cfg.num_labels), jnp.float32),
+            "head_b": jnp.zeros((cfg.num_labels,), jnp.float32),
+        }
+    return row
+
+
+def init_roster_state(key, cfg, capacity: int) -> dict:
+    """Slot-packed roster state: every leaf has leading dim S = capacity."""
+    keys = jax.random.split(key, capacity)
+    trainable = jax.vmap(lambda k: init_slot_trainable(k, cfg))(keys)
+    return {
+        "trainable": trainable,
+        "opt": adamw_init_rows(trainable, capacity),
+        "active": jnp.zeros((capacity,), bool),
+        "slot_step": jnp.zeros((capacity,), jnp.int32),
+        "ema_loss": jnp.zeros((capacity,), jnp.float32),
+        "ema_acc": jnp.zeros((capacity,), jnp.float32),
+        "ema_count": jnp.zeros((capacity,), jnp.int32),
+    }
+
+
+class Roster:
+    """Jitted slot lifecycle ops over a roster state pytree.
+
+    The state itself is owned by the caller (the trainer checkpoints it as
+    part of the train state); this class holds the config, the base RNG key
+    profiles are deterministically initialized from, and the three jitted
+    ops (`_fresh` init, `_admit` scatter, `_evict` mask-clear).
+    """
+
+    def __init__(self, cfg, base_key, capacity: int):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.base_key = base_key
+        self._fresh = jax.jit(lambda k: init_slot_trainable(k, cfg))
+
+        def admit_impl(state, slot, fresh):
+            set_row = lambda t, r: t.at[slot].set(
+                jnp.asarray(r).astype(t.dtype))
+            zero_row = lambda t: t.at[slot].set(0)
+            return {
+                "trainable": jax.tree.map(set_row, state["trainable"], fresh),
+                "opt": {"m": jax.tree.map(zero_row, state["opt"]["m"]),
+                        "v": jax.tree.map(zero_row, state["opt"]["v"]),
+                        "step": state["opt"]["step"].at[slot].set(0)},
+                "active": state["active"].at[slot].set(True),
+                "slot_step": state["slot_step"].at[slot].set(0),
+                "ema_loss": state["ema_loss"].at[slot].set(0.0),
+                "ema_acc": state["ema_acc"].at[slot].set(0.0),
+                "ema_count": state["ema_count"].at[slot].set(0),
+            }
+
+        def evict_impl(state, slot):
+            out = dict(state)
+            out["active"] = state["active"].at[slot].set(False)
+            return out
+
+        self._admit = jax.jit(admit_impl)
+        self._evict = jax.jit(evict_impl)
+
+    # ------------------------------------------------------------- lifecycle
+    def profile_key(self, pid: int):
+        return jax.random.fold_in(self.base_key, int(pid))
+
+    def admit(self, state: dict, slot: int, pid: int) -> dict:
+        """Admit profile `pid` into `slot`: fresh deterministic init row,
+        zeroed moments/EMAs. One jitted scatter; slot is a traced scalar."""
+        fresh = self._fresh(self.profile_key(pid))
+        return self._admit(state, jnp.int32(slot), fresh)
+
+    def evict(self, state: dict, slot: int) -> dict:
+        """Deactivate `slot`; parked rows stay in place until re-admission."""
+        return self._evict(state, jnp.int32(slot))
+
+    # ------------------------------------------------------------ host views
+    def metrics(self, state: dict, ema_decay: float) -> Dict[str, np.ndarray]:
+        """ONE device→host transfer of the convergence signals. EMAs are
+        debiased by their update count (EMA starts at 0 on admission)."""
+        active, steps, el, ea, cnt = jax.device_get(
+            (state["active"], state["slot_step"], state["ema_loss"],
+             state["ema_acc"], state["ema_count"]))
+        debias = 1.0 - np.power(ema_decay, np.maximum(cnt, 1))
+        return {"active": np.asarray(active),
+                "slot_step": np.asarray(steps),
+                "ema_loss": np.asarray(el) / debias,
+                "ema_acc": np.asarray(ea) / debias,
+                "ema_count": np.asarray(cnt)}
+
+    def slot_params(self, state: dict, slot: int) -> dict:
+        """Host copy of one slot's trainables, flattened to the profile
+        record shape `ProfileStore.add_profile` expects (mA/mB/ln_* [+head])."""
+        row = jax.tree.map(lambda t: t[slot], state["trainable"])
+        host = jax.device_get(row)
+        out = {k: np.asarray(v) for k, v in host["table"].items()}
+        if "heads" in host:
+            out["head_w"] = np.asarray(host["heads"]["head_w"])
+            out["head_b"] = np.asarray(host["heads"]["head_b"])
+        return out

@@ -25,7 +25,8 @@ from repro.core import masks as M
 from repro.core import xpeft as XP
 from repro.core.adapters import init_adapter_bank
 from repro.models import model as MDL
-from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim import (adamw_init, adamw_update, adamw_update_rows,
+                         clip_by_global_norm, clip_by_row_norm)
 from repro.utils import merge_trees
 
 
@@ -217,6 +218,98 @@ def loss_for_batch(frozen, trainable, batch, cfg, mode, rng, training=True):
 # ----------------------------------------------------------------------------
 # Step factory
 # ----------------------------------------------------------------------------
+
+def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
+                   ema_decay: float = 0.9):
+    """Slot-packed gang step for the onboarding roster.
+
+    One jitted update trains every ACTIVE slot on its own per-slot
+    micro-batch: `batch["tokens"]` is [S, m, T] (row s belongs to slot s),
+    labels [S, m] for classification or [S, m, T] for LM. Slot isolation is
+    exact and bitwise:
+
+    - the total loss is the SUM of per-slot mean losses (never normalized
+      by the active count), so slot j's grads are independent of how many
+      other slots are occupied;
+    - grads are clipped per slot row (`clip_by_row_norm`), not globally;
+    - inactive slots contribute zero loss, and `adamw_update_rows` masks
+      their params AND moments, so a parked slot's trajectory is untouched
+      by any admit/evict activity elsewhere.
+
+    Convergence EMAs (loss/accuracy) update on device inside the step;
+    the host reads them via `Roster.metrics` at sync cadence only.
+    Returns step({"frozen", "roster"}, batch, rng) -> (state, metrics),
+    with a `.trace_counter` dict tests/benches use to assert the step
+    traces exactly once across admission waves.
+    """
+    counter = {"traces": 0}
+
+    def step(state, batch, rng):
+        counter["traces"] += 1
+        frozen, rstate = state["frozen"], state["roster"]
+        S, m = batch["tokens"].shape[:2]
+        toks = batch["tokens"].reshape(S * m, -1)
+        slot_ids = jnp.repeat(jnp.arange(S), m)
+        active = rstate["active"]
+
+        def loss_fn(trainable):
+            prof = jax.tree.map(lambda t: t[slot_ids], trainable["table"])
+            w_a, w_b = XP.profile_mask_weights(prof, cfg.xpeft, key=rng,
+                                               training=True)
+            pmasks = {"w_a": w_a, "w_b": w_b, "ln_scale": prof["ln_scale"],
+                      "ln_bias": prof["ln_bias"]}
+            hidden, _, _ = MDL.forward(frozen, toks, cfg,
+                                       profile_masks=pmasks)
+            if cfg.num_labels:
+                head = jax.tree.map(lambda t: t[slot_ids],
+                                    trainable["heads"])
+                logits = MDL.cls_logits(frozen, hidden, cfg, head)
+                labels = batch["labels"].reshape(S * m)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, labels[:, None], axis=-1)[:, 0]
+                per_ex = lse - gold
+                slot_acc = (jnp.argmax(logits, -1) == labels) \
+                    .astype(jnp.float32).reshape(S, m).mean(axis=1)
+            else:
+                logits = MDL.lm_logits(frozen, hidden, cfg)
+                labels = batch["labels"].reshape(S * m, -1)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, labels[..., None], axis=-1)[..., 0]
+                per_ex = (lse - gold).mean(axis=-1)
+                slot_acc = jnp.zeros((S,), jnp.float32)
+            slot_loss = per_ex.reshape(S, m).mean(axis=1)
+            total = jnp.sum(jnp.where(active, slot_loss, 0.0))
+            return total, (slot_loss, slot_acc)
+
+        (_, (slot_loss, slot_acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(rstate["trainable"])
+        grads, gnorm = clip_by_row_norm(grads, clip_norm)
+        new_params, new_opt = adamw_update_rows(
+            grads, rstate["opt"], rstate["trainable"], active, lr=lr,
+            weight_decay=weight_decay)
+        d = ema_decay
+        ema = lambda old, x: jnp.where(active, d * old + (1 - d) * x, old)
+        new_r = {
+            "trainable": new_params, "opt": new_opt, "active": active,
+            "slot_step": rstate["slot_step"] + active.astype(jnp.int32),
+            "ema_loss": ema(rstate["ema_loss"], slot_loss),
+            "ema_acc": ema(rstate["ema_acc"], slot_acc),
+            "ema_count": rstate["ema_count"] + active.astype(jnp.int32),
+        }
+        af = active.astype(jnp.float32)
+        n_act = jnp.maximum(af.sum(), 1.0)
+        metrics = {"loss": (slot_loss * af).sum() / n_act,
+                   "grad_norm": (gnorm * af).sum() / n_act,
+                   "active_slots": af.sum()}
+        if cfg.num_labels:
+            metrics["accuracy"] = (slot_acc * af).sum() / n_act
+        return {"frozen": frozen, "roster": new_r}, metrics
+
+    step.trace_counter = counter
+    return step
+
 
 def make_train_step(cfg, mode: str = "xpeft", *, lr=1e-3, weight_decay=0.0,
                     clip_norm: float = 1.0, accum: int = 1):

@@ -1,13 +1,28 @@
-"""Trainer loop: checkpoint hooks, straggler watchdog, preemption, resume.
+"""Trainer loop driver: checkpoint hooks, straggler watchdog, preemption,
+resume, and host syncs ONLY at log/checkpoint cadence.
 
 Production posture: the loop is restartable at any step (data position is
 part of the checkpoint), SIGTERM triggers checkpoint-and-exit, slow steps
 are recorded and fed to the data re-balancer.
+
+Metrics stay on DEVICE per step — the loop buffers the (async) metric trees
+and fetches them in ONE device→host transfer at each sync boundary
+(`log_every`, checkpoint, end of run). Straggler detection moves with it:
+per-step device time is unobservable without a per-step block, so the
+watchdog scores each flushed WINDOW's per-step average wall time
+(`StepWatchdog.window_end`) and flags the whole window. Subclasses hook
+the boundaries:
+
+- `next_batch()`      — how a step's batch is assembled
+- `on_sync(recs)`     — runs after every flush with the new host records
+                        (onboarding admits/evicts/graduates here)
+- `should_stop()`     — early-exit check (e.g. onboarding queue drained)
+- `extra_state()` / `restore_extra()` — manifest payload for exact resume
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
@@ -33,6 +48,11 @@ class Trainer:
         self.log_every = log_every
         self.rng = rng if rng is not None else jax.random.key(0)
         self.history = []
+        # buffered (step, device-metric-tree) tuples since the last flush:
+        # nothing here blocks on the device
+        self._pending: List[tuple] = []
+        self._window_t0: Optional[float] = None
+        self.host_syncs = 0
 
     # ------------------------------------------------------------- recovery
     def try_resume(self) -> bool:
@@ -46,43 +66,97 @@ class Trainer:
         self.state = self.mgr.restore(latest, abstract)
         man = self.mgr.manifest(latest)
         self.step = man["step"]
-        self.loader.load_state_dict(man["extra"]["loader"])
-        if "rng" in man["extra"]:
-            self.rng = jax.random.wrap_key_data(
-                jax.numpy.asarray(man["extra"]["rng"], dtype="uint32"))
+        self.restore_extra(man["extra"])
         return True
+
+    def extra_state(self) -> dict:
+        """Manifest payload for exact resume (subclasses extend)."""
+        rng_data = np.asarray(jax.random.key_data(self.rng)).tolist()
+        return {"loader": self.loader.state_dict(), "rng": rng_data}
+
+    def restore_extra(self, extra: dict) -> None:
+        self.loader.load_state_dict(extra["loader"])
+        if "rng" in extra:
+            self.rng = jax.random.wrap_key_data(
+                jax.numpy.asarray(extra["rng"], dtype="uint32"))
 
     def checkpoint(self, blocking=True):
         if self.mgr:
-            rng_data = np.asarray(jax.random.key_data(self.rng)).tolist()
+            self.flush()  # history/manifest must reflect all taken steps
             self.mgr.save(self.step, self.state, blocking=blocking,
-                          extra={"loader": self.loader.state_dict(),
-                                 "rng": rng_data})
+                          extra=self.extra_state())
+
+    # ----------------------------------------------------------------- hooks
+    def next_batch(self) -> dict:
+        return {k: jax.numpy.asarray(v)
+                for k, v in self.loader.next().items()}
+
+    def on_sync(self, recs: list) -> None:
+        """Called after each metric flush with the new host records."""
+
+    def should_stop(self) -> bool:
+        return False
+
+    # ----------------------------------------------------------------- sync
+    def flush(self) -> list:
+        """ONE device→host transfer for every buffered step's metrics;
+        appends the float records to `history` and returns them. The
+        transfer drains the window's queued device work, so the elapsed
+        wall time here is the window's true step time — fed to the
+        watchdog as the per-step average."""
+        if not self._pending:
+            return []
+        steps, mets = zip(*self._pending)
+        self._pending = []
+        host = jax.device_get(list(mets))
+        self.host_syncs += 1
+        slow = False
+        if self._window_t0 is not None:
+            slow = self.watchdog.window_end(
+                len(steps), time.perf_counter() - self._window_t0)
+            self._window_t0 = None
+        recs = []
+        for s, mh in zip(steps, host):
+            rec = {k: float(v) for k, v in mh.items()}
+            rec["step"] = s
+            rec["straggler"] = slow
+            recs.append(rec)
+        self.history.extend(recs)
+        return recs
+
+    def sync(self) -> list:
+        recs = self.flush()
+        if recs:
+            self.on_sync(recs)
+        return recs
 
     # ----------------------------------------------------------------- loop
     def run(self, num_steps: int) -> list:
         for _ in range(num_steps):
             if self.preemption and self.preemption.preempted():
+                self.sync()
                 self.checkpoint(blocking=True)
                 break
-            batch = {k: jax.numpy.asarray(v)
-                     for k, v in self.loader.next().items()}
+            if self.should_stop():
+                break
+            batch = self.next_batch()
             self.rng, sub = jax.random.split(self.rng)
-            self.watchdog.step_start()
+            if self._window_t0 is None:
+                self._window_t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch, sub)
-            jax.block_until_ready(metrics["loss"])
-            slow = self.watchdog.step_end()
             self.step += 1
-            rec = {k: float(v) for k, v in metrics.items()}
-            rec["step"] = self.step
-            rec["straggler"] = slow
-            self.history.append(rec)
+            self._pending.append((self.step, metrics))
             if self.step % self.log_every == 0:
-                print(f"step {self.step} " +
-                      " ".join(f"{k}={v:.4f}" for k, v in rec.items()
-                               if isinstance(v, float)))
+                recs = self.sync()
+                if recs:
+                    rec = recs[-1]
+                    print(f"step {self.step} " +
+                          " ".join(f"{k}={v:.4f}" for k, v in rec.items()
+                                   if isinstance(v, float)))
             if self.mgr and self.step % self.ckpt_every == 0:
+                self.sync()
                 self.checkpoint(blocking=False)
+        self.sync()
         if self.mgr:
             self.mgr.wait()
         return self.history

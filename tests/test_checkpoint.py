@@ -43,6 +43,24 @@ def test_async_save(tmp_path):
     assert mgr.all_steps() == [1]
 
 
+def test_manifest_roundtrips_lifecycle_state(tmp_path):
+    """Onboarding lifecycle state (numpy ints/arrays from device fetches:
+    pending-queue positions, slot→profile maps, per-slot step counts) must
+    survive the JSON manifest — json.dump rejects raw numpy types."""
+    mgr = CheckpointManager(str(tmp_path))
+    extra = {"onboarding": {
+        "pending": np.arange(3, dtype=np.int64),
+        "slot_pid": [np.int32(7), None],
+        "slot_steps": [np.int32(12), np.int32(0)],
+        "waves": np.int64(2)}}
+    mgr.save(5, _state(), extra=extra)
+    man = mgr.manifest(5)["extra"]["onboarding"]
+    assert man["pending"] == [0, 1, 2]
+    assert man["slot_pid"] == [7, None]
+    assert man["slot_steps"] == [12, 0]
+    assert man["waves"] == 2
+
+
 def test_partial_write_invisible(tmp_path):
     """A .tmp dir from a crashed writer is never listed as a checkpoint."""
     mgr = CheckpointManager(str(tmp_path))

@@ -25,6 +25,19 @@ def test_watchdog_flags_slow_steps():
     assert abs(wd.median - 1.0) < 1e-6
 
 
+def test_watchdog_window_attribution():
+    """Buffered-metrics trainers observe device time only at sync
+    boundaries: window_end spreads a window's wall time over its steps and
+    flags the whole window against the trailing median."""
+    wd = StepWatchdog(deadline_factor=2.0)
+    assert not wd.window_end(4, 4.0)   # no history yet -> baseline 1.0/step
+    assert wd.slow_steps == 0 and abs(wd.median - 1.0) < 1e-9
+    assert wd.window_end(2, 10.0)      # 5.0/step > 2x median 1.0
+    assert wd.slow_steps == 2
+    assert not wd.window_end(0, 1.0)   # empty window is a no-op
+    assert wd.slow_steps == 2
+
+
 def test_preemption_checkpoints_and_stops(tmp_path):
     from repro.configs import get_config, reduce_for_smoke
     from repro.data import MarkovLM

@@ -1,0 +1,249 @@
+"""Onboarding lifecycle: P >> S streaming, train→serve graduation parity
+(bit-for-bit masks through ServeEngine admission, classifier logits from
+the persisted store), resume mid-onboarding, and the trainer's buffered
+host-sync cadence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import masks as M
+from repro.core.profiles import ProfileStore
+from repro.data import MarkovLM, ProfileClassification
+from repro.models import model as MDL
+from repro.train import (GraduationPolicy, Trainer, init_train_state,
+                         make_train_step)
+from repro.train.onboarding import build_onboarding_run
+
+
+def _cls_cfg(vocab=64):
+    return reduce_for_smoke(get_config("bert-base-xpeft")).with_(
+        num_labels=4, vocab_size=vocab).with_xpeft(num_adapters=8, k=2)
+
+
+def _build(cfg, source, n_profiles, *, S=2, m=2, seq=12, policy=None,
+           log_every=5, **trainer_kw):
+    policy = policy or GraduationPolicy(min_steps=4, max_steps=8,
+                                        target_acc=2.0)  # force max_steps
+    trainer, gang = build_onboarding_run(
+        cfg, source, range(n_profiles), slots=S, per_slot=m, seq_len=seq,
+        policy=policy, lr=5e-2, log_every=log_every,
+        rng=jax.random.key(1), **trainer_kw)
+    return (trainer, gang, trainer.scheduler.roster, trainer.scheduler.store,
+            trainer.state["frozen"])
+
+
+# ----------------------------------------------------------- streaming P>>S
+
+def test_stream_profiles_through_roster():
+    cfg = _cls_cfg()
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=5, seed=5)
+    trainer, gang, _, store, _ = _build(cfg, data, 5)
+    trainer.run_until_drained(max_steps=500)
+    st = trainer.scheduler.stats()
+    assert st["graduated"] == 5 and st["evicted"] == 0
+    assert store.profile_ids() == [0, 1, 2, 3, 4]
+    assert st["admission_waves"] >= 3          # 5 profiles through 2 slots
+    assert gang.trace_counter["traces"] == 1   # zero retraces across waves
+    assert trainer.host_syncs < trainer.step   # metrics buffered on device
+
+
+def test_evict_at_max_drops_unconverged_profiles():
+    """With evict_at_max, profiles that never hit the target are dropped
+    (recorded, not graduated) and every streamed profile is accounted for."""
+    cfg = _cls_cfg()
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=3, seed=5)
+    policy = GraduationPolicy(min_steps=4, max_steps=6, target_acc=2.0,
+                              evict_at_max=True)  # unreachable target
+    trainer, _, _, store, _ = _build(cfg, data, 3, policy=policy)
+    trainer.run_until_drained(max_steps=300)
+    st = trainer.scheduler.stats()
+    assert st["graduated"] == 0 and st["evicted"] == 3
+    assert store.profile_ids() == []
+    assert {e["pid"] for e in trainer.scheduler.evicted} == {0, 1, 2}
+
+
+# --------------------------------------------------- train→serve graduation
+
+@pytest.fixture(scope="module")
+def lm_graduated():
+    """Roster-train 2 profiles on an LM arch and graduate them."""
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    data = MarkovLM(cfg.vocab_size, 2, seed=1)
+    trainer, gang, roster, store, frozen = _build(cfg, data, 2, seq=16)
+    trainer.run_until_drained(max_steps=100)
+    assert len(trainer.scheduler.graduated) == 2
+    return cfg, frozen, roster, trainer, store
+
+
+def test_graduated_masks_roundtrip_bit_for_bit(lm_graduated, tmp_path):
+    """Trained slot -> binarize -> store -> save/load: k-sparse indices and
+    hydrated weights identical at every stage."""
+    cfg, frozen, roster, trainer, store = lm_graduated
+    store.save(str(tmp_path / "store.npz"))
+    loaded = ProfileStore.load(str(tmp_path / "store.npz"))
+    k = cfg.xpeft.k
+    for g in trainer.scheduler.graduated:
+        row = roster.slot_params(trainer.state["roster"], g["slot"])
+        bits_a = np.asarray(M.binarize(row["mA"], k))
+        ia_t = np.asarray(M.mask_indices(bits_a, k))
+        for st in (store, loaded):
+            ia, wa, ib, wb = st.sparse_indices(g["pid"])
+            np.testing.assert_array_equal(np.asarray(ia), ia_t)
+            np.testing.assert_array_equal(
+                np.asarray(ib),
+                np.asarray(M.mask_indices(M.binarize(row["mB"], k), k)))
+            assert np.all(np.asarray(wa) == 1.0 / k)
+        wa_t, _ = store.mask_weights(g["pid"])
+        np.testing.assert_array_equal(
+            np.asarray(wa_t), np.asarray(M.khot_weights_from_bits(bits_a, k)))
+
+
+def test_graduated_profile_admits_through_serve_engine(lm_graduated,
+                                                       tmp_path):
+    """The full loop: persisted store -> ServeEngine.admit -> the engine's
+    aggregated Â/B̂ equal the aggregation of the IN-TRAINING masks, and the
+    scattered LN affines equal the trained row's (fp16 store precision)."""
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, frozen, roster, trainer, store = lm_graduated
+    store.save(str(tmp_path / "store.npz"))
+    loaded = ProfileStore.load(str(tmp_path / "store.npz"))
+    eng = ServeEngine(cfg, frozen, loaded, max_slots=2, max_seq=32,
+                      sync_every=2)
+    k = cfg.xpeft.k
+    for g in trainer.scheduler.graduated:
+        pid = g["pid"]
+        req = Request(uid=pid, prompt=np.arange(5, dtype=np.int64) % 31,
+                      profile_id=pid, max_new_tokens=2)
+        assert eng.admit(req)
+        entry = eng.profile_cache.get(pid)
+        row = roster.slot_params(trainer.state["roster"], g["slot"])
+        ia = jnp.asarray(M.mask_indices(M.binarize(row["mA"], k), k))[None]
+        ib = jnp.asarray(M.mask_indices(M.binarize(row["mB"], k), k))[None]
+        w = jnp.full(ia.shape, 1.0 / k, jnp.float32)
+        a_hat, b_hat = eng._aggregate_sparse(frozen["xpeft_bank"],
+                                             ia, w, ib, w)
+        np.testing.assert_array_equal(np.asarray(entry["a_hat"]),
+                                      np.asarray(a_hat[0]))
+        np.testing.assert_array_equal(np.asarray(entry["b_hat"]),
+                                      np.asarray(b_hat[0]))
+        np.testing.assert_array_equal(
+            np.asarray(entry["ln_scale"]),
+            row["ln_scale"].astype(np.float16).astype(np.float32))
+    eng.run_until_drained()
+
+
+def test_graduated_classifier_logits_parity(tmp_path):
+    """Classification parity: logits from the PERSISTED store (masks + LN +
+    per-profile head, fp16 records) match the in-training eval forward
+    bit-for-bit on a fixed batch."""
+    cfg = _cls_cfg()
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=2, seed=5)
+    trainer, _, roster, store, frozen = _build(cfg, data, 2)
+    trainer.run_until_drained(max_steps=100)
+    store.save(str(tmp_path / "store.npz"))
+    loaded = ProfileStore.load(str(tmp_path / "store.npz"))
+    k = cfg.xpeft.k
+    B = 8
+
+    def logits_with(masks, head_w, head_b, toks):
+        hidden, _, _ = MDL.forward(frozen, toks, cfg, profile_masks=masks)
+        head = {"head_w": jnp.broadcast_to(head_w, (B,) + head_w.shape),
+                "head_b": jnp.broadcast_to(head_b, (B,) + head_b.shape)}
+        return np.asarray(MDL.cls_logits(frozen, hidden, cfg, head))
+
+    for g in trainer.scheduler.graduated:
+        pid = g["pid"]
+        toks = jnp.asarray(data.sample(777, B, 12,
+                                       profile_ids=[pid] * B)["tokens"])
+        # in-training eval path: deterministic k-hot of the trained logits,
+        # affines/head at the store's fp16 persistence precision
+        row = roster.slot_params(trainer.state["roster"], g["slot"])
+        f16 = lambda x: jnp.asarray(x.astype(np.float16).astype(np.float32))
+        wa = jnp.asarray(M.khot_weights_from_bits(M.binarize(row["mA"], k), k))
+        wb = jnp.asarray(M.khot_weights_from_bits(M.binarize(row["mB"], k), k))
+        train_masks = {
+            "w_a": jnp.broadcast_to(wa, (B,) + wa.shape),
+            "w_b": jnp.broadcast_to(wb, (B,) + wb.shape),
+            "ln_scale": jnp.broadcast_to(f16(row["ln_scale"]),
+                                         (B,) + row["ln_scale"].shape),
+            "ln_bias": jnp.broadcast_to(f16(row["ln_bias"]),
+                                        (B,) + row["ln_bias"].shape)}
+        lt = logits_with(train_masks, f16(row["head_w"]), f16(row["head_b"]),
+                         toks)
+        # persisted-store path
+        swa, swb, sls, slb = loaded.batch_mask_weights([pid] * B)
+        hw, hb = loaded.head(pid)
+        ls = logits_with({"w_a": swa, "w_b": swb, "ln_scale": sls,
+                          "ln_bias": slb}, hw, hb, toks)
+        np.testing.assert_array_equal(lt, ls)
+
+
+# ------------------------------------------------------------------- resume
+
+def test_resume_mid_onboarding_matches_uninterrupted(tmp_path):
+    """Checkpoint mid-onboarding, resume in a fresh process state: the
+    final store is bit-identical to an uninterrupted run, and graduated
+    profiles are not re-trained."""
+    cfg = _cls_cfg()
+
+    def make(ckpt_dir=None, store_path=None):
+        data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                     num_profiles=4, seed=5)
+        return _build(cfg, data, 4, log_every=5,
+                      ckpt_dir=ckpt_dir, ckpt_every=5,
+                      store_path=store_path)
+
+    # uninterrupted
+    t1, _, _, store1, _ = make()
+    t1.run_until_drained(max_steps=500)
+
+    # checkpointed at step 10, then resumed
+    ck = str(tmp_path / "ck")
+    sp = str(tmp_path / "store.npz")
+    t2, _, _, _, _ = make(ckpt_dir=ck, store_path=sp)
+    t2.run(10)
+    graduated_at_ckpt = [g["pid"] for g in t2.scheduler.graduated]
+
+    t3, _, _, store3, _ = make(ckpt_dir=ck, store_path=sp)
+    assert t3.try_resume()
+    assert t3.step == 10
+    assert [g["pid"] for g in t3.scheduler.graduated] == graduated_at_ckpt
+    t3.run_until_drained(max_steps=500)
+
+    assert t3.step == t1.step
+    assert store3.profile_ids() == store1.profile_ids() == [0, 1, 2, 3]
+    # graduated-before-checkpoint profiles were not re-trained after resume
+    for g, h in zip(t1.scheduler.graduated, t3.scheduler.graduated):
+        assert g == h
+    for pid in store1.profile_ids():
+        for a, b in zip(store1.sparse_indices(pid),
+                        store3.sparse_indices(pid)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(store1.head(pid)[0]),
+                                      np.asarray(store3.head(pid)[0]))
+
+
+# -------------------------------------------------- trainer metric buffering
+
+def test_trainer_buffers_metrics_until_log_boundary():
+    """The classic Trainer path: history contents are preserved while host
+    syncs happen only at log/end boundaries, not per step."""
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    from repro.data.loader import ShardedLoader
+    loader = ShardedLoader(MarkovLM(cfg.vocab_size, 4, seed=1), 4, 16)
+    state = init_train_state(jax.random.key(0), cfg, "xpeft")
+    step = jax.jit(make_train_step(cfg, "xpeft", lr=1e-2))
+    tr = Trainer(step, state, loader, rng=jax.random.key(42), log_every=5)
+    hist = tr.run(7)
+    assert [r["step"] for r in hist] == list(range(1, 8))
+    for r in hist:
+        assert {"loss", "aux_loss", "grad_norm", "step",
+                "straggler"} <= set(r)
+        assert isinstance(r["loss"], float)
+    assert tr.host_syncs == 2  # step 5 boundary + end-of-run flush
