@@ -8,7 +8,7 @@
 PY      := python
 PP      := PYTHONPATH=src:.
 
-.PHONY: verify test bench-smoke onboard-smoke bench
+.PHONY: verify test bench-smoke onboard-smoke multidev-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -25,6 +25,14 @@ onboard-smoke:
 		--per-slot-batch 2 --seq 16 --graduate-min-steps 4 \
 		--graduate-max-steps 10 --steps 200 \
 		--store-out /tmp/onboard_smoke_store.npz
+
+# 8-fake-device CPU mesh: serve + onboard must be BITWISE identical to the
+# 1-device path (the script forces its own device-count XLA flag). Not a
+# verify dep: the tier-1 suite (test_distributed) and bench-smoke
+# (serve_bench -> sharded.parity gate) already run the same vehicle — this
+# target is the standalone entry the CI multi-device job and humans use.
+multidev-smoke:
+	$(PP) $(PY) benchmarks/sharded_smoke.py --check
 
 bench:
 	$(PP) $(PY) benchmarks/run.py

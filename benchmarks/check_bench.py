@@ -13,6 +13,12 @@ properties:
   (the PR 1 architecture's cadence, so the gate is machine-independent);
   BENCH_STRICT=1 additionally enforces the absolute PR 1 number — for
   perf machines, not shared CI runners whose wall clock varies 2-4x
+- the 8-fake-device mesh is BITWISE equal to the 1-device path (graduated
+  store bytes, admission Â/B̂, decode token ids) and shards memory
+  (per-device resident bytes strictly below single-device); the
+  sharded-vs-single throughput floor applies under BENCH_STRICT=1 only
+  (8 fake devices timeshare one CPU — wall clock there measures the
+  host, not the sharding)
 
 and the training-side lifecycle (BENCH_train.json, PR 3):
 
@@ -36,6 +42,9 @@ MIN_PREFILL_OCCUPANCY = 0.5
 MAX_SYNCS_PER_TOKEN = 1.0
 MIN_VS_PER_TOKEN_BASELINE = 0.9   # windowed >= 0.9x same-run baseline
 MIN_DECODE_TOKENS_PER_S = 2723.0  # PR 1 absolute, BENCH_STRICT only
+MIN_SHARDED_VS_SINGLE = 0.05      # 8-fake-device tok/s floor, STRICT only
+                                  # (fake devices timeshare one CPU; this
+                                  # only catches catastrophic regressions)
 MAX_SYNCS_PER_TRAIN_STEP = 1.0
 MIN_PROFILES_PER_MIN = 300.0      # smoke-config absolute, BENCH_STRICT only
 
@@ -128,6 +137,25 @@ def main():
         fail(f"decode {tp['tokens_per_s']} tok/s < PR 1 absolute baseline "
              f"{MIN_DECODE_TOKENS_PER_S} on the smoke config (BENCH_STRICT)")
 
+    # ---- multi-device (8-fake-device mesh vs 1 device) ------------------
+    par = record(serve, "sharded.parity")
+    for bit in ("onboard_store_bitwise_equal", "serve_entries_bitwise_equal",
+                "decode_tokens_equal"):
+        if not par.get(bit):
+            fail(f"sharded parity broken: {bit} is false — the mesh path "
+                 "no longer reproduces the single-device results")
+    shtp = record(serve, "sharded.throughput")
+    single_b = shtp.get("single_bytes_per_device", {}).get("total", 0)
+    shard_b = shtp.get("sharded_bytes_per_device", {}).get("total", 0)
+    if not (0 < shard_b < single_b):
+        fail(f"sharded per-device bytes {shard_b} not below single-device "
+             f"{single_b} — the mesh is not actually sharding state")
+    if os.environ.get("BENCH_STRICT") and \
+            shtp.get("sharded_vs_single", 0) < MIN_SHARDED_VS_SINGLE:
+        fail(f"sharded decode at {shtp.get('sharded_vs_single')}x the "
+             f"single-device rate < {MIN_SHARDED_VS_SINGLE}x floor "
+             "(BENCH_STRICT)")
+
     # ---- training lifecycle (roster / onboarding / gang-step) -----------
     tsync = record(train, "train.host_syncs")
     if tsync.get("syncs_per_step", 1.0) >= MAX_SYNCS_PER_TRAIN_STEP:
@@ -161,6 +189,8 @@ def main():
           f"{pre['occupancy']}, {sync['syncs_per_token']} syncs/token, "
           f"decode {tp['tokens_per_s']} tok/s "
           f"(per-token-sync baseline {base.get('tokens_per_s')}); "
+          f"{par['devices']}-device parity bitwise OK at {shard_b} B/device "
+          f"(single {single_b}, {shtp['sharded_vs_single']}x tok/s); "
           f"train {tsync['syncs_per_step']} syncs/step, onboarding "
           f"{life['graduated']}/{life['profiles']} graduated @ "
           f"{life['profiles_per_min']} profiles/min, {life['retraces']} "

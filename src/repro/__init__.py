@@ -1,2 +1,19 @@
 """repro: X-PEFT multi-profile training/serving framework in JAX."""
+import jax as _jax
+
+# Sharding-invariant RNG, process-wide: with the legacy (non-partitionable)
+# threefry lowering, a jax.random draw whose consumer is GSPMD-sharded
+# produces DIFFERENT values than the same draw unsharded — the gang step's
+# Gumbel mask noise would silently diverge between 1 device and a mesh.
+# Partitionable threefry (the jax>=0.5 default) makes every draw a pure
+# function of (key, element index) regardless of partitioning, which the
+# multi-device parity gate (benchmarks/sharded_smoke.py) relies on.
+#
+# Deliberately set at PACKAGE import rather than per entry point: parity
+# needs the single-device and mesh paths of the SAME process to share one
+# RNG flavor, and a missed entry point would break bitwise parity silently.
+# The cost is a global-config side effect on hosts embedding repro as a
+# library on jax<0.5 — their own draws switch to the partitionable stream.
+_jax.config.update("jax_threefry_partitionable", True)
+
 __version__ = "1.0.0"

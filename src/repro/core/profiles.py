@@ -10,6 +10,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import weakref
 from typing import Dict, Iterable, Optional
 
 import numpy as np
@@ -27,6 +28,34 @@ class ProfileStore:
         self.mask_type = mask_type
         self.k = k
         self._rec: Dict[int, dict] = {}
+        self._listeners: list = []
+
+    # -------------------------------------------------------- invalidation
+    def subscribe(self, fn) -> None:
+        """Register ``fn(pid)``, called whenever a profile record is added
+        or REPLACED (``add_profile`` / ``merge_from``). Serving caches
+        subscribe their invalidation hook here (``ServeEngine`` does so in
+        its constructor), so a re-trained profile re-graduating into the
+        store can never keep serving its stale aggregated Â/B̂.
+
+        Bound methods are held WEAKLY: a store outlives the engines serving
+        from it, and a strong ref here would pin every dead engine's device
+        state (params / KV cache / mask buffers) forever. Plain functions
+        are held strongly (a weak ref to a local closure would die at
+        once) — their owner should keep the store's lifetime in mind."""
+        if hasattr(fn, "__self__"):
+            self._listeners.append(weakref.WeakMethod(fn))
+        else:
+            self._listeners.append(lambda _fn=fn: _fn)
+
+    def _notify(self, pid: int) -> None:
+        live = []
+        for ref in self._listeners:
+            fn = ref()
+            if fn is not None:
+                fn(pid)
+                live.append(ref)
+        self._listeners = live
 
     # ------------------------------------------------------------------ add
     def add_profile(self, pid: int, profile_params: dict) -> None:
@@ -50,6 +79,7 @@ class ProfileStore:
             rec["head_w"] = np.asarray(profile_params["head_w"], np.float16)
             rec["head_b"] = np.asarray(profile_params["head_b"], np.float16)
         self._rec[int(pid)] = rec
+        self._notify(int(pid))
 
     # ---------------------------------------------------------------- fetch
     def mask_weights(self, pid: int):
@@ -121,11 +151,15 @@ class ProfileStore:
     def merge_from(self, other: "ProfileStore") -> None:
         """Adopt another store's records (the onboarding resume path:
         re-hydrate already-graduated profiles from the persisted store so
-        they are never re-trained)."""
+        they are never re-trained). Every adopted pid is notified to
+        subscribers — a record replaced here may already be cached by a
+        serving engine, which must drop its aggregated copy."""
         assert (self.L, self.N, self.b, self.mask_type, self.k) == \
             (other.L, other.N, other.b, other.mask_type, other.k), \
             "store shape mismatch"
         self._rec.update(other._rec)
+        for pid in other._rec:
+            self._notify(int(pid))
 
     def bytes_per_profile(self, include_ln: bool = False) -> int:
         core = M.bytes_per_profile(self.N, self.L, self.mask_type)

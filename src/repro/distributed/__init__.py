@@ -4,7 +4,10 @@ from repro.distributed import ctx  # noqa: F401
 from repro.distributed.sharding import (  # noqa: F401
     batch_specs,
     cache_specs,
+    constrain_leading,
+    leading_axis_specs,
     param_shardings,
     param_specs,
+    sharded_bytes_per_device,
     to_shardings,
 )

@@ -223,28 +223,77 @@ def to_shardings(specs, mesh: Mesh):
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def sharded_bytes_per_device(abstract_tree, specs, mesh: Mesh) -> int:
-    """Analytic per-device resident bytes of a sharded pytree."""
-    sizes = dict(mesh.shape)
+# ----------------------------------------------------------------------------
+# Slot-packed state (serve SlotState / mask buffers, train roster): every
+# leaf carries a leading slot axis; shard it over "data" when divisible so
+# per-slot work stays device-local (decode and gang-step numerics are then
+# identical to the single-device path — no contraction is ever split).
+# ----------------------------------------------------------------------------
 
-    def one(x, spec):
+def leading_axis_specs(abstract_tree, mesh: Mesh, axis: str = "data"):
+    """Shard every leaf's leading dim over `axis` when divisible; replicate
+    otherwise. The spec for SlotState arrays, engine mask buffers, and the
+    training roster (all slot-packed on dim 0)."""
+    n = dict(mesh.shape).get(axis, 1)
+
+    def one(x):
+        nd = len(x.shape)
+        if nd >= 1 and n > 1 and x.shape[0] % n == 0 and x.shape[0] >= n:
+            return P(axis, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree.map(one, abstract_tree)
+
+
+def constrain_leading(tree, mesh: Optional[Mesh], axis: str = "data"):
+    """with_sharding_constraint every leaf to its leading-axis spec (no-op
+    without a mesh). Used inside jitted steps to pin slot-axis sharding so
+    GSPMD never migrates or splits per-slot work."""
+    if mesh is None:
+        return tree
+    specs = leading_axis_specs(tree, mesh, axis)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, s)), tree, specs)
+
+
+def sharded_bytes_per_device(abstract_tree, specs, mesh) -> int:
+    """Analytic per-device resident bytes of a sharded pytree.
+
+    `mesh` may be a Mesh or a plain {axis: size} mapping. This number gates
+    memory planning, so malformed inputs RAISE instead of under-reporting:
+    the spec tree must have exactly one PartitionSpec per leaf, each spec
+    must cover its leaf's full rank, and every named axis must exist in the
+    mesh. (A silent zip over mismatched flats used to drop leaves.)
+    """
+    sizes = dict(mesh) if isinstance(mesh, dict) else dict(mesh.shape)
+
+    flat_x = jax.tree.leaves(abstract_tree)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    if len(flat_x) != len(flat_s):
+        raise ValueError(
+            f"specs tree has {len(flat_s)} PartitionSpecs for "
+            f"{len(flat_x)} leaves — every leaf needs exactly one spec")
+
+    total = 0
+    for x, spec in zip(flat_x, flat_s):
+        if not isinstance(spec, P):
+            raise ValueError(f"expected PartitionSpec, got {spec!r}")
+        if len(spec) != len(x.shape):
+            raise ValueError(
+                f"spec {spec} has {len(spec)} entries for a rank-"
+                f"{len(x.shape)} leaf of shape {tuple(x.shape)} — specs "
+                "must cover the full rank")
         n = 1
         for entry in spec:
             if entry is None:
                 continue
             axes = entry if isinstance(entry, tuple) else (entry,)
             for a in axes:
-                n *= sizes.get(a, 1)
-        return int(np.prod(x.shape)) * jnp_itemsize(x.dtype) // n
-
-    import jax.numpy as _j
-
-    def jnp_itemsize(dt):
-        return _j.dtype(dt).itemsize
-
-    total = 0
-    flat_x = jax.tree.leaves(abstract_tree)
-    flat_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
-    for x, s in zip(flat_x, flat_s):
-        total += one(x, s)
+                if a not in sizes:
+                    raise ValueError(
+                        f"spec {spec} names mesh axis {a!r} not in "
+                        f"{sorted(sizes)}")
+                n *= sizes[a]
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize // n
     return total

@@ -35,3 +35,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires >= prod(shape) devices)."""
     return make_mesh_compat(shape, axes)
+
+
+def parse_mesh(spec: str):
+    """``"4x2:data,model"`` -> Mesh (or None for ``""``).
+
+    The one --mesh grammar every launcher shares: shape "4x2" cross axis
+    names "data,model". Validated on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    if not spec:
+        return None
+    try:
+        shape_s, axes_s = spec.split(":")
+        shape = tuple(int(x) for x in shape_s.split("x"))
+        axes = tuple(a for a in axes_s.split(",") if a)
+    except ValueError as e:
+        raise ValueError(f"bad --mesh {spec!r}; want e.g. 4x2:data,model") \
+            from e
+    if len(shape) != len(axes):
+        raise ValueError(f"--mesh {spec!r}: {len(shape)} dims for "
+                         f"{len(axes)} axis names")
+    return make_mesh_compat(shape, axes)

@@ -3,6 +3,12 @@ the layered engine (scheduler / slot-state / profile-cache).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
       --requests 8 --slots 4 --sync-every 8
+
+Multi-device (same engine code, GSPMD-sharded; on CPU validate with
+XLA_FLAGS=--xla_force_host_platform_device_count=8):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --smoke --mesh 4x2:data,model
 """
 from __future__ import annotations
 
@@ -29,14 +35,20 @@ def main():
                     help="profile-cache capacity in MiB (0 disables)")
     ap.add_argument("--no-precompute", action="store_true",
                     help="paper-faithful per-step mask aggregation")
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 4x2:data,model — GSPMD-shard the engine "
+                    "(slots over data, bank d_model/heads/vocab TP over "
+                    "model)")
     args = ap.parse_args()
 
     from repro.configs import get_config, reduce_for_smoke
     from repro.core import xpeft as XP
     from repro.core.profiles import ProfileStore
+    from repro.launch.mesh import parse_mesh
     from repro.models import init_lm
     from repro.serve.engine import Request, ServeEngine
 
+    mesh = parse_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
@@ -56,7 +68,11 @@ def main():
                       max_seq=args.max_seq,
                       precompute=not args.no_precompute,
                       sync_every=args.sync_every,
-                      cache_bytes=args.cache_mb << 20)
+                      cache_bytes=args.cache_mb << 20, mesh=mesh)
+    if mesh is not None:
+        rb = eng.resident_bytes_per_device()
+        print(f"mesh {dict(mesh.shape)}: {rb['total']} resident B/device "
+              f"(params {rb['params']}, cache {rb['cache']})")
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

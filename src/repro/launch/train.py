@@ -37,6 +37,7 @@ def run_onboarding(args):
     from repro.configs import get_config, reduce_for_smoke
     from repro.data import MarkovLM, ProfileClassification
     from repro.distributed.fault import PreemptionHandler, StepWatchdog
+    from repro.launch.mesh import parse_mesh
     from repro.train import GraduationPolicy
     from repro.train.onboarding import build_onboarding_run
 
@@ -45,6 +46,10 @@ def run_onboarding(args):
         cfg = reduce_for_smoke(cfg)
     if args.num_labels:
         cfg = cfg.with_(num_labels=args.num_labels)
+    mesh = parse_mesh(args.mesh)
+    if mesh is not None:
+        print(f"onboarding on mesh {dict(mesh.shape)} "
+              f"({mesh.size} devices; roster slots over 'data')")
 
     if cfg.num_labels:
         source = ProfileClassification(cfg.vocab_size, cfg.num_labels,
@@ -59,7 +64,7 @@ def run_onboarding(args):
     trainer, gang = build_onboarding_run(
         cfg, source, range(args.profiles), slots=args.roster_slots,
         per_slot=args.per_slot_batch, seq_len=args.seq, policy=policy,
-        lr=args.lr, seed=args.seed,
+        lr=args.lr, seed=args.seed, mesh=mesh,
         store_path=args.store_out or None,
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
         watchdog=StepWatchdog(), preemption=PreemptionHandler(),
@@ -151,11 +156,8 @@ def main():
     step = make_train_step(cfg, args.mode, lr=args.lr)
 
     if args.mesh:
-        shape_s, axes_s = args.mesh.split(":")
-        shape = tuple(int(x) for x in shape_s.split("x"))
-        axes = tuple(axes_s.split(","))
-        from repro.launch.mesh import make_mesh_compat
-        mesh = make_mesh_compat(shape, axes)
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(args.mesh)
         cm = ctx.mesh_context(mesh)
         cm.__enter__()
         st_sh = to_shardings(param_specs(state, mesh), mesh)

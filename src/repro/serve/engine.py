@@ -28,7 +28,18 @@ Admission of a wave:
 
 The engine never touches `ProfileStore` internals — hydration goes through
 the store's vectorized public API (`batch_sparse_indices`, `ln_affines`,
-`batch_mask_weights`).
+`batch_mask_weights`). It DOES subscribe to the store's change
+notifications: re-graduating a profile (`add_profile`/`merge_from`)
+invalidates its cached aggregate, so serving never pins a re-trained
+profile to stale Â/B̂.
+
+Multi-device: pass `mesh=` (see `launch/mesh.py`) and the same engine runs
+under GSPMD — params via the repo sharding rules (bank d_model / heads /
+vocab TP over "model"), KV cache and slot/mask buffers with their slot
+axis over "data", all jitted hot-path functions pinned to those shardings.
+No contraction is split along the slot axis, so admission aggregates and
+per-slot decode are bit-identical to the single-device path (validated on
+CPU with XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 from __future__ import annotations
 
@@ -51,7 +62,8 @@ from repro.utils import pow2_count
 class ServeEngine:
     def __init__(self, cfg, params, store: ProfileStore, *, max_slots: int = 4,
                  max_seq: int = 256, precompute: bool = True,
-                 sync_every: int = 8, cache_bytes: Optional[int] = 64 << 20):
+                 sync_every: int = 8, cache_bytes: Optional[int] = 64 << 20,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.store = store
@@ -59,10 +71,37 @@ class ServeEngine:
         self.n_slots = max_slots
         self.precompute = precompute and cfg.xpeft.enabled
         self.sync_every = sync_every
+        self.mesh = mesh
+        # multi-device: same engine code on 1 device or an N-device mesh.
+        # Params take the repo sharding rules (TP over "model": bank d_model,
+        # heads, mlp, vocab — fsdp=False: serving replicates what TP doesn't
+        # claim, an all-gather-on-use would sit on the decode critical path);
+        # the KV/recurrent cache takes cache_specs (slots over "data",
+        # kv/state heads over "model"); slot state + mask buffers shard
+        # their slot axis over "data" (leading_axis_specs).
+        self._specs = {}
+        self._shardings = {}
+        if mesh is not None:
+            from repro.distributed import sharding as SH
+            self._specs["params"] = SH.param_specs(params, mesh, fsdp=False)
+            self._shardings["params"] = SH.to_shardings(
+                self._specs["params"], mesh)
+            self.params = jax.device_put(params, self._shardings["params"])
         self.cache = MDL.init_cache(cfg, max_slots, max_seq)
+        if mesh is not None:
+            self._specs["cache"] = SH.cache_specs(self.cache, mesh, cfg,
+                                                  max_slots)
+            self._shardings["cache"] = SH.to_shardings(
+                self._specs["cache"], mesh)
+            self.cache = jax.device_put(self.cache, self._shardings["cache"])
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.scheduler = Scheduler(cfg.block_pattern)
         self.profile_cache = ProfileCache(cache_bytes)
+        # re-graduation hook: the store notifies every added/replaced pid,
+        # so a re-trained profile can never serve a stale cached aggregate.
+        # In-flight slots keep their already-scattered Â/B̂ copy until they
+        # finish; the NEXT admission of the pid re-aggregates fresh.
+        store.subscribe(self.invalidate_profile)
         xp = cfg.xpeft
         L, N, b, d = cfg.num_layers, xp.num_adapters, xp.bottleneck, cfg.d_model
         if self.precompute:
@@ -82,6 +121,12 @@ class ServeEngine:
             }
         else:
             self.masks = None
+        if mesh is not None and self.masks is not None:
+            from repro.distributed import sharding as SH
+            self._specs["masks"] = SH.leading_axis_specs(self.masks, mesh)
+            self._shardings["masks"] = SH.to_shardings(
+                self._specs["masks"], mesh)
+            self.masks = jax.device_put(self.masks, self._shardings["masks"])
 
         def decode_fn(params, cache, last_tok, lengths, masks):
             hidden, cache, _ = MDL.forward(params, last_tok[:, None], cfg,
@@ -89,13 +134,20 @@ class ServeEngine:
                                            cache_pos=lengths)
             return greedy_next(MDL.lm_logits(params, hidden, cfg)), cache
 
-        self.slots = SlotState(max_slots, max_seq, sync_every, decode_fn)
+        self.slots = SlotState(max_slots, max_seq, sync_every, decode_fn,
+                               mesh=mesh,
+                               cache_shardings=self._shardings.get("cache"))
         self._prefill = jax.jit(self._prefill_impl)
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        # the cache/mask buffers round-trip through these every wave: pin
+        # their out-shardings so placement never drifts (a drift would both
+        # retrace the decode step and migrate the KV cache mid-serve)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,),
+                               out_shardings=self._shardings.get("cache"))
         self._scatter_masks = jax.jit(
             lambda buf, slots, rows: jax.tree.map(
                 lambda b_, r_: b_.at[slots].set(r_.astype(b_.dtype)),
-                buf, rows))
+                buf, rows),
+            out_shardings=self._shardings.get("masks"))
         # jitted admission aggregations (padded to pow2 profile counts); the
         # sparse path reads only k·L·d·b bank bytes per aggregated profile
         self._aggregate_sparse = jax.jit(
@@ -344,9 +396,12 @@ class ServeEngine:
     def invalidate_profile(self, pid: int) -> bool:
         """Drop a profile's cached Â/B̂ — REQUIRED after re-training updates
         its masks in the store (cache entries are keyed by pid alone, so a
-        stale entry would otherwise keep serving the old adapters). Already
-        -admitted slots keep their scattered copy; only future admissions
-        re-aggregate."""
+        stale entry would otherwise keep serving the old adapters forever).
+        The engine subscribes this hook to its store at construction, so
+        `ProfileStore.add_profile` / `merge_from` (the graduation and
+        resume-merge paths) invalidate automatically. Already-admitted
+        slots finish on their scattered copy of the OLD masks; the next
+        admission of the pid re-aggregates from the updated store."""
         return self.profile_cache.invalidate(pid)
 
     def abort_all(self) -> None:
@@ -382,10 +437,33 @@ class ServeEngine:
             self.sync()
         return steps
 
+    def resident_bytes_per_device(self) -> dict:
+        """Analytic per-device resident bytes of the engine's device state
+        (params / KV cache / mask buffers) under the active sharding —
+        identical to total bytes on a single device. serve_bench emits this
+        so memory planning tracks the mesh, not the global shapes."""
+        from repro.distributed.sharding import sharded_bytes_per_device
+        trees = {"params": self.params, "cache": self.cache}
+        if self.masks is not None:
+            trees["masks"] = self.masks
+        out = {}
+        for name, tree in trees.items():
+            if self.mesh is None:
+                out[name] = int(sum(
+                    np.prod(x.shape) * np.dtype(x.dtype).itemsize
+                    for x in jax.tree.leaves(tree)))
+            else:
+                out[name] = sharded_bytes_per_device(
+                    tree, self._specs[name], self.mesh)
+        out["total"] = sum(out.values())
+        return out
+
     def serve_stats(self) -> dict:
         """Counters the bench reports (and operators can scrape)."""
         toks = max(self.decode_tokens, 1)
         return {
+            "devices": 1 if self.mesh is None else self.mesh.size,
+            "resident_bytes_per_device": self.resident_bytes_per_device(),
             "host_syncs": self.slots.host_syncs,
             "device_steps": self.slots.device_steps,
             "decode_tokens": self.decode_tokens,

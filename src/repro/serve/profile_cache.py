@@ -36,6 +36,8 @@ class ProfileCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.rejects = 0        # over-capacity puts dropped (never cached)
+        self.invalidations = 0  # entries dropped by re-training/graduation
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -60,7 +62,10 @@ class ProfileCache:
         pid = int(pid)
         size = entry_nbytes(entry)
         if self.capacity is not None and size > self.capacity:
-            return  # larger than the whole budget; don't thrash the cache
+            # larger than the whole budget; don't thrash the cache — but a
+            # silent drop made hit-rates incomparable across runs, so count
+            self.rejects += 1
+            return
         if pid in self._entries:
             self.bytes_used -= self._sizes.pop(pid)
             del self._entries[pid]
@@ -80,12 +85,21 @@ class ProfileCache:
             return False
         del self._entries[pid]
         self.bytes_used -= self._sizes.pop(pid)
+        self.invalidations += 1
         return True
 
     def clear(self) -> None:
+        """Drop every entry AND reset all counters — a cleared cache starts
+        a fresh, comparable measurement window (hit-rates in
+        BENCH_serve.json used to drift across clear() boundaries)."""
         self._entries.clear()
         self._sizes.clear()
         self.bytes_used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.rejects = 0
+        self.invalidations = 0
 
     @property
     def hit_rate(self) -> float:
@@ -96,4 +110,6 @@ class ProfileCache:
         return {"entries": len(self._entries), "bytes": self.bytes_used,
                 "capacity_bytes": self.capacity, "hits": self.hits,
                 "misses": self.misses, "evictions": self.evictions,
+                "rejects": self.rejects,
+                "invalidations": self.invalidations,
                 "hit_rate": round(self.hit_rate, 4)}

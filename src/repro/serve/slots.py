@@ -17,14 +17,13 @@ Invariants the engine relies on:
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 
-@jax.jit
 def _admit_scatter(arrays, slots, last_toks, lengths, max_news, actives):
     """One batched scatter of the admission wave into the slot arrays."""
     return {"last_tok": arrays["last_tok"].at[slots].set(last_toks),
@@ -48,14 +47,23 @@ class SlotState:
 
     decode_fn(params, cache, last_tok [S], lengths [S], masks) ->
     (next_tok [S], cache) is the model-side half the engine provides.
+
+    With a `mesh`, the slot axis shards over the "data" mesh axis
+    (`distributed.sharding.leading_axis_specs`) and the jitted step pins
+    its out-shardings (slot arrays + the model cache via
+    `cache_shardings`), so the same step serves 1 device or an N-device
+    GSPMD mesh without retracing — and, because no contraction is ever
+    split along the slot axis, with per-slot numerics identical to the
+    single-device path.
     """
 
     def __init__(self, n_slots: int, max_seq: int, sync_every: int,
-                 decode_fn: Callable):
+                 decode_fn: Callable, *, mesh=None, cache_shardings=None):
         assert sync_every >= 1
         self.n_slots = n_slots
         self.S = max_seq
         self.sync_every = sync_every
+        self.mesh = mesh
         self.last_tok = jnp.zeros((n_slots,), jnp.int32)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
         self.active = jnp.zeros((n_slots,), bool)
@@ -66,6 +74,22 @@ class SlotState:
         self._prev_n_gen = np.zeros((n_slots,), np.int32)  # host mirror
         self.host_syncs = 0
         self.device_steps = 0
+        # multi-device: slot axis over "data" (per-slot decode stays
+        # device-local), arrays committed once and every jitted update
+        # pinned to the same shardings so the step never retraces on a
+        # placement change across admit/sync/step cycles
+        self.arr_shardings = None
+        if mesh is not None:
+            from repro.distributed import sharding as SH
+            specs = SH.leading_axis_specs(self._arrays(), mesh)
+            self.arr_shardings = SH.to_shardings(specs, mesh)
+            self._set_arrays(jax.device_put(self._arrays(),
+                                            self.arr_shardings))
+        # immutable templates reused by sync()/deactivate_all() so resets
+        # keep the committed sharding (a fresh jnp.full would land on the
+        # default device and force a retrace)
+        self._empty_buf = self.tok_buf
+        self._all_inactive = self.active
 
         def step_impl(params, cache, masks, arrays, step_idx):
             nxt, cache = decode_fn(params, cache, arrays["last_tok"],
@@ -82,7 +106,15 @@ class SlotState:
                            "active": was_active & ~done, "n_gen": n_gen,
                            "max_new": arrays["max_new"], "tok_buf": tok_buf}
 
-        self._step = jax.jit(step_impl)
+        if mesh is not None:
+            self._step = jax.jit(
+                step_impl, out_shardings=(cache_shardings,
+                                          self.arr_shardings))
+            self._admit_scatter = jax.jit(
+                _admit_scatter, out_shardings=self.arr_shardings)
+        else:
+            self._step = jax.jit(step_impl)
+            self._admit_scatter = jax.jit(_admit_scatter)
 
     # ----------------------------------------------------------------- device
     def _arrays(self) -> dict:
@@ -120,7 +152,7 @@ class SlotState:
         lengths_h = np.asarray(lengths, np.int32)
         max_news_h = np.asarray(max_news, np.int32)
         actives_h = (max_news_h > 1) & (lengths_h < self.S - 1)
-        arrays = _admit_scatter(
+        arrays = self._admit_scatter(
             self._arrays(), jnp.asarray(slots_h),
             jnp.asarray(np.asarray(last_toks, np.int32)),
             jnp.asarray(lengths_h), jnp.asarray(max_news_h),
@@ -131,7 +163,7 @@ class SlotState:
     def deactivate_all(self) -> None:
         """Mark every slot inactive on device (abort; engine syncs first)."""
         assert self.buf_fill == 0, "sync() before deactivating"
-        self.active = jnp.zeros_like(self.active)
+        self.active = self._all_inactive
 
     # ------------------------------------------------------------------- host
     def sync(self) -> SlotSync:
@@ -144,7 +176,7 @@ class SlotState:
         counts = np.asarray(n_gen) - self._prev_n_gen
         self._prev_n_gen = np.asarray(n_gen).copy()
         if fill:
-            self.tok_buf = jnp.full_like(self.tok_buf, -1)
+            self.tok_buf = self._empty_buf
         self.buf_fill = 0
         self.host_syncs += 1
         return SlotSync(np.asarray(tok_buf), counts, np.asarray(lengths),

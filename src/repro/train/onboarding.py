@@ -254,13 +254,25 @@ def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
                          per_slot: int = 4, seq_len: int = 16,
                          policy: Optional[GraduationPolicy] = None,
                          lr: float = 1e-3, ema_decay: float = 0.9,
-                         seed: int = 0, frozen=None, **trainer_kw):
+                         seed: int = 0, frozen=None, store=None,
+                         mesh=None, **trainer_kw):
     """Wire the whole lifecycle stack — frozen PLM, roster, gang step,
     batcher, store, scheduler, trainer — the one assembly the launcher,
     example, and bench all share. Returns (trainer, gang_step_fn); the
     un-jitted gang fn carries `.trace_counter`. Reach the pieces via
     `trainer.scheduler` (store/roster) and `trainer.state` (frozen/roster
-    state)."""
+    state).
+
+    Pass an existing `store` to graduate into it — the RE-TRAINING flow:
+    profiles already being served re-graduate in place, and any ServeEngine
+    holding that store is notified so its cached aggregates invalidate.
+
+    Pass a `mesh` to shard the gang step: the roster's slot axis (and each
+    step's [S, m, ...] batch rows) go over the "data" mesh axis while the
+    frozen PLM replicates, so per-slot training is device-local and the
+    graduated store is bit-identical to a single-device run. Graduation
+    itself always gathers the slot row to HOST numpy (`Roster.slot_params`)
+    before the binarize/pack roundtrip."""
     import jax as _jax
 
     from repro.models import init_lm
@@ -271,16 +283,25 @@ def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
     kf, kr = _jax.random.split(key)
     if frozen is None:
         frozen = init_lm(kf, cfg)
-    roster = Roster(cfg, _jax.random.key(seed + 2), slots)
-    state = {"frozen": frozen,
-             "roster": init_roster_state(kr, cfg, slots)}
+    roster = Roster(cfg, _jax.random.key(seed + 2), slots, mesh=mesh)
+    rstate = init_roster_state(kr, cfg, slots)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.distributed import sharding as SH
+        rstate = _jax.device_put(
+            rstate, SH.to_shardings(SH.leading_axis_specs(rstate, mesh),
+                                    mesh))
+        frozen = _jax.device_put(frozen, NamedSharding(mesh,
+                                                       PartitionSpec()))
+    state = {"frozen": frozen, "roster": rstate}
     policy = policy or GraduationPolicy(ema_decay=ema_decay)
     # the step's EMA decay and the policy's debias decay must agree
-    gang = make_gang_step(cfg, lr=lr, ema_decay=policy.ema_decay)
+    gang = make_gang_step(cfg, lr=lr, ema_decay=policy.ema_decay, mesh=mesh)
     batcher = RosterBatcher(source, slots, per_slot, seq_len)
     xp = cfg.xpeft
-    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
-                         xp.mask_type, xp.k)
+    if store is None:
+        store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                             xp.mask_type, xp.k)
     scheduler = OnboardingScheduler(roster, store, policy, pending)
     trainer_kw.setdefault("rng", _jax.random.key(seed + 1))
     trainer = OnboardingTrainer(_jax.jit(gang), state, batcher, scheduler,

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import masks as M
+from repro.distributed.sharding import constrain_leading
 from repro.optim import adamw_init_rows
 
 
@@ -71,19 +72,25 @@ class Roster:
     part of the train state); this class holds the config, the base RNG key
     profiles are deterministically initialized from, and the three jitted
     ops (`_fresh` init, `_admit` scatter, `_evict` mask-clear).
+
+    With a `mesh`, the lifecycle ops re-pin the slot axis over "data"
+    (`constrain_leading`) so admission/eviction scatters never migrate the
+    roster off its gang-step sharding — the step keeps its single trace
+    across waves on a mesh exactly as on one device.
     """
 
-    def __init__(self, cfg, base_key, capacity: int):
+    def __init__(self, cfg, base_key, capacity: int, *, mesh=None):
         self.cfg = cfg
         self.capacity = capacity
         self.base_key = base_key
+        self.mesh = mesh
         self._fresh = jax.jit(lambda k: init_slot_trainable(k, cfg))
 
         def admit_impl(state, slot, fresh):
             set_row = lambda t, r: t.at[slot].set(
                 jnp.asarray(r).astype(t.dtype))
             zero_row = lambda t: t.at[slot].set(0)
-            return {
+            out = {
                 "trainable": jax.tree.map(set_row, state["trainable"], fresh),
                 "opt": {"m": jax.tree.map(zero_row, state["opt"]["m"]),
                         "v": jax.tree.map(zero_row, state["opt"]["v"]),
@@ -94,11 +101,12 @@ class Roster:
                 "ema_acc": state["ema_acc"].at[slot].set(0.0),
                 "ema_count": state["ema_count"].at[slot].set(0),
             }
+            return constrain_leading(out, mesh)
 
         def evict_impl(state, slot):
             out = dict(state)
             out["active"] = state["active"].at[slot].set(False)
-            return out
+            return constrain_leading(out, mesh)
 
         self._admit = jax.jit(admit_impl)
         self._evict = jax.jit(evict_impl)
@@ -133,7 +141,10 @@ class Roster:
 
     def slot_params(self, state: dict, slot: int) -> dict:
         """Host copy of one slot's trainables, flattened to the profile
-        record shape `ProfileStore.add_profile` expects (mA/mB/ln_* [+head])."""
+        record shape `ProfileStore.add_profile` expects (mA/mB/ln_* [+head]).
+        Always gathers to HOST numpy — on a mesh the slot row is fetched off
+        its data-shard, so graduation's binarize/pack roundtrip is
+        bit-identical on 1 device or N."""
         row = jax.tree.map(lambda t: t[slot], state["trainable"])
         host = jax.device_get(row)
         out = {k: np.asarray(v) for k, v in host["table"].items()}

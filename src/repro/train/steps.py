@@ -220,7 +220,7 @@ def loss_for_batch(frozen, trainable, batch, cfg, mode, rng, training=True):
 # ----------------------------------------------------------------------------
 
 def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
-                   ema_decay: float = 0.9):
+                   ema_decay: float = 0.9, mesh=None):
     """Slot-packed gang step for the onboarding roster.
 
     One jitted update trains every ACTIVE slot on its own per-slot
@@ -241,12 +241,24 @@ def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
     Returns step({"frozen", "roster"}, batch, rng) -> (state, metrics),
     with a `.trace_counter` dict tests/benches use to assert the step
     traces exactly once across admission waves.
+
+    With a `mesh`, the SLOT axis shards over the "data" mesh axis: the
+    batch's [S, m, ...] rows and the roster's slot-packed leaves are
+    constrained so each slot's micro-batch, grads, per-row Adam update and
+    EMAs stay device-local (frozen params replicate — no contraction is
+    ever split), making the sharded update bit-identical to the
+    single-device one. Only the summed loss/grad-norm METRICS cross
+    devices (a psum whose float error is invisible to the lifecycle).
     """
+    from repro.distributed.sharding import constrain_leading
+
     counter = {"traces": 0}
 
     def step(state, batch, rng):
         counter["traces"] += 1
         frozen, rstate = state["frozen"], state["roster"]
+        batch = constrain_leading(batch, mesh)
+        rstate = constrain_leading(rstate, mesh)
         S, m = batch["tokens"].shape[:2]
         toks = batch["tokens"].reshape(S * m, -1)
         slot_ids = jnp.repeat(jnp.arange(S), m)
@@ -298,6 +310,7 @@ def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
             "ema_acc": ema(rstate["ema_acc"], slot_acc),
             "ema_count": rstate["ema_count"] + active.astype(jnp.int32),
         }
+        new_r = constrain_leading(new_r, mesh)
         af = active.astype(jnp.float32)
         n_act = jnp.maximum(af.sum(), 1.0)
         metrics = {"loss": (slot_loss * af).sum() / n_act,

@@ -5,3 +5,6 @@ import sys
 # own XLA_FLAGS; never set device-count flags globally here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too: tests import the benchmarks package (e.g. the shared
+# sharded_smoke subprocess runner) without requiring `python -m pytest`
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))

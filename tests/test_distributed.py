@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import spec_for
+from repro.distributed.sharding import (leading_axis_specs,
+                                        sharded_bytes_per_device, spec_for)
 
 MESH_AXES = {"data": 4, "model": 2}
 
@@ -51,6 +52,86 @@ def test_rules_small_params_not_fsdp():
 def test_rules_expert_pinned_fsdp():
     s = spec_for("blocks/moe/ew_g", (4, 8, 64, 32), MESH_AXES, fsdp=True)
     assert s == P(None, "model", None, "data")
+
+
+def test_rules_mqa_kv_replicated_wide_model_axis():
+    """kv_heads=1 stays replicated however wide the model axis gets (no
+    FSDP axis in a TP-only mesh -> fully replicated)."""
+    s = spec_for("blocks/attn/wk", (12, 512, 1, 64), {"model": 16},
+                 fsdp=True)
+    assert s == P(None, None, None, None)
+
+
+def test_rules_bank_a_and_bank_b_tp_assignment():
+    """Both banks TP-shard their d_model dim over "model": bank_a [L,N,d,b]
+    on dim 2, bank_b [L,N,b,d] on dim 3; the N dim is never sharded (the
+    k-sparse gather indexes it) and FSDP claims the largest leftover."""
+    sa = spec_for("xpeft_bank/bank_a", (12, 256, 64, 8), MESH_AXES,
+                  fsdp=False)
+    assert sa == P(None, None, "model", None)
+    sb = spec_for("xpeft_bank/bank_b", (12, 256, 8, 64), MESH_AXES,
+                  fsdp=True)
+    assert sb == P(None, "data", None, "model")
+
+
+def test_rules_fsdp_largest_dim_tie_break():
+    """Equal largest candidate dims: FSDP takes the LATER one (max over
+    (dim, index) tuples) — pinned so resharding stays deterministic
+    across processes."""
+    s = spec_for("frozen/unmatched_w", (256, 256), {"data": 4}, fsdp=True)
+    assert s == P(None, "data")
+
+
+def test_overrides_pattern_matching():
+    """A substring-matched override replaces the name rule (first match
+    wins); non-matching patterns fall through to the built-in rule."""
+    s = spec_for("blocks/attn/wq", (12, 64, 8, 16), MESH_AXES, fsdp=False,
+                 overrides={"attn/wq": ("tp_d", None, None)})
+    assert s == P(None, "model", None, None)
+    s2 = spec_for("blocks/attn/wq", (12, 64, 8, 16), MESH_AXES, fsdp=False,
+                  overrides={"mlp/wg": ("tp_d", None, None)})
+    assert s2 == P(None, None, "model", None)  # built-in heads rule
+
+
+# ------------------------------------------- per-device memory accounting
+
+def _abs(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_sharded_bytes_per_device_counts_axes():
+    tree = {"a": _abs((8, 64)), "b": _abs((3,))}
+    specs = {"a": P("data", "model"), "b": P(None)}
+    got = sharded_bytes_per_device(tree, specs, MESH_AXES)
+    assert got == (8 * 64 * 4) // 8 + 3 * 4
+
+
+def test_sharded_bytes_per_device_rejects_missing_spec():
+    tree = {"a": _abs((8, 64)), "b": _abs((3,))}
+    with pytest.raises(ValueError, match="exactly one spec"):
+        sharded_bytes_per_device(tree, {"a": P("data", None)}, MESH_AXES)
+
+
+def test_sharded_bytes_per_device_rejects_short_spec():
+    with pytest.raises(ValueError, match="full rank"):
+        sharded_bytes_per_device({"a": _abs((8, 64))}, {"a": P("data")},
+                                 MESH_AXES)
+
+
+def test_sharded_bytes_per_device_rejects_unknown_axis():
+    with pytest.raises(ValueError, match="mesh axis"):
+        sharded_bytes_per_device({"a": _abs((8, 64))},
+                                 {"a": P("pod", None)}, MESH_AXES)
+
+
+def test_leading_axis_specs_divisibility():
+    class _Mesh:  # only .shape is consulted
+        shape = MESH_AXES
+    specs = leading_axis_specs(
+        {"x": _abs((8, 3)), "odd": _abs((5,)), "s": _abs(())}, _Mesh())
+    assert specs["x"] == P("data", None)
+    assert specs["odd"] == P(None)      # 5 % 4 != 0 -> replicated
+    assert specs["s"] == P()
 
 
 _SUB_PRELUDE = """
@@ -183,6 +264,25 @@ def test_small_mesh_train_step_and_moe_parity():
     assert err < 1e-3, err
     print("mesh train + moe parity ok", l1, l2, err)
     """)
+
+
+def test_eight_device_serve_onboard_bitwise_parity():
+    """End-to-end tentpole gate: the 8-fake-device mesh onboards and serves
+    BIT-identically to the 1-device path — graduated store bytes, admission
+    Â/B̂ cache entries, and decoded token ids all equal, with the gang step
+    tracing exactly once on both paths. Runs benchmarks/sharded_smoke.py
+    (the same vehicle serve_bench embeds into BENCH_serve.json) through its
+    shared subprocess entry point."""
+    from benchmarks.sharded_smoke import run_subprocess
+
+    rec = run_subprocess(check=True)
+    assert rec["onboard_store_bitwise_equal"]
+    assert rec["serve_entries_bitwise_equal"]
+    assert rec["decode_tokens_equal"]
+    assert rec["gang_traces"] == {"single": 1, "sharded": 1}
+    single = rec["single"]["resident_bytes_per_device"]["total"]
+    sharded = rec["sharded"]["resident_bytes_per_device"]["total"]
+    assert 0 < sharded < single  # the mesh actually shards device state
 
 
 def test_elastic_reshard_smaller_mesh():

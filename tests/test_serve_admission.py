@@ -184,7 +184,12 @@ class _PublicOnlyStore:
     _PUBLIC = ("mask_weights", "batch_mask_weights", "sparse_indices",
                "batch_sparse_indices", "ln_affines", "profile_ids",
                "bytes_per_profile", "total_bytes", "mask_type", "k",
-               "L", "N", "b")
+               "L", "N", "b", "subscribe")
+
+    def subscribe(self, fn):
+        # engines register their invalidation hook at construction; the
+        # proxy forwards it so re-graduation notifications still flow
+        self._store.subscribe(fn)
 
     def __init__(self, store):
         object.__setattr__(self, "_store", store)

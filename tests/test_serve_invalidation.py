@@ -1,0 +1,179 @@
+"""Stale-profile serving regression (the PR's headline bugfix).
+
+`OnboardingScheduler` graduation writes through `ProfileStore.add_profile`
+(and resume merges through `merge_from`), but `ServeEngine`'s ProfileCache
+keys aggregated Â/B̂ by pid alone — before the invalidation hook, a
+re-trained profile kept serving its STALE aggregate forever. The engine now
+subscribes `invalidate_profile` to the store's change notifications.
+
+Semantics under test:
+- re-graduation (full onboarding round into the SAME store) invalidates,
+  and the next admission's aggregate matches the fresh store, not the cache;
+- `merge_from` (the resume path) invalidates every adopted pid;
+- in-flight slots FINISH on their scattered copy of the old masks — only
+  the next admission re-aggregates.
+"""
+import gc
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.data import MarkovLM
+from repro.models import init_lm
+from repro.serve.engine import Request, ServeEngine
+from repro.train import GraduationPolicy
+from repro.train.onboarding import build_onboarding_run
+
+
+def _cfg():
+    return reduce_for_smoke(get_config("qwen1.5-0.5b"))
+
+
+def _onboard(cfg, store, seed, frozen=None):
+    """One onboarding round graduating profile 0 into `store`. Different
+    seeds give different roster base keys, so re-training the same pid
+    lands on different mask logits (a genuine re-graduation)."""
+    data = MarkovLM(cfg.vocab_size, 2, seed=seed)
+    policy = GraduationPolicy(min_steps=3, max_steps=5, target_acc=2.0)
+    trainer, _ = build_onboarding_run(
+        cfg, data, [0], slots=1, per_slot=2, seq_len=8, policy=policy,
+        lr=5e-2, seed=seed, rng=jax.random.key(seed), log_every=50,
+        frozen=frozen, store=store)
+    trainer.run_until_drained(max_steps=100)
+    assert len(trainer.scheduler.graduated) == 1
+    return trainer
+
+
+def _fresh_aggregate(eng, store, pid):
+    """What admission SHOULD produce for `pid` given the store's current
+    record (the k-sparse path the engine runs on a cache miss)."""
+    ia, wa, ib, wb = store.batch_sparse_indices([pid])
+    a_hat, b_hat = eng._aggregate_sparse(eng.params["xpeft_bank"],
+                                         ia, wa, ib, wb)
+    return np.asarray(a_hat[0]), np.asarray(b_hat[0])
+
+
+def _req(uid, pid, max_new=3):
+    return Request(uid=uid, prompt=np.arange(5, dtype=np.int64) % 31,
+                   profile_id=pid, max_new_tokens=max_new)
+
+
+def test_regraduation_invalidates_and_next_admission_reaggregates():
+    """graduate -> serve -> re-train -> re-graduate -> the next admission
+    matches the FRESH store aggregation, not the cached entry. (Fails on
+    the pre-hook engine: the cache kept the round-1 aggregate.)"""
+    cfg = _cfg()
+    xp = cfg.xpeft
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k)
+    t1 = _onboard(cfg, store, seed=0)
+    frozen = t1.state["frozen"]
+
+    eng = ServeEngine(cfg, frozen, store, max_slots=1, max_seq=32,
+                      sync_every=2)
+    assert eng.admit(_req(0, 0))
+    eng.run_until_drained()
+    stale = {k: np.asarray(v)
+             for k, v in eng.profile_cache.peek(0).items()}
+
+    # re-train profile 0 into the SAME store the engine serves from
+    _onboard(cfg, store, seed=7, frozen=frozen)
+    fresh_a, fresh_b = _fresh_aggregate(eng, store, 0)
+    assert not np.array_equal(fresh_a, stale["a_hat"]), \
+        "re-training produced identical masks; test can't discriminate"
+
+    # the hook dropped the stale entry at graduation time...
+    assert eng.profile_cache.peek(0) is None
+    # ...and the next admission aggregates from the updated store
+    assert eng.admit(_req(1, 0))
+    eng.run_until_drained()
+    entry = eng.profile_cache.peek(0)
+    np.testing.assert_array_equal(np.asarray(entry["a_hat"]), fresh_a)
+    np.testing.assert_array_equal(np.asarray(entry["b_hat"]), fresh_b)
+    ls, lb = store.ln_affines([0])
+    np.testing.assert_array_equal(np.asarray(entry["ln_scale"]),
+                                  np.asarray(ls[0]))
+    assert eng.profile_cache.stats()["invalidations"] == 1
+
+
+def _table_store(cfg, n=2, key=0):
+    xp = cfg.xpeft
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k)
+    table = XP.init_profile_table(jax.random.key(key), cfg)
+    for pid in range(n):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    return store
+
+
+def test_merge_from_invalidates_adopted_pids_only():
+    """The resume path: merging a store notifies every ADOPTED pid; other
+    cached profiles stay hot."""
+    cfg = _cfg()
+    params = init_lm(jax.random.key(0), cfg)
+    store = _table_store(cfg, n=2, key=1)
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=32,
+                      sync_every=2)
+    eng.admit_many([_req(0, 0), _req(1, 1)])
+    eng.run_until_drained()
+    assert eng.profile_cache.peek(0) is not None
+    assert eng.profile_cache.peek(1) is not None
+
+    other = _table_store(cfg, n=1, key=9)  # different masks for pid 0 only
+    store.merge_from(other)
+    assert eng.profile_cache.peek(0) is None, \
+        "merge_from must invalidate the adopted pid's cached aggregate"
+    assert eng.profile_cache.peek(1) is not None, \
+        "untouched profiles must stay cached"
+
+
+def test_store_does_not_pin_dead_engines():
+    """The store holds engine hooks WEAKLY: a store outlives the engines
+    serving from it, and a strong ref would pin every dead engine's device
+    state forever. Dropped engines are pruned at the next notification."""
+    cfg = _cfg()
+    params = init_lm(jax.random.key(0), cfg)
+    store = _table_store(cfg, n=1, key=1)
+    eng = ServeEngine(cfg, params, store, max_slots=1, max_seq=32)
+    assert len(store._listeners) == 1
+    ref = store._listeners[0]
+    del eng
+    gc.collect()
+    assert ref() is None, "dead engine's hook must not be kept alive"
+    table = XP.init_profile_table(jax.random.key(9), cfg)
+    store.add_profile(0, jax.tree.map(lambda t: t[0], table))  # prunes
+    assert store._listeners == []
+
+
+def test_inflight_slot_finishes_on_old_masks():
+    """Invalidating mid-flight only drops the CACHE entry: the slot's
+    scattered Â/B̂ copy keeps serving the in-flight request; the next
+    admission re-aggregates."""
+    cfg = _cfg()
+    params = init_lm(jax.random.key(0), cfg)
+    store = _table_store(cfg, n=1, key=1)
+    eng = ServeEngine(cfg, params, store, max_slots=1, max_seq=64,
+                      sync_every=4)
+    assert eng.admit(_req(0, 0, max_new=16))
+    old = {k: np.asarray(v) for k, v in eng.profile_cache.peek(0).items()}
+    eng.step()  # in flight, not drained
+
+    table = XP.init_profile_table(jax.random.key(9), cfg)
+    store.add_profile(0, jax.tree.map(lambda t: t[0], table))  # re-graduate
+    assert eng.profile_cache.peek(0) is None
+    # the slot buffer still carries the OLD aggregate (documented behavior)
+    np.testing.assert_array_equal(
+        np.asarray(eng.masks["a_hat"][0]),
+        old["a_hat"].astype(np.asarray(eng.masks["a_hat"]).dtype))
+    eng.run_until_drained()
+
+    # next admission of the pid aggregates the NEW record
+    fresh_a, _ = _fresh_aggregate(eng, store, 0)
+    assert eng.admit(_req(1, 0))
+    eng.run_until_drained()
+    np.testing.assert_array_equal(
+        np.asarray(eng.profile_cache.peek(0)["a_hat"]), fresh_a)

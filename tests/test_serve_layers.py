@@ -89,6 +89,40 @@ def test_profile_cache_invalidate_and_stats():
     assert cache.get(7) is None
     st = cache.stats()
     assert st["hits"] == 1 and st["misses"] == 1 and st["bytes"] == 0
+    # invalidations are visible (only the successful drop counts)
+    assert st["invalidations"] == 1
+
+
+def test_profile_cache_rejects_oversized_put_and_counts_it():
+    one = entry_nbytes(_entry())
+    cache = ProfileCache(capacity_bytes=one)
+    cache.put(0, _entry(scale=4))        # larger than the whole budget
+    assert 0 not in cache and len(cache) == 0
+    st = cache.stats()
+    assert st["rejects"] == 1 and st["evictions"] == 0
+    cache.put(1, _entry())               # a fitting entry still caches
+    assert 1 in cache and cache.stats()["rejects"] == 1
+
+
+def test_profile_cache_clear_resets_counters():
+    """clear() starts a fresh measurement window: entries AND counters go
+    to zero, so BENCH_serve hit-rates are comparable across runs."""
+    cache = ProfileCache(capacity_bytes=entry_nbytes(_entry()))
+    cache.get(0)                          # miss
+    cache.put(0, _entry())
+    cache.get(0)                          # hit
+    cache.put(1, _entry())                # evicts 0
+    cache.put(2, _entry(scale=4))         # reject
+    cache.invalidate(1)
+    st = cache.stats()
+    assert (st["hits"], st["misses"], st["evictions"], st["rejects"],
+            st["invalidations"]) == (1, 1, 1, 1, 1)
+    cache.clear()
+    st = cache.stats()
+    assert st["entries"] == 0 and st["bytes"] == 0
+    assert (st["hits"], st["misses"], st["evictions"], st["rejects"],
+            st["invalidations"]) == (0, 0, 0, 0, 0)
+    assert st["hit_rate"] == 0.0
 
 
 # ------------------------------------------------------- engine on rwkv/ssm
