@@ -8,7 +8,7 @@
 PY      := python
 PP      := PYTHONPATH=src:.
 
-.PHONY: verify test bench-smoke onboard-smoke multidev-smoke bench
+.PHONY: verify test bench-smoke onboard-smoke multidev-smoke quant-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -34,8 +34,16 @@ onboard-smoke:
 multidev-smoke:
 	$(PP) $(PY) benchmarks/sharded_smoke.py --check
 
+# quantized-bank smoke: none/int8/int4 engines end to end — admission
+# byte ceilings, int8 greedy-decode agreement, zero-bank-read admission
+# from graduated quantized records, per-device residency reduction. The
+# BENCH json quant rows are gated by check_bench inside bench-smoke; this
+# is the fast standalone probe (also a CI job).
+quant-smoke:
+	$(PP) $(PY) benchmarks/quant_smoke.py
+
 bench:
 	$(PP) $(PY) benchmarks/run.py
 
-verify: test bench-smoke onboard-smoke
+verify: test bench-smoke onboard-smoke quant-smoke
 	@echo "verify: OK"

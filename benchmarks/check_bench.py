@@ -20,6 +20,26 @@ properties:
   (8 fake devices timeshare one CPU — wall clock there measures the
   host, not the sharding)
 
+and the quantized bank (repro/quant, bank_quant=int8|int4):
+
+- the quant kernel records exist and their byte reduction (tpu_win) > 1
+- ANALYTIC at full dims: int8 k-sparse admission <= 0.30x and int4
+  <= 0.20x the bf16 DENSE bank bytes per request, and <= 0.55x / 0.32x
+  the bf16 SPARSE read (2x is the physical bf16->int8 payload limit; the
+  fp16 scales cost the rest — the acceptance's 0.30x/0.20x constants are
+  only reachable against the dense bf16 baseline)
+- MEASURED on the smoke engine: the quant cold admission took the
+  quant_sparse path and read <= 0.55x (int8) / 0.35x (int4) of the
+  same-run bf16 cold admission's bank bytes; store-hydrated admission
+  (graduated quantized Â/B̂ records) read ZERO bank bytes
+- int8 end-to-end greedy decode agrees with the bf16 path on >= 99% of
+  tokens; int4 must hold >= 75% (autoregressive compounding: one argmax
+  flip on the random-weight smoke model diverges the rest of the
+  sequence — per-STEP agreement is also gated at >= 75%)
+- quantized engines are strictly lighter per device than the bf16 engine
+- BENCH_STRICT=1 additionally enforces a quant-vs-none decode throughput
+  floor (dequant must not cost more than it saves)
+
 and the training-side lifecycle (BENCH_train.json, PR 3):
 
 - host syncs per TRAINING step < 1 (metrics buffered on device between
@@ -47,6 +67,17 @@ MIN_SHARDED_VS_SINGLE = 0.05      # 8-fake-device tok/s floor, STRICT only
                                   # only catches catastrophic regressions)
 MAX_SYNCS_PER_TRAIN_STEP = 1.0
 MIN_PROFILES_PER_MIN = 300.0      # smoke-config absolute, BENCH_STRICT only
+
+# quantized bank (bank bytes are the mandatory reduction; agreement and
+# the STRICT throughput floor keep the quality/latency story honest)
+QUANT_GATES = {
+    "int8": {"vs_dense": 0.30, "vs_sparse": 0.55, "measured_vs_none": 0.55,
+             "token_agreement": 0.99},
+    "int4": {"vs_dense": 0.20, "vs_sparse": 0.32, "measured_vs_none": 0.35,
+             "token_agreement": 0.75},
+}
+MIN_INT4_STEP_AGREEMENT = 0.75
+MIN_QUANT_VS_NONE_TPS = 0.15      # BENCH_STRICT only
 
 
 def fail(msg: str):
@@ -82,6 +113,15 @@ def main():
                      "fused_adapter_batched.decode.pallas_interpret"):
         if required not in names:
             fail(f"BENCH_kernels.json missing record {required!r}")
+    for scheme in QUANT_GATES:
+        for required in (f"mask_aggregate_quant_{scheme}.pallas_interpret",
+                         f"fused_adapter_quant_{scheme}.decode"
+                         ".pallas_interpret"):
+            rec = record(kernels, required)
+            if rec.get("tpu_win", 0) <= 1.0:
+                fail(f"{required}: quantized bytes reduction "
+                     f"{rec.get('tpu_win')}x <= 1x — the dequant-fused "
+                     "kernel stopped saving HBM traffic")
 
     agg = record(serve, "admission.aggregate_bytes")
     if agg["reduction"] < MIN_ADMISSION_REDUCTION:
@@ -137,6 +177,57 @@ def main():
         fail(f"decode {tp['tokens_per_s']} tok/s < PR 1 absolute baseline "
              f"{MIN_DECODE_TOKENS_PER_S} on the smoke config (BENCH_STRICT)")
 
+    # ---- quantized bank (int8/int4) -------------------------------------
+    for scheme, g in QUANT_GATES.items():
+        if agg.get(f"{scheme}_vs_dense", 1.0) > g["vs_dense"]:
+            fail(f"analytic {scheme} sparse admission at "
+                 f"{agg.get(f'{scheme}_vs_dense')}x the bf16 dense bytes "
+                 f"> {g['vs_dense']}x ceiling")
+        if agg.get(f"{scheme}_vs_sparse", 1.0) > g["vs_sparse"]:
+            fail(f"analytic {scheme} sparse admission at "
+                 f"{agg.get(f'{scheme}_vs_sparse')}x the bf16 sparse bytes "
+                 f"> {g['vs_sparse']}x ceiling")
+        qadm = record(serve, f"admission.quant_{scheme}")
+        if qadm.get("path") != "quant_sparse":
+            fail(f"{scheme} cold admission took the {qadm.get('path')!r} "
+                 "path — the quantized k-sparse kernel is not being "
+                 "exercised")
+        got = qadm.get("bank_bytes_per_request", 0)
+        ref_b = qadm.get("none_bytes_per_request", 0)
+        if not (0 < got <= g["measured_vs_none"] * ref_b):
+            fail(f"{scheme} admission read {got} bank B/req vs bf16 "
+                 f"{ref_b} — outside (0, {g['measured_vs_none']}x] "
+                 "(quantization must actually cut the measured read)")
+        qstore = record(serve, f"admission.quant_store_{scheme}")
+        if qstore.get("path") != "quant_store" or \
+                qstore.get("bank_bytes_per_request", -1) != 0:
+            fail(f"store-record {scheme} admission path="
+                 f"{qstore.get('path')!r} read "
+                 f"{qstore.get('bank_bytes_per_request')} B/req — "
+                 "graduated quantized records must admit with ZERO bank "
+                 "reads")
+        qdec = record(serve, f"decode.quant_{scheme}")
+        if qdec.get("token_agreement", 0) < g["token_agreement"]:
+            fail(f"{scheme} greedy decode agreed on "
+                 f"{qdec.get('token_agreement')} of tokens < "
+                 f"{g['token_agreement']} floor")
+        if scheme == "int4" and \
+                qdec.get("step_agreement", 0) < MIN_INT4_STEP_AGREEMENT:
+            fail(f"int4 per-step agreement {qdec.get('step_agreement')} < "
+                 f"{MIN_INT4_STEP_AGREEMENT}")
+        if not (0 < qdec.get("resident_bytes", 0)
+                < qdec.get("none_resident_bytes", 0)):
+            fail(f"{scheme} engine resident bytes "
+                 f"{qdec.get('resident_bytes')} not below the bf16 "
+                 f"engine's {qdec.get('none_resident_bytes')} — dropping "
+                 "the bf16 bank stopped paying for itself")
+        if os.environ.get("BENCH_STRICT") and \
+                qdec.get("tokens_per_s", 0) < \
+                MIN_QUANT_VS_NONE_TPS * qdec.get("none_tokens_per_s", 0):
+            fail(f"{scheme} decode {qdec.get('tokens_per_s')} tok/s < "
+                 f"{MIN_QUANT_VS_NONE_TPS}x the same-run bf16 rate "
+                 f"{qdec.get('none_tokens_per_s')} (BENCH_STRICT)")
+
     # ---- multi-device (8-fake-device mesh vs 1 device) ------------------
     par = record(serve, "sharded.parity")
     for bit in ("onboard_store_bitwise_equal", "serve_entries_bitwise_equal",
@@ -183,7 +274,12 @@ def main():
              f"absolute floor {MIN_PROFILES_PER_MIN} on the smoke config "
              "(BENCH_STRICT)")
 
-    print(f"check_bench: OK — admission reduction {agg['reduction']}x, "
+    q8 = record(serve, "admission.quant_int8")
+    q4 = record(serve, "admission.quant_int4")
+    print(f"check_bench: OK — admission reduction {agg['reduction']}x "
+          f"(int8 {q8['vs_none']}x / int4 {q4['vs_none']}x of bf16 sparse "
+          f"bytes, int8 agreement "
+          f"{record(serve, 'decode.quant_int8')['token_agreement']}), "
           f"cache-hit admission {warm['bank_bytes_per_request']} B/req "
           f"(hit rate {warm['hit_rate']}), prefill occupancy "
           f"{pre['occupancy']}, {sync['syncs_per_token']} syncs/token, "

@@ -14,10 +14,14 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import BenchWriter, timeit
+from repro.analysis.bytes import record_bytes, row_bytes
 from repro.kernels import ops, ref
 from repro.kernels.fused_adapter import fused_adapter
 from repro.kernels.fused_adapter_batched import fused_adapter_batched
+from repro.kernels.fused_adapter_quant import fused_adapter_quant_batched
 from repro.kernels.mask_aggregate import mask_aggregate, mask_aggregate_batched
+from repro.kernels.mask_aggregate_quant import mask_aggregate_quant_batched
+from repro.quant import schemes as QS
 
 
 def _bench_mask_aggregate(w: BenchWriter, smoke: bool):
@@ -104,10 +108,54 @@ def _bench_fused_adapter(w: BenchWriter, smoke: bool):
                tpu_win=round(unfused_b / batch_bytes, 2))
 
 
+def _bench_quant_kernels(w: BenchWriter, smoke: bool):
+    """Dequant-fused kernels: HBM bytes at the quantized row width vs the
+    bf16 rows the unquantized path streams (the tpu_win column is the
+    byte reduction check_bench gates)."""
+    print("# quant kernels: dequant-in-register aggregation + adapter")
+    N, d, b, k, P = (64, 256, 32, 8, 2) if smoke else (256, 1024, 64, 50, 4)
+    bank = 0.05 * jax.random.normal(jax.random.key(5), (N, d, b),
+                                    jnp.float32)
+    kb = jax.random.split(jax.random.key(6), P)
+    idx = jnp.stack([jax.random.permutation(kk, N)[:k] for kk in kb]
+                    ).astype(jnp.int32)
+    wgt = jax.random.uniform(kb[0], (P, k), jnp.float32)
+    # one bank's k-sparse read: k slices of d rows, each row length b
+    bf16_bytes = P * k * d * row_bytes(b, itemsize=2)
+    for scheme in ("int8", "int4"):
+        rec = QS.quantize(bank, scheme)
+        q_bytes = P * k * d * row_bytes(b, scheme=scheme)
+        us = timeit(lambda: mask_aggregate_quant_batched(
+            rec["q"], rec["scale"], idx, wgt, scheme=scheme,
+            interpret=True), iters=2, warmup=1)
+        w.emit(f"mask_aggregate_quant_{scheme}.pallas_interpret", us, P=P,
+               hbm_bytes=q_bytes,
+               tpu_win=round(bf16_bytes / q_bytes, 2))
+
+    B, d2, b2 = (8, 256, 64) if smoke else (8, 1024, 64)
+    ks = jax.random.split(jax.random.key(7), 3)
+    x = jax.random.normal(ks[0], (B, 1, d2), jnp.float32)
+    a = jax.random.normal(ks[1], (B, d2, b2)) * 0.05
+    bb = jax.random.normal(ks[2], (B, b2, d2)) * 0.02
+    ls, lb = jnp.ones((B, b2)), jnp.zeros((B, b2))
+    bf16_rec = record_bytes(1, d2, b2, scheme="none")
+    for scheme in ("int8", "int4"):
+        qa, qb = QS.quantize(a, scheme), QS.quantize(bb, scheme)
+        rec_bytes = record_bytes(1, d2, b2, scheme=scheme)
+        us = timeit(lambda: fused_adapter_quant_batched(
+            x, qa["q"], qa["scale"], qb["q"], qb["scale"], ls, lb,
+            scheme=scheme, interpret=True), iters=2, warmup=1)
+        w.emit(f"fused_adapter_quant_{scheme}.decode.pallas_interpret", us,
+               B=B, hbm_bytes=B * (2 * 1 * d2 * 4 + rec_bytes),
+               record_bytes=rec_bytes,
+               tpu_win=round(bf16_rec / rec_bytes, 2))
+
+
 def main(smoke: bool = False):
     w = BenchWriter("kernels")
     _bench_mask_aggregate(w, smoke)
     _bench_fused_adapter(w, smoke)
+    _bench_quant_kernels(w, smoke)
     w.write()
     return w.records
 

@@ -36,37 +36,39 @@ from repro.utils import pow2_bucket, pow2_count
 
 
 def _build_engine(cfg, n_profiles: int, max_slots: int, max_seq: int,
-                  precompute: bool = True, sync_every: int = 8):
+                  precompute: bool = True, sync_every: int = 8,
+                  store_agg: bool = False):
     from repro.core import xpeft as XP
     from repro.core.profiles import ProfileStore
     from repro.models import init_lm
     from repro.serve.engine import ServeEngine
 
+    xp = cfg.xpeft
     key = jax.random.key(0)
     params = init_lm(key, cfg)
-    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
-                         cfg.xpeft.bottleneck, cfg.xpeft.mask_type,
-                         cfg.xpeft.k)
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k, quant=xp.bank_quant,
+                         quant_group=xp.quant_group)
     table = XP.init_profile_table(key, cfg)
     for pid in range(n_profiles):
-        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+        prof = jax.tree.map(lambda t: t[pid], table)
+        agg = None
+        if store_agg and xp.bank_quant != "none":
+            # graduation-style quantized Â/B̂ record (quantize-on-write):
+            # serving admits these with ZERO bank reads
+            eff = XP.precompute_effective_adapters(params["xpeft_bank"],
+                                                   prof, xp)
+            agg = (eff["a_hat"], eff["b_hat"])
+        store.add_profile(pid, prof, agg=agg)
     eng = ServeEngine(cfg, params, store, max_slots=max_slots,
                       max_seq=max_seq, precompute=precompute,
                       sync_every=sync_every)
     return eng
 
 
-def aggregation_bytes(cfg) -> dict:
-    """Analytic bank bytes read per admission (both banks), dense vs sparse."""
-    xp = cfg.xpeft
-    L, N, k, d, b = (cfg.num_layers, xp.num_adapters, xp.k, cfg.d_model,
-                     xp.bottleneck)
-    itemsize = 2 if cfg.dtype == "bfloat16" else 4
-    dense = 2 * N * L * d * b * itemsize
-    sparse = 2 * k * L * d * b * itemsize
-    return {"N": N, "k": k, "L": L, "d": d, "b": b,
-            "bytes_dense": dense, "bytes_sparse": sparse,
-            "reduction": round(dense / sparse, 2)}
+# the analytic admission byte math lives in repro.analysis.bytes (shared
+# with the engine's admit stats and the quant gates in check_bench)
+from repro.analysis.bytes import aggregation_bytes  # noqa: E402
 
 
 def main(smoke: bool = False):
@@ -186,6 +188,76 @@ def main(smoke: bool = False):
     w.emit("decode.throughput_per_token_sync", base_dt / steps * 1e6,
            steps=steps, slots=max_slots, tokens=base_toks,
            tokens_per_s=round(base_toks / base_dt, 1))
+
+    # ---- quantized bank (int8/int4): measured bytes + decode parity ----
+    # fresh engines on the same reduced config/seed; the bf16 reference
+    # tokens come from a fresh none-engine so every path decodes the same
+    # requests from a cold start
+    def quant_reqs(n, max_new):
+        return [Request(uid=900 + i,
+                        prompt=np.arange(5 + i % 4) % cfg.vocab_size,
+                        profile_id=i % n_prof, max_new_tokens=max_new)
+                for i in range(n)]
+
+    n_dec = 2 * max_slots
+    ref_eng = _build_engine(cfg, n_prof, max_slots, max_seq=128,
+                            sync_every=sync_every)
+    cold_reqs = quant_reqs(max_slots, 2)
+    ref_eng.admit_many(cold_reqs)
+    ref_cold_bytes = ref_eng.last_admission["bank_bytes_per_request"]
+    ref_eng.abort_all()
+    dec = quant_reqs(n_dec, 16)
+    t0 = time.perf_counter()
+    ref_eng.run_until_drained(dec)
+    ref_tps = sum(len(r.generated) for r in dec) / (time.perf_counter() - t0)
+    ref_toks = [list(r.generated) for r in dec]
+
+    for scheme in ("int8", "int4"):
+        qcfg = cfg.with_xpeft(bank_quant=scheme)
+        eng_q = _build_engine(qcfg, n_prof, max_slots, max_seq=128,
+                              sync_every=sync_every)
+        t0 = time.perf_counter()
+        n_adm = eng_q.admit_many(quant_reqs(max_slots, 2))
+        adm_us = (time.perf_counter() - t0) / max(n_adm, 1) * 1e6
+        adm = eng_q.last_admission
+        eng_q.abort_all()
+        dec_q = quant_reqs(n_dec, 16)
+        t0 = time.perf_counter()
+        eng_q.run_until_drained(dec_q)
+        tps = sum(len(r.generated) for r in dec_q) / \
+            (time.perf_counter() - t0)
+        toks = [list(r.generated) for r in dec_q]
+        pairs = [(t, u) for s, su in zip(toks, ref_toks)
+                 for t, u in zip(s, su)]
+        agree = sum(t == u for t, u in pairs) / max(len(pairs), 1)
+        # per-STEP agreement: first generated token of each request is an
+        # independent trial (no autoregressive compounding)
+        step_pairs = [(s[0], su[0]) for s, su in zip(toks, ref_toks)]
+        step_agree = sum(t == u for t, u in step_pairs) / len(step_pairs)
+        w.emit(f"admission.quant_{scheme}", adm_us, requests=n_adm,
+               path=adm["path"], scheme=adm["scheme"],
+               bank_bytes_per_request=adm["bank_bytes_per_request"],
+               none_bytes_per_request=ref_cold_bytes,
+               vs_none=round(adm["bank_bytes_per_request"]
+                             / max(ref_cold_bytes, 1), 3))
+        w.emit(f"decode.quant_{scheme}", None, tokens_per_s=round(tps, 1),
+               none_tokens_per_s=round(ref_tps, 1),
+               token_agreement=round(agree, 4),
+               step_agreement=round(step_agree, 4),
+               resident_bytes=eng_q.resident_bytes_per_device()["total"],
+               none_resident_bytes=ref_eng.
+               resident_bytes_per_device()["total"])
+
+        # store-hydrated admission: graduated quantized Â/B̂ records admit
+        # with ZERO bank reads (the quantize-on-write train→serve path)
+        eng_s = _build_engine(qcfg, n_prof, max_slots, max_seq=128,
+                              sync_every=sync_every, store_agg=True)
+        eng_s.admit_many(quant_reqs(max_slots, 2))
+        adm_s = eng_s.last_admission
+        w.emit(f"admission.quant_store_{scheme}", None,
+               path=adm_s["path"],
+               bank_bytes_per_request=adm_s["bank_bytes_per_request"],
+               store_hydrated=adm_s["store_hydrated_profiles"])
 
     # multi-device parity + throughput: subprocess (this process pinned
     # itself to 1 CPU device at first jax use; the smoke forces 8 fake

@@ -49,6 +49,38 @@ def run(figure1: bool = False):
             sa = P * M.adapter_bytes(D, 48, L)
             print(f"{P},{hard},{soft},{sa}")
 
+    quantized_bank_table()
+
+
+def quantized_bank_table():
+    """Extend the Table-1 memory-factor story to large N: at scale the
+    BANK (N·L·d·b) and the per-profile aggregated Â/B̂ records — not the
+    312-byte masks — bound resident profiles per device. int8/int4
+    (repro/quant) shrink both; columns are exact byte counts from the
+    shared analytic helper (matches quantize_bank's true array bytes)."""
+    from repro.analysis import bytes as AB
+
+    b = 64
+    print("# Quantized bank — per-profile Â/B̂ record & per-bank bytes "
+          f"(d={D} b={b} L={L})")
+    print("scheme,record_bytes_per_profile,bank_bytes_N100,bank_bytes_N400,"
+          "vs_bf16")
+    base = None
+    for scheme in ("none", "int8", "int4"):
+        rec = AB.record_bytes(L, D, b, scheme=scheme)
+        banks = {N: N * L * AB.bank_slice_bytes(D, b, scheme=scheme,
+                                                itemsize=2)
+                 for N in (100, 400)}
+        base = base or banks[400]
+        factor = base / banks[400]
+        print(f"{scheme},{rec},{banks[100]},{banks[400]},{factor:.2f}x")
+        emit(f"table1.quant_{scheme}", 0.0,
+             f"record={rec};bank_n400={banks[400]};factor={factor:.2f}")
+    # the quantized bank must actually shrink (gate-adjacent sanity)
+    assert AB.bank_slice_bytes(D, b, scheme="int4", itemsize=2) \
+        < AB.bank_slice_bytes(D, b, scheme="int8", itemsize=2) \
+        < AB.bank_slice_bytes(D, b, itemsize=2)
+
 
 def main():
     run(figure1=True)

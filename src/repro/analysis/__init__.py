@@ -1,2 +1,5 @@
+from repro.analysis.bytes import (  # noqa: F401
+    admission_bank_bytes, aggregation_bytes, bank_slice_bytes, itemsize_for,
+    record_bytes, row_bytes, tree_nbytes)
 from repro.analysis.hlo import collective_bytes  # noqa: F401
 from repro.analysis.roofline import roofline_terms, model_flops  # noqa: F401

@@ -31,6 +31,14 @@ class XPeftConfig:
     # (kernels/ops.py): "auto" = compiled Pallas on TPU, jnp ref elsewhere;
     # "pallas" | "interpret" | "ref" force a backend.
     kernel_impl: str = "auto"
+    # serving-side bank/record quantization (repro/quant): "none" keeps the
+    # bf16/fp32 bank bitwise-identical to the unquantized path; "int8" is
+    # symmetric per-row with fp16 scales; "int4" is group-wise packed.
+    # Training always stays bf16/fp32 — only the serve hot paths (k-sparse
+    # admission aggregation, decode) read quantized rows, dequantized
+    # in-register by the kernels in kernels/*_quant.py.
+    bank_quant: str = "none"         # "none" | "int8" | "int4"
+    quant_group: int = 32            # int4 group-size upper bound (per row)
     max_profiles: int = 1024         # rows in the per-profile mask table
 
 

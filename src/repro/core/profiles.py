@@ -21,12 +21,18 @@ from repro.core import masks as M
 
 class ProfileStore:
     def __init__(self, num_layers: int, num_adapters: int, bottleneck: int,
-                 mask_type: str = "hard", k: int = 50):
+                 mask_type: str = "hard", k: int = 50,
+                 quant: str = "none", quant_group: int = 32):
         self.L = num_layers
         self.N = num_adapters
         self.b = bottleneck
         self.mask_type = mask_type
         self.k = k
+        # quant != "none": graduation may attach the profile's aggregated
+        # Â/B̂, persisted QUANTIZED (int8/int4 + fp16 scales) — serving then
+        # admits the profile with ZERO bank reads (quant_records hydration)
+        self.quant = quant
+        self.quant_group = quant_group
         self._rec: Dict[int, dict] = {}
         self._listeners: list = []
 
@@ -58,13 +64,21 @@ class ProfileStore:
         self._listeners = live
 
     # ------------------------------------------------------------------ add
-    def add_profile(self, pid: int, profile_params: dict) -> None:
+    def add_profile(self, pid: int, profile_params: dict, *,
+                    agg=None) -> None:
         """Freeze a trained profile into its byte-level record.
 
         `profile_params` carries mask logits mA/mB + adapter-LN affines,
         and optionally a per-profile classifier head (head_w/head_b) —
         graduated encoder profiles keep their head so serving/eval can
-        reproduce classification logits, not just masks."""
+        reproduce classification logits, not just masks.
+
+        `agg` (quantized stores only): the profile's aggregated
+        ``(Â [L, d, b], B̂ [L, b, d])``, quantized ON WRITE with the
+        store's scheme — graduation passes the masks-x-bank contraction it
+        already computed so serving can admit this profile without reading
+        the bank at all (`quant_records`). Training state stays bf16/fp32;
+        only the persisted record is low-bit."""
         rec = {
             "ln_scale": np.asarray(profile_params["ln_scale"], np.float16),
             "ln_bias": np.asarray(profile_params["ln_bias"], np.float16),
@@ -78,6 +92,18 @@ class ProfileStore:
         if "head_w" in profile_params:
             rec["head_w"] = np.asarray(profile_params["head_w"], np.float16)
             rec["head_b"] = np.asarray(profile_params["head_b"], np.float16)
+        if agg is not None:
+            if self.quant == "none":
+                raise ValueError("aggregated records require a quantized "
+                                 "store (quant='int8'|'int4')")
+            from repro.quant import schemes as QS
+            a_hat, b_hat = agg
+            qa = QS.quantize(a_hat, self.quant, group=self.quant_group)
+            qb = QS.quantize(b_hat, self.quant, group=self.quant_group)
+            rec["agg_a_q"] = np.asarray(qa["q"])
+            rec["agg_a_scale"] = np.asarray(qa["scale"])
+            rec["agg_b_q"] = np.asarray(qb["q"])
+            rec["agg_b_scale"] = np.asarray(qb["scale"])
         self._rec[int(pid)] = rec
         self._notify(int(pid))
 
@@ -127,6 +153,23 @@ class ProfileStore:
         wb = jnp.stack([p[3] for p in parts])
         return ia, wa, ib, wb
 
+    def has_quant_record(self, pid: int) -> bool:
+        """True when `pid` carries a quantized aggregated Â/B̂ record."""
+        return "agg_a_q" in self._rec.get(int(pid), {})
+
+    def quant_records(self, pids: Iterable[int]):
+        """Stacked quantized aggregated records for a batch of profiles:
+        {"a_q" [R, L, d, b|b/2], "a_scale", "b_q", "b_scale"} as jnp
+        arrays — the zero-bank-read admission hydration (the engine
+        scatters these straight into its quantized slot buffers)."""
+        assert self.quant != "none", "store has no quantized records"
+        out = {}
+        for src, dst in (("agg_a_q", "a_q"), ("agg_a_scale", "a_scale"),
+                         ("agg_b_q", "b_q"), ("agg_b_scale", "b_scale")):
+            out[dst] = jnp.asarray(
+                np.stack([self._rec[int(pid)][src] for pid in pids]))
+        return out
+
     def head(self, pid: int):
         """Per-profile classifier head (fp16-stored) as float32 jnp arrays,
         or None for profiles graduated without one."""
@@ -154,9 +197,10 @@ class ProfileStore:
         they are never re-trained). Every adopted pid is notified to
         subscribers — a record replaced here may already be cached by a
         serving engine, which must drop its aggregated copy."""
-        assert (self.L, self.N, self.b, self.mask_type, self.k) == \
-            (other.L, other.N, other.b, other.mask_type, other.k), \
-            "store shape mismatch"
+        assert (self.L, self.N, self.b, self.mask_type, self.k,
+                self.quant, self.quant_group) == \
+            (other.L, other.N, other.b, other.mask_type, other.k,
+             other.quant, other.quant_group), "store shape mismatch"
         self._rec.update(other._rec)
         for pid in other._rec:
             self._notify(int(pid))
@@ -170,6 +214,14 @@ class ProfileStore:
     def total_bytes(self, include_ln: bool = False) -> int:
         return len(self._rec) * self.bytes_per_profile(include_ln)
 
+    def record_nbytes(self, pid: int) -> int:
+        """TRUE byte size of one persisted record — packed masks, fp16
+        affines/heads, and (quantized stores) the int8/int4 aggregated
+        Â/B̂ plus their fp16 scales. This is what capacity planning should
+        budget with; `bytes_per_profile` is the analytic mask-only
+        number behind the paper's Table-1 factors."""
+        return sum(v.nbytes for v in self._rec[int(pid)].values())
+
     # ---------------------------------------------------------------- persist
     def save(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -178,7 +230,8 @@ class ProfileStore:
             for k, v in rec.items():
                 payload[f"{pid}:{k}"] = v
         meta = dict(L=self.L, N=self.N, b=self.b, mask_type=self.mask_type,
-                    k=self.k, pids=sorted(self._rec))
+                    k=self.k, quant=self.quant,
+                    quant_group=self.quant_group, pids=sorted(self._rec))
         # mkstemp with a .npz suffix: np.savez appends ".npz" to names that
         # lack it, which used to leave the original empty temp file behind
         fd, tmp = tempfile.mkstemp(suffix=".npz",
@@ -191,7 +244,9 @@ class ProfileStore:
     def load(cls, path: str) -> "ProfileStore":
         z = np.load(path, allow_pickle=False)
         meta = json.loads(str(z["__meta__"]))
-        store = cls(meta["L"], meta["N"], meta["b"], meta["mask_type"], meta["k"])
+        store = cls(meta["L"], meta["N"], meta["b"], meta["mask_type"],
+                    meta["k"], meta.get("quant", "none"),
+                    meta.get("quant_group", 32))
         for pid in meta["pids"]:
             # records carry a variable key set (optional per-profile heads):
             # adopt every "<pid>:<key>" entry rather than a fixed tuple

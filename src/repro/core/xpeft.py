@@ -138,6 +138,44 @@ def precompute_effective_adapters_sparse(bank: dict, idx_a, w_a, idx_b, w_b,
             b_hat.reshape(*batch, L, b, d).astype(dt))
 
 
+def precompute_effective_adapters_sparse_quant(qbank: dict, idx_a, w_a,
+                                               idx_b, w_b, xp):
+    """k-sparse admission aggregation over a QUANTIZED bank.
+
+    qbank: {"bank_a_q","bank_a_scale","bank_b_q","bank_b_scale"} with
+    leading [L, N] dims (quant.schemes.quantize_bank). Same layer-folding
+    trick as precompute_effective_adapters_sparse — ONE batched launch of
+    P = R·L rows — but HBM reads are the quantized row width and the
+    dequant happens in-register (kernels/mask_aggregate_quant.py).
+    Returns fp32 (Â [..., L, d, b], B̂ [..., L, b, d]); the engine
+    re-quantizes per row for its cache entries / slot buffers.
+    """
+    from repro.kernels import ops
+
+    L, N = qbank["bank_a_q"].shape[:2]
+    d = qbank["bank_a_q"].shape[2]
+    b = qbank["bank_b_q"].shape[2]
+    batch = idx_a.shape[:-2]
+    flat = {k: v.reshape((L * N,) + v.shape[2:]) for k, v in qbank.items()}
+    off = (jnp.arange(L, dtype=jnp.int32) * N)[:, None]     # [L, 1]
+
+    def flatten(idx, w):
+        k = idx.shape[-1]
+        fi = (idx.astype(jnp.int32) + off).reshape(-1, k)
+        return fi, w.astype(jnp.float32).reshape(-1, k)
+
+    fia, fwa = flatten(idx_a, w_a)
+    fib, fwb = flatten(idx_b, w_b)
+    a_hat = ops.mask_aggregate_quant_batched(
+        flat["bank_a_q"], flat["bank_a_scale"], fia, fwa,
+        scheme=xp.bank_quant, impl=xp.kernel_impl)
+    b_hat = ops.mask_aggregate_quant_batched(
+        flat["bank_b_q"], flat["bank_b_scale"], fib, fwb,
+        scheme=xp.bank_quant, impl=xp.kernel_impl)
+    return (a_hat.reshape(*batch, L, d, a_hat.shape[-1]),
+            b_hat.reshape(*batch, L, b, b_hat.shape[-1]))
+
+
 def apply_precomputed_layer(x, eff_l: dict, xp):
     """Apply an admission-time-aggregated adapter slice (per layer)."""
     from repro.kernels import ops

@@ -62,6 +62,18 @@ _rule("ew_d", "expert", "mlp_fsdp", None)
 # X-PEFT adapter bank [L, N, d, b] / [L, N, b, d]: d_model TP-sharded
 _rule("bank_a", "adapter_n", "tp_d", None)
 _rule("bank_b", "adapter_n", None, "tp_d")
+# quantized bank (quant/schemes.quantize_bank): the q payloads keep the
+# bf16 bank's layout (int4 packs the LAST axis, which is never the
+# TP-sharded d_model dim for bank_a and stays divisibility-guarded for
+# bank_b), and the fp16 scale arrays ride along on their matching dims —
+# int8 scales drop the quantized axis (ndim 3), int4 group scales keep a
+# trailing group axis (ndim 4)
+_rule("bank_a_q", "adapter_n", "tp_d", None)
+_rule("bank_b_q", "adapter_n", None, "tp_d")
+_rule("bank_a_scale", "adapter_n", "tp_d", ndim=3)
+_rule("bank_a_scale", "adapter_n", "tp_d", None, ndim=4)
+_rule("bank_b_scale", "adapter_n", None, ndim=3)
+_rule("bank_b_scale", "adapter_n", None, "tp_d", ndim=4)
 # rwkv (2D projections over flattened heads)
 _rule("rwr", None, "tp_d")
 _rule("rwk", None, "tp_d")

@@ -20,6 +20,12 @@ Batched (ndim-3) inputs dispatch to the single-launch batched kernels
 rather than a vmap-of-kernel: one grid `(B, ...)` launch pipelines the
 per-row Â/B̂ fetches instead of serializing B independent pallas_calls.
 
+The quantized-bank routes (`mask_aggregate_quant_batched`,
+`fused_adapter_quant` — XPeftConfig.bank_quant) take int8 / packed-int4
+payloads + fp16 scales and dequantize in-register inside the kernels
+(`mask_aggregate_quant.py`, `fused_adapter_quant.py`); the jnp refs share
+the exact dequant op sequence (`quant.schemes.dequant_block`).
+
 TPU deployment note: `bottleneck` b of 48/64 is below the 128 lane width;
 for peak MXU utilization pad Â/B̂'s b dim to 128 — LN must then mask the
 padded columns (ops here keep the unpadded semantics; the pad is a
@@ -34,9 +40,14 @@ from repro.kernels import ref
 from repro.kernels.fused_adapter import fused_adapter as _fused_pallas
 from repro.kernels.fused_adapter_batched import (
     fused_adapter_batched as _fused_pallas_batched)
+from repro.kernels.fused_adapter_quant import (
+    fused_adapter_quant_batched as _fused_pallas_quant)
 from repro.kernels.mask_aggregate import mask_aggregate as _agg_pallas
 from repro.kernels.mask_aggregate import (
     mask_aggregate_batched as _agg_pallas_batched)
+from repro.kernels.mask_aggregate_quant import (
+    mask_aggregate_quant_batched as _agg_pallas_quant)
+from repro.quant.schemes import check_scheme
 
 IMPLS = ("auto", "pallas", "interpret", "ref")
 
@@ -90,3 +101,43 @@ def fused_adapter(x, a_hat, b_hat, ln_scale, ln_bias, *,
                                      activation=activation)
     return _fused_pallas(x, a_hat, b_hat, ln_scale, ln_bias,
                          activation=activation, interpret=impl == "interpret")
+
+
+# ----------------------------------------------------------------------------
+# Quantized-bank routes (XPeftConfig.bank_quant != "none"). Pure additions:
+# with bank_quant "none" nothing below is reachable and the unquantized
+# dispatch above stays bitwise-identical.
+# ----------------------------------------------------------------------------
+
+def mask_aggregate_quant_batched(q, scale, idx, w, *, scheme: str,
+                                 impl: str = "auto"):
+    """k-sparse aggregation over a quantized bank: q [N,d,b|b/2] int8/uint8,
+    scale [N,d|d,b/g] fp16, idx [P,k], w [P,k] -> [P,d,b] f32 (dequantized
+    in-register; HBM reads stay at the quantized row width)."""
+    check_scheme(scheme)
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.mask_aggregate_quant_batched_ref(q, scale, idx, w,
+                                                    scheme=scheme)
+    return _agg_pallas_quant(q, scale, idx, w, scheme=scheme,
+                             interpret=impl == "interpret")
+
+
+def fused_adapter_quant(x, a_q, a_scale, b_q, b_scale, ln_scale, ln_bias, *,
+                        scheme: str, activation: str = "gelu",
+                        impl: str = "auto"):
+    """Dequant-fused bottleneck adapter (decode/prefill hot path): x
+    [B,T,d] with per-row quantized Â/B̂ records. Batched-only — quantized
+    records always arrive per-slot from the profile cache / mask buffers."""
+    check_scheme(scheme)
+    if x.ndim != 3:
+        raise ValueError("fused_adapter_quant is batched-only: x must be "
+                         f"[B, T, d], got ndim={x.ndim}")
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.fused_adapter_quant_batched_ref(
+            x, a_q, a_scale, b_q, b_scale, ln_scale, ln_bias,
+            scheme=scheme, activation=activation)
+    return _fused_pallas_quant(x, a_q, a_scale, b_q, b_scale, ln_scale,
+                               ln_bias, scheme=scheme, activation=activation,
+                               interpret=impl == "interpret")

@@ -32,6 +32,54 @@ def fused_adapter_ref(x, a_hat, b_hat, ln_scale, ln_bias, *,
     return (x.astype(jnp.float32) + y).astype(x.dtype)
 
 
+def mask_aggregate_quant_batched_ref(q, scale, idx, w, *, scheme: str):
+    """Quantized twin of mask_aggregate_batched_ref, BIT-identical to the
+    Pallas kernel: dequant via the shared quant.schemes.dequant_block and
+    fp32 accumulation in the kernel's k-minor order (a python loop over the
+    static k, not an einsum — einsum reduction order is XLA's choice)."""
+    from repro.quant.schemes import dequant_block
+
+    P, k = idx.shape
+    rows_q = jnp.take(q, idx.reshape(-1), axis=0)
+    rows_q = rows_q.reshape((P, k) + rows_q.shape[1:])
+    rows_s = jnp.take(scale, idx.reshape(-1), axis=0)
+    rows_s = rows_s.reshape((P, k) + rows_s.shape[1:])
+    out = None
+    for ki in range(k):
+        term = w[:, ki, None, None].astype(jnp.float32) * \
+            dequant_block(rows_q[:, ki], rows_s[:, ki], scheme)
+        out = term if out is None else out + term
+    return out
+
+
+def fused_adapter_quant_batched_ref(x, a_q, a_scale, b_q, b_scale, ln_scale,
+                                    ln_bias, *, scheme: str,
+                                    activation: str = "gelu",
+                                    eps: float = 1e-6):
+    """Quantized twin of fused_adapter_batched_ref, mirroring the Pallas
+    kernel's exact op sequence (fp32 x, dequant_block, mean/rsqrt LN) so
+    interpret-mode parity is bitwise, not allclose."""
+    from repro.quant.schemes import dequant_block
+
+    B = x.shape[0]
+    rows = []
+    for i in range(B):
+        xi = x[i].astype(jnp.float32)
+        a = dequant_block(a_q[i], a_scale[i], scheme)
+        h = jnp.dot(xi, a, preferred_element_type=jnp.float32)
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + eps)
+        h = h * ln_scale[i].astype(jnp.float32) + \
+            ln_bias[i].astype(jnp.float32)
+        if activation == "gelu":
+            h = jax.nn.gelu(h)
+        y = jnp.dot(h, dequant_block(b_q[i], b_scale[i], scheme),
+                    preferred_element_type=jnp.float32)
+        rows.append((xi + y).astype(x.dtype))
+    return jnp.stack(rows)
+
+
 def mask_aggregate_batched_ref(bank, idx, w):
     """bank [N, d, b], idx [P, k], w [P, k] -> [P, d, b] fp32."""
     g = jnp.take(bank, idx, axis=0).astype(jnp.float32)      # [P, k, d, b]

@@ -137,6 +137,18 @@ def init_cache(cfg, batch: int, seq: int, dtype=None):
 def _xpeft_apply(x, bank_l, masks_l, cfg):
     if masks_l is None or not cfg.xpeft.enabled:
         return x
+    if "a_q" in masks_l:
+        # QUANTIZED aggregated adapters (bank_quant serving): per-example
+        # int8 / packed-int4 Â/B̂ + fp16 scales, dequantized in-register by
+        # the dequant-fused kernel — the record never widens in HBM.
+        from repro.kernels import ops
+        return ops.fused_adapter_quant(
+            x, masks_l["a_q"], masks_l["a_scale"],
+            masks_l["b_q"], masks_l["b_scale"],
+            masks_l["ln_scale"], masks_l["ln_bias"],
+            scheme=cfg.xpeft.bank_quant,
+            activation=cfg.xpeft.adapter_activation,
+            impl=cfg.xpeft.kernel_impl)
     if "a_hat" in masks_l:
         # admission-time aggregated adapters (serving fast path): per-example
         # Â [B,d,b] / B̂ [B,b,d] already contracted against the bank. Routed

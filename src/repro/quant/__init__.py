@@ -1,0 +1,9 @@
+"""Quantized adapter-bank subsystem: int8/int4 schemes for the bank and
+stored Â/B̂ records, shared by the Pallas dequant-fused kernels
+(kernels/mask_aggregate_quant.py, kernels/fused_adapter_quant.py), the
+serving engine, the profile store, and the byte-accounting helpers
+(analysis/bytes.py). Select with ``XPeftConfig.bank_quant``."""
+from repro.quant.schemes import (  # noqa: F401
+    SCHEMES, check_scheme, dequant_block, dequantize, group_for, pack_int4,
+    quant_spec, quantize, quantize_bank, quantize_int4, quantize_int8,
+    unpack_int4)

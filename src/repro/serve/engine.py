@@ -65,13 +65,46 @@ class ServeEngine:
                  sync_every: int = 8, cache_bytes: Optional[int] = 64 << 20,
                  mesh=None):
         self.cfg = cfg
-        self.params = params
         self.store = store
         self.S = max_seq
         self.n_slots = max_slots
         self.precompute = precompute and cfg.xpeft.enabled
         self.sync_every = sync_every
         self.mesh = mesh
+        # quantized bank (cfg.xpeft.bank_quant): the bf16/fp32 bank is
+        # quantized ONCE here and DROPPED from the resident params — the
+        # engine serves every admission from the int8/int4 rows (k-sparse
+        # aggregation dequantizes in-register) and every decode step from
+        # quantized Â/B̂ records, so per-device residency shrinks by the
+        # storage factor. bank_quant="none" leaves params untouched and
+        # every code path below identical to the unquantized engine.
+        self.quant = cfg.xpeft.bank_quant if self.precompute else "none"
+        self.qbank = None
+        self._qrow_bytes = 0
+        if cfg.xpeft.enabled and cfg.xpeft.bank_quant != "none" \
+                and not precompute:
+            # refuse rather than silently serve the unquantized bank: the
+            # per-step mask path hydrates against the fp bank every step,
+            # so none of bank_quant's byte/residency savings would exist
+            raise ValueError("bank_quant serving requires precompute "
+                             "admission (per-step mask hydration reads "
+                             "the unquantized bank)")
+        if self.quant != "none":
+            from repro.quant import schemes as QS
+            QS.check_scheme(self.quant)
+            if store.mask_type != "hard":
+                raise ValueError("bank_quant serving requires hard-mask "
+                                 "profiles (k-sparse quantized aggregation)")
+            self.qbank = QS.quantize_bank(params["xpeft_bank"], self.quant,
+                                          group=cfg.xpeft.quant_group)
+            params = {k: v for k, v in params.items() if k != "xpeft_bank"}
+            # TRUE quantized bank bytes of one (l, n) row across both banks
+            # + scales — what one k-sparse admission read actually moves
+            L_, N_ = self.qbank["bank_a_q"].shape[:2]
+            self._qrow_bytes = sum(
+                int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+                for v in self.qbank.values()) // (L_ * N_)
+        self.params = params
         # multi-device: same engine code on 1 device or an N-device mesh.
         # Params take the repo sharding rules (TP over "model": bank d_model,
         # heads, mlp, vocab — fsdp=False: serving replicates what TP doesn't
@@ -87,6 +120,16 @@ class ServeEngine:
             self._shardings["params"] = SH.to_shardings(
                 self._specs["params"], mesh)
             self.params = jax.device_put(params, self._shardings["params"])
+            if self.qbank is not None:
+                # quantized leaves keep the bf16 bank's TP layout: bank_*_q
+                # shard d_model over "model", scale arrays ride along on
+                # their matching dims (rules in distributed/sharding.py)
+                self._specs["qbank"] = SH.param_specs(self.qbank, mesh,
+                                                      fsdp=False)
+                self._shardings["qbank"] = SH.to_shardings(
+                    self._specs["qbank"], mesh)
+                self.qbank = jax.device_put(self.qbank,
+                                            self._shardings["qbank"])
         self.cache = MDL.init_cache(cfg, max_slots, max_seq)
         if mesh is not None:
             self._specs["cache"] = SH.cache_specs(self.cache, mesh, cfg,
@@ -104,7 +147,26 @@ class ServeEngine:
         store.subscribe(self.invalidate_profile)
         xp = cfg.xpeft
         L, N, b, d = cfg.num_layers, xp.num_adapters, xp.bottleneck, cfg.d_model
-        if self.precompute:
+        if self.precompute and self.quant != "none":
+            # per-slot QUANTIZED Â/B̂ records + fp16 scales — the decode
+            # step reads these and dequantizes in-register
+            # (kernels/fused_adapter_quant.py via models._xpeft_apply)
+            from repro.quant import schemes as QS
+            aq_s, aq_dt, as_s = QS.quant_spec((max_slots, L, d, b),
+                                              self.quant,
+                                              group=xp.quant_group)
+            bq_s, bq_dt, bs_s = QS.quant_spec((max_slots, L, b, d),
+                                              self.quant,
+                                              group=xp.quant_group)
+            self.masks = {
+                "a_q": jnp.zeros(aq_s, aq_dt),
+                "a_scale": jnp.zeros(as_s, jnp.float16),
+                "b_q": jnp.zeros(bq_s, bq_dt),
+                "b_scale": jnp.zeros(bs_s, jnp.float16),
+                "ln_scale": jnp.ones((max_slots, L, b), jnp.float32),
+                "ln_bias": jnp.zeros((max_slots, L, b), jnp.float32),
+            }
+        elif self.precompute:
             dt = jnp.dtype(cfg.dtype)
             self.masks = {
                 "a_hat": jnp.zeros((max_slots, L, d, b), dt),
@@ -155,6 +217,21 @@ class ServeEngine:
             XP.precompute_effective_adapters_sparse(bank, ia, wa, ib, wb, xp))
         self._aggregate_dense = jax.jit(
             XP.precompute_effective_adapters_dense_batched)
+        if self.quant != "none":
+            from repro.quant import schemes as QS
+            self._aggregate_sparse_quant = jax.jit(
+                lambda qbank, ia, wa, ib, wb:
+                XP.precompute_effective_adapters_sparse_quant(
+                    qbank, ia, wa, ib, wb, xp))
+            # re-quantize freshly aggregated fp32 rows into the cache/slot
+            # record layout (per-row over the last axis, like the bank)
+            def _requant(a_hat, b_hat):
+                qa = QS.quantize(a_hat, self.quant, group=xp.quant_group)
+                qb = QS.quantize(b_hat, self.quant, group=xp.quant_group)
+                return {"a_q": qa["q"], "a_scale": qa["scale"],
+                        "b_q": qb["q"], "b_scale": qb["scale"]}
+
+            self._requantize = jax.jit(_requant)
         # what the last admission actually did (path, cache hits, bank bytes,
         # prefill occupancy) — serve_bench reports these so CI gates on
         # exercised behavior, not config math
@@ -209,6 +286,8 @@ class ServeEngine:
                                    "cache_hits": 0, "cache_misses": R,
                                    "bank_bytes_per_request": 0}
             return {"w_a": wa, "w_b": wb, "ln_scale": ls, "ln_bias": lb}
+        if self.quant != "none":
+            return self._hydrate_stacked_quant(reqs, pids)
 
         entries = {}
         hits = misses = 0
@@ -223,10 +302,14 @@ class ServeEngine:
                 if pid not in missing:
                     missing.append(pid)
 
+        from repro.analysis.bytes import bank_slice_bytes
         bank = self.params["xpeft_bank"]
         L, N = bank["bank_a"].shape[:2]
-        slice_bytes = int(np.prod(bank["bank_a"].shape[2:])
-                          * 2 * bank["bank_a"].dtype.itemsize)  # Â+B̂ per row
+        d_, b_ = bank["bank_a"].shape[2], bank["bank_a"].shape[3]
+        # Â+B̂ bytes per (layer, adapter) row — the shared analytic helper
+        # (benchmarks consume the same function, so gates can't drift)
+        slice_bytes = bank_slice_bytes(d_, b_,
+                                       itemsize=bank["bank_a"].dtype.itemsize)
         bank_bytes = 0
         aggregated = 0
         if missing:
@@ -272,6 +355,94 @@ class ServeEngine:
             "bank_bytes_per_request": bank_bytes // R}
         return {key: jnp.stack([entries[pid][key] for pid in pids])
                 for key in ("a_hat", "b_hat", "ln_scale", "ln_bias")}
+
+    def _hydrate_stacked_quant(self, reqs: List[Request], pids: List[int]):
+        """Quantized-bank hydration: cache hits first; missing profiles
+        hydrate from the store's persisted quantized Â/B̂ records when
+        available (ZERO bank reads), else aggregate k-sparse against the
+        quantized bank (dequant-in-register kernel) and re-quantize the
+        fresh rows. Entries/slot buffers always hold the quantized record
+        layout {a_q, a_scale, b_q, b_scale, ln_scale, ln_bias}."""
+        R = len(reqs)
+        entries = {}
+        hits = misses = 0
+        missing: List[int] = []  # unique uncached pids, admission order
+        for pid in pids:
+            entry = self.profile_cache.get(pid)
+            if entry is not None:
+                hits += 1
+                entries[pid] = entry
+            else:
+                misses += 1
+                if pid not in missing:
+                    missing.append(pid)
+
+        xp = self.cfg.xpeft
+        L = self.cfg.num_layers
+        bank_bytes = 0
+        aggregated = 0
+        store_hydrated = 0
+        if missing:
+            # persisted quantized records are usable only when the store's
+            # scheme matches the engine's buffer layout
+            rec_ok = (self.store.quant == self.quant
+                      and self.store.quant_group == xp.quant_group)
+            rec_pids = [p for p in missing
+                        if rec_ok and self.store.has_quant_record(p)]
+            agg_pids = [p for p in missing if p not in rec_pids]
+            if agg_pids:
+                M = len(agg_pids)
+                Mp = pow2_count(M)
+                aggregated = Mp
+                ia, wa, ib, wb = self.store.batch_sparse_indices(agg_pids)
+                pad_i = jnp.zeros((Mp - M,) + ia.shape[1:], ia.dtype)
+                pad_w = jnp.zeros((Mp - M,) + wa.shape[1:], wa.dtype)
+                a_hat, b_hat = self._aggregate_sparse_quant(
+                    self.qbank, jnp.concatenate([ia, pad_i]),
+                    jnp.concatenate([wa, pad_w]),
+                    jnp.concatenate([ib, pad_i]),
+                    jnp.concatenate([wb, pad_w]))
+                q = self._requantize(a_hat, b_hat)
+                k = ia.shape[-1]
+                # TRUE quantized row bytes actually streamed from HBM
+                bank_bytes = Mp * k * L * self._qrow_bytes
+                ln_s, ln_b = self.store.ln_affines(agg_pids)
+                for i, pid in enumerate(agg_pids):
+                    entry = {"a_q": q["a_q"][i], "a_scale": q["a_scale"][i],
+                             "b_q": q["b_q"][i], "b_scale": q["b_scale"][i],
+                             "ln_scale": ln_s[i], "ln_bias": ln_b[i]}
+                    self.profile_cache.put(pid, entry)
+                    entries[pid] = entry
+            if rec_pids:
+                store_hydrated = len(rec_pids)
+                recs = self.store.quant_records(rec_pids)
+                ln_s, ln_b = self.store.ln_affines(rec_pids)
+                for i, pid in enumerate(rec_pids):
+                    entry = {key: recs[key][i] for key in
+                             ("a_q", "a_scale", "b_q", "b_scale")}
+                    entry["ln_scale"] = ln_s[i]
+                    entry["ln_bias"] = ln_b[i]
+                    self.profile_cache.put(pid, entry)
+                    entries[pid] = entry
+            if agg_pids and rec_pids:
+                path = "quant_mixed"
+            elif agg_pids:
+                path = "quant_sparse"
+            else:
+                path = "quant_store"
+        else:
+            path = "cached"
+
+        self.last_admission = {
+            "path": path, "requests": R, "cache_hits": hits,
+            "cache_misses": misses, "unique_profiles": len(set(pids)),
+            "aggregated_profiles": aggregated,
+            "store_hydrated_profiles": store_hydrated,
+            "scheme": self.quant,
+            "bank_bytes_per_request": bank_bytes // R}
+        return {key: jnp.stack([entries[pid][key] for pid in pids])
+                for key in ("a_q", "a_scale", "b_q", "b_scale",
+                            "ln_scale", "ln_bias")}
 
     # ---------------------------------------------------------------- public
     def free_slots(self) -> List[int]:
@@ -442,16 +613,17 @@ class ServeEngine:
         (params / KV cache / mask buffers) under the active sharding —
         identical to total bytes on a single device. serve_bench emits this
         so memory planning tracks the mesh, not the global shapes."""
+        from repro.analysis.bytes import tree_nbytes
         from repro.distributed.sharding import sharded_bytes_per_device
         trees = {"params": self.params, "cache": self.cache}
+        if self.qbank is not None:
+            trees["qbank"] = self.qbank
         if self.masks is not None:
             trees["masks"] = self.masks
         out = {}
         for name, tree in trees.items():
             if self.mesh is None:
-                out[name] = int(sum(
-                    np.prod(x.shape) * np.dtype(x.dtype).itemsize
-                    for x in jax.tree.leaves(tree)))
+                out[name] = tree_nbytes(tree)
             else:
                 out[name] = sharded_bytes_per_device(
                     tree, self._specs[name], self.mesh)
@@ -463,6 +635,7 @@ class ServeEngine:
         toks = max(self.decode_tokens, 1)
         return {
             "devices": 1 if self.mesh is None else self.mesh.size,
+            "bank_quant": self.quant,
             "resident_bytes_per_device": self.resident_bytes_per_device(),
             "host_syncs": self.slots.host_syncs,
             "device_steps": self.slots.device_steps,

@@ -18,6 +18,11 @@ from typing import Dict, Optional
 
 
 def entry_nbytes(entry: dict) -> int:
+    """TRUE bytes of an entry's arrays. Quantized entries ({a_q, a_scale,
+    b_q, b_scale, ...} under bank_quant) are budgeted at their int8 /
+    packed-int4 payload + fp16 scale widths — size x itemsize IS the
+    quantized record size, so the same byte knob holds 2x (int8) / ~3.6x
+    (int4) more resident profiles with no accounting change."""
     return sum(int(v.size) * int(v.dtype.itemsize) for v in entry.values())
 
 

@@ -92,7 +92,8 @@ class OnboardingScheduler:
     single `metrics()` fetch per poll."""
 
     def __init__(self, roster: Roster, store: ProfileStore,
-                 policy: GraduationPolicy, pending_profiles):
+                 policy: GraduationPolicy, pending_profiles, *,
+                 bank=None, xp=None):
         self.roster = roster
         self.store = store
         self.policy = policy
@@ -101,6 +102,17 @@ class OnboardingScheduler:
         self.graduated: List[dict] = []
         self.evicted: List[dict] = []
         self.admission_waves = 0
+        # quantized stores: graduation also freezes the profile's
+        # aggregated Â/B̂ (masks x bank, computed here from the bf16/fp32
+        # frozen bank — training itself never quantizes) so serving can
+        # admit the profile with ZERO bank reads. `bank` is the frozen
+        # params' "xpeft_bank", `xp` the XPeftConfig.
+        self.bank = bank
+        self.xp = xp
+        if store.quant != "none" and (bank is None or xp is None):
+            raise ValueError("a quantized store needs the frozen bank and "
+                             "XPeftConfig to aggregate Â/B̂ at graduation "
+                             "(pass bank=/xp= or use build_onboarding_run)")
 
     # ------------------------------------------------------------ lifecycle
     def fill(self, rstate: dict, batcher: RosterBatcher) -> dict:
@@ -148,9 +160,17 @@ class OnboardingScheduler:
 
     def graduate(self, rstate: dict, slot: int, met: dict) -> dict:
         """Freeze the slot's trained row into the serving store (binarized,
-        byte-level) and free the slot."""
+        byte-level) and free the slot. Quantized stores additionally get
+        the profile's aggregated Â/B̂, quantized ON WRITE (the store owns
+        the scheme) — the train-side half of the quantized serving path."""
         pid = self.slot_pid[slot]
-        self.store.add_profile(pid, self.roster.slot_params(rstate, slot))
+        prof = self.roster.slot_params(rstate, slot)
+        agg = None
+        if self.store.quant != "none":
+            from repro.core import xpeft as XP
+            eff = XP.precompute_effective_adapters(self.bank, prof, self.xp)
+            agg = (eff["a_hat"], eff["b_hat"])
+        self.store.add_profile(pid, prof, agg=agg)
         self.graduated.append(self._record(slot, met))
         rstate = self.roster.evict(rstate, slot)
         self.slot_pid[slot] = None
@@ -301,8 +321,13 @@ def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
     xp = cfg.xpeft
     if store is None:
         store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
-                             xp.mask_type, xp.k)
-    scheduler = OnboardingScheduler(roster, store, policy, pending)
+                             xp.mask_type, xp.k,
+                             quant=xp.bank_quant,
+                             quant_group=xp.quant_group)
+    scheduler = OnboardingScheduler(
+        roster, store, policy, pending,
+        bank=frozen["xpeft_bank"] if store.quant != "none" else None,
+        xp=xp if store.quant != "none" else None)
     trainer_kw.setdefault("rng", _jax.random.key(seed + 1))
     trainer = OnboardingTrainer(_jax.jit(gang), state, batcher, scheduler,
                                 **trainer_kw)

@@ -1,0 +1,74 @@
+"""analysis/bytes.py: the shared byte math matches TRUE array bytes and
+carries the quant reductions the CI gates enforce."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import bytes as AB
+from repro.configs import get_config, reduce_for_smoke
+from repro.quant import schemes as QS
+
+
+@pytest.mark.parametrize("scheme", ["none", "int8", "int4"])
+@pytest.mark.parametrize("L,N,d,b", [(2, 8, 64, 4), (3, 16, 128, 48)])
+def test_bank_slice_bytes_matches_true_quantized_arrays(scheme, L, N, d, b):
+    bank = {"bank_a": 0.1 * jax.random.normal(jax.random.key(0),
+                                              (L, N, d, b)),
+            "bank_b": 0.1 * jax.random.normal(jax.random.key(1),
+                                              (L, N, b, d))}
+    if scheme == "none":
+        true = AB.tree_nbytes(jax.tree.map(
+            lambda x: x.astype(jnp.float16), bank))  # itemsize-2 reference
+        analytic = L * N * AB.bank_slice_bytes(d, b, itemsize=2)
+    else:
+        true = AB.tree_nbytes(QS.quantize_bank(bank, scheme, group=32))
+        analytic = L * N * AB.bank_slice_bytes(d, b, scheme=scheme,
+                                               group=32)
+    assert analytic == true, (analytic, true)
+
+
+def test_record_bytes_matches_store_record():
+    """record_bytes == the true bytes of a quantized Â/B̂ record the
+    ProfileStore persists (minus masks/affines, which it doesn't model)."""
+    L, d, b = 2, 64, 4
+    a_hat = 0.1 * jax.random.normal(jax.random.key(0), (L, d, b))
+    b_hat = 0.1 * jax.random.normal(jax.random.key(1), (L, b, d))
+    for scheme in ("int8", "int4"):
+        qa = QS.quantize(a_hat, scheme)
+        qb = QS.quantize(b_hat, scheme)
+        true = AB.tree_nbytes(qa) + AB.tree_nbytes(qb)
+        assert AB.record_bytes(L, d, b, scheme=scheme) == true
+
+
+def test_full_config_quant_reductions_meet_gates():
+    """At the FULL config's dims (N=256, k=50, bf16), the quantized
+    k-sparse admission clears the acceptance floors: int8 <= 0.30x and
+    int4 <= 0.20x the bf16 analytic DENSE bank bytes per request (the
+    pre-k-sparse path), and both strictly beat the bf16 sparse read."""
+    agg = AB.aggregation_bytes(get_config("qwen1.5-0.5b"))
+    assert agg["reduction"] >= 4.0                      # PR-1 gate intact
+    assert agg["int8_vs_dense"] <= 0.30
+    assert agg["int4_vs_dense"] <= 0.20
+    assert agg["int8_vs_sparse"] <= 0.55                # 2x is the physical
+    assert agg["int4_vs_sparse"] <= 0.32                # bf16->int8 limit
+    assert agg["bytes_sparse_int4"] < agg["bytes_sparse_int8"] \
+        < agg["bytes_sparse"]
+
+
+def test_aggregation_bytes_smoke_config_matches_engine_units():
+    """Smoke config (fp32): the analytic sparse bytes equal what the
+    engine's admit stats compute for one profile's aggregation."""
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    xp = cfg.xpeft
+    agg = AB.aggregation_bytes(cfg)
+    per_profile = AB.admission_bank_bytes(
+        cfg.num_layers, xp.num_adapters, xp.k, cfg.d_model, xp.bottleneck,
+        itemsize=4)
+    assert agg["bytes_sparse"] == per_profile
+    assert agg["bytes_dense"] // agg["bytes_sparse"] == xp.num_adapters // xp.k
+
+
+def test_itemsize_for():
+    assert AB.itemsize_for("bfloat16") == 2
+    assert AB.itemsize_for("float32") == 4

@@ -74,6 +74,70 @@ def test_rules_bank_a_and_bank_b_tp_assignment():
     assert sb == P(None, "data", None, "model")
 
 
+def test_rules_quantized_bank_leaves_follow_tp():
+    """Quantized bank payloads keep the bf16 bank's d_model TP layout and
+    the fp16 scale arrays ride along: int8 scales (ndim 3) drop the
+    quantized axis, int4 group scales (ndim 4) keep a trailing group
+    axis. Dims here are the full config's (L=24, N=256, d=1024, b=64)."""
+    sa = spec_for("qbank/bank_a_q", (24, 256, 1024, 64), MESH_AXES,
+                  fsdp=False)
+    assert sa == P(None, None, "model", None)
+    # int4 packs bank_b's LAST axis (d/2) — still TP-divisible
+    sb = spec_for("qbank/bank_b_q", (24, 256, 64, 512), MESH_AXES,
+                  fsdp=False)
+    assert sb == P(None, None, None, "model")
+    s8 = spec_for("qbank/bank_a_scale", (24, 256, 1024), MESH_AXES,
+                  fsdp=False)
+    assert s8 == P(None, None, "model")
+    s4 = spec_for("qbank/bank_a_scale", (24, 256, 1024, 2), MESH_AXES,
+                  fsdp=False)
+    assert s4 == P(None, None, "model", None)
+    sb8 = spec_for("qbank/bank_b_scale", (24, 256, 64), MESH_AXES,
+                   fsdp=False)
+    assert sb8 == P(None, None, None)
+    sb4 = spec_for("qbank/bank_b_scale", (24, 256, 64, 32), MESH_AXES,
+                   fsdp=False)
+    assert sb4 == P(None, None, None, "model")
+
+
+def test_quant_engine_qbank_and_buffers_shard():
+    """A quantized ServeEngine under an 8-device mesh: qbank leaves and
+    quantized slot buffers get valid specs, decode runs, and per-device
+    bytes land strictly below the single-device footprint (subprocess:
+    forces host devices)."""
+    _run_sub("""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core import xpeft as XP
+    from repro.core.profiles import ProfileStore
+    from repro.models import init_lm
+    from repro.serve.engine import ServeEngine
+    from repro.serve.scheduler import Request
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b")).with_xpeft(
+        bank_quant="int8")
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    xp = cfg.xpeft
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k, quant="int8")
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(4):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
+    eng = ServeEngine(cfg, params, store, max_slots=8, max_seq=32,
+                      mesh=mesh)
+    reqs = [Request(uid=i, prompt=np.arange(5) % cfg.vocab_size,
+                    profile_id=i % 4, max_new_tokens=6) for i in range(8)]
+    eng.run_until_drained(reqs)
+    assert all(len(r.generated) for r in reqs)
+    per_dev = eng.resident_bytes_per_device()
+    assert "qbank" in per_dev and per_dev["qbank"] > 0
+    single = ServeEngine(cfg, init_lm(key, cfg), store, max_slots=8,
+                         max_seq=32).resident_bytes_per_device()
+    assert per_dev["total"] < single["total"], (per_dev, single)
+    print("quant shard ok")
+    """)
+
+
 def test_rules_fsdp_largest_dim_tie_break():
     """Equal largest candidate dims: FSDP takes the LATER one (max over
     (dim, index) tuples) — pinned so resharding stays deterministic

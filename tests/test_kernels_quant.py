@@ -1,0 +1,177 @@
+"""Dequant-fused Pallas kernels: parity with their jnp refs + dispatch.
+
+The quant kernels and refs share quant.schemes.dequant_block and the same
+fp32 op order, so every dequantized TERM is asserted BITWISE
+(assert_array_equal via one-hot weights / k=1 grids). Multi-term fp32
+reductions are asserted at <= 5e-7 absolute instead: XLA CPU contracts
+mul+add chains into FMAs at LLVM codegen per fusion, and the fusion
+layout necessarily differs between a pallas program and a jnp program
+(verified empirically — optimization_barrier and bitcast round-trips are
+both simplified through), so the last ulp of an accumulation is backend
+scheduling, not kernel semantics. 5e-7 is ~4 orders below the ~1e-3
+quantization step the schemes introduce.
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fused_adapter_quant import fused_adapter_quant_batched
+from repro.kernels.mask_aggregate_quant import mask_aggregate_quant_batched
+from repro.quant import schemes as QS
+
+
+def _qbank(N, d, b, scheme, key=0, group=32):
+    bank = 0.05 * jax.random.normal(jax.random.key(key), (N, d, b),
+                                    jnp.float32)
+    rec = QS.quantize(bank, scheme, group=group)
+    return bank, rec["q"], rec["scale"]
+
+
+@pytest.mark.parametrize("scheme,N,d,b,k,P,block_d", [
+    ("int8", 32, 256, 64, 8, 2, 128),
+    ("int8", 16, 64, 4, 2, 3, 64),       # smoke-config dims
+    ("int4", 32, 256, 64, 8, 2, 128),
+    ("int4", 16, 64, 4, 2, 3, 32),
+    ("int4", 24, 128, 48, 50, 2, 128),   # paper-ish dims, k > N/2 repeats
+])
+def test_mask_aggregate_quant_term_bitwise_sum_tight(scheme, N, d, b, k, P,
+                                                     block_d):
+    _, q, s = _qbank(N, d, b, scheme, key=1)
+    ks = jax.random.split(jax.random.key(2), P + 1)
+    idx = jnp.stack([jax.random.randint(ks[p], (k,), 0, N)
+                     for p in range(P)]).astype(jnp.int32)
+    w = jax.random.uniform(ks[-1], (P, k), jnp.float32)
+    # every individual dequantized term is BITWISE equal to the ref's
+    # (one-hot weights make the accumulation a pure select)
+    for ki in (0, k - 1):
+        onehot = jnp.zeros_like(w).at[:, ki].set(w[:, ki])
+        got = mask_aggregate_quant_batched(q, s, idx, onehot, scheme=scheme,
+                                           block_d=block_d, interpret=True)
+        want = ref.mask_aggregate_quant_batched_ref(q, s, idx, onehot,
+                                                    scheme=scheme)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the full k-term fp32 reduction: identical order, FMA-contraction ulps
+    got = mask_aggregate_quant_batched(q, s, idx, w, scheme=scheme,
+                                       block_d=block_d, interpret=True)
+    want = ref.mask_aggregate_quant_batched_ref(q, s, idx, w, scheme=scheme)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=5e-7)
+
+
+@pytest.mark.parametrize("scheme", ["int8", "int4"])
+def test_mask_aggregate_quant_close_to_fp32(scheme):
+    """Dequantized aggregation stays within the quantization error budget
+    of the exact fp32 aggregation (the admission-quality bound)."""
+    N, d, b, k, P = 32, 128, 32, 8, 2
+    bank, q, s = _qbank(N, d, b, scheme, key=3)
+    idx = jnp.stack([jnp.arange(k), jnp.arange(k, 2 * k)]).astype(jnp.int32)
+    w = jnp.full((P, k), 1.0 / k, jnp.float32)
+    got = ref.mask_aggregate_quant_batched_ref(q, s, idx, w, scheme=scheme)
+    want = ref.mask_aggregate_batched_ref(bank, idx, w)
+    # elementwise bound: each of the k averaged rows errs <= ~step/2
+    step = {"int8": 1 / 127, "int4": 1 / 7}[scheme]
+    bound = 0.6 * step * float(jnp.abs(bank).max())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=bound)
+
+
+@pytest.mark.parametrize("scheme,B,T,d,b,block_t", [
+    ("int8", 2, 1, 64, 4, 256),          # decode step, smoke dims
+    ("int8", 3, 32, 128, 16, 32),
+    ("int4", 4, 1, 256, 64, 256),
+    ("int4", 2, 16, 64, 8, 16),
+])
+def test_fused_adapter_quant_parity(scheme, B, T, d, b, block_t):
+    ks = jax.random.split(jax.random.key(4), 5)
+    x = jax.random.normal(ks[0], (B, T, d), jnp.float32)
+    a = jax.random.normal(ks[1], (B, d, b)) / np.sqrt(d)
+    bb = jax.random.normal(ks[2], (B, b, d)) * 0.02
+    qa = QS.quantize(a, scheme)
+    qb = QS.quantize(bb, scheme)
+    ls = 1 + 0.1 * jax.random.normal(ks[3], (B, b), jnp.float32)
+    lb = 0.1 * jax.random.normal(ks[4], (B, b), jnp.float32)
+    got = fused_adapter_quant_batched(
+        x, qa["q"], qa["scale"], qb["q"], qb["scale"], ls, lb,
+        scheme=scheme, block_t=block_t, interpret=True)
+    want = jax.jit(functools.partial(ref.fused_adapter_quant_batched_ref,
+                                     scheme=scheme))(
+        x, qa["q"], qa["scale"], qb["q"], qb["scale"], ls, lb)
+    # both backends run the same fp32 op sequence; the dots are gemm-call
+    # boundaries so only elementwise fusion ulps can differ
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0, atol=5e-6)
+
+
+def test_fused_adapter_quant_close_to_unquantized():
+    """Dequant-fused output tracks the bf16/fp32 fused adapter closely —
+    the decode-quality bound behind the >= 99%% token-agreement criterion."""
+    B, T, d, b = 2, 8, 64, 16
+    ks = jax.random.split(jax.random.key(5), 3)
+    x = jax.random.normal(ks[0], (B, T, d), jnp.float32)
+    a = jax.random.normal(ks[1], (B, d, b)) / np.sqrt(d)
+    bb = jax.random.normal(ks[2], (B, b, d)) * 0.02
+    ls, lb = jnp.ones((B, b)), jnp.zeros((B, b))
+    want = ref.fused_adapter_batched_ref(x, a, bb, ls, lb)
+    for scheme in ("int8", "int4"):
+        qa, qb = QS.quantize(a, scheme), QS.quantize(bb, scheme)
+        got = ref.fused_adapter_quant_batched_ref(
+            x, qa["q"], qa["scale"], qb["q"], qb["scale"], ls, lb,
+            scheme=scheme)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0.1, atol=0.05)
+
+
+# ----------------------------------------------------------------------------
+# ops dispatch table (satellite): quant routes + strict impl validation
+# ----------------------------------------------------------------------------
+
+def test_ops_quant_dispatch_interpret_matches_ref():
+    N, d, b, k, P = 16, 64, 8, 4, 2
+    _, q, s = _qbank(N, d, b, "int8", key=6)
+    idx = jnp.stack([jnp.arange(k), jnp.arange(k, 2 * k)]).astype(jnp.int32)
+    w = jnp.ones((P, k)) / k
+    outs = {impl: ops.mask_aggregate_quant_batched(q, s, idx, w,
+                                                   scheme="int8", impl=impl)
+            for impl in ("ref", "interpret")}
+    np.testing.assert_allclose(np.asarray(outs["ref"]),
+                               np.asarray(outs["interpret"]),
+                               rtol=0, atol=5e-7)
+
+    ks = jax.random.split(jax.random.key(7), 3)
+    x = jax.random.normal(ks[0], (P, 4, d), jnp.float32)
+    a = jax.random.normal(ks[1], (P, d, b)) * 0.1
+    bb = jax.random.normal(ks[2], (P, b, d)) * 0.1
+    qa, qb = QS.quantize(a, "int4"), QS.quantize(bb, "int4")
+    ls, lb = jnp.ones((P, b)), jnp.zeros((P, b))
+    outs = {impl: jax.jit(functools.partial(
+        ops.fused_adapter_quant, scheme="int4", impl=impl))(
+        x, qa["q"], qa["scale"], qb["q"], qb["scale"], ls, lb)
+        for impl in ("ref", "interpret")}
+    np.testing.assert_allclose(np.asarray(outs["ref"]),
+                               np.asarray(outs["interpret"]),
+                               rtol=0, atol=5e-6)
+
+
+def test_ops_quant_rejects_bad_scheme_and_shape():
+    z3 = jnp.zeros((2, 2, 2))
+    with pytest.raises(ValueError, match="int4"):
+        ops.mask_aggregate_quant_batched(
+            jnp.zeros((2, 2, 2), jnp.int8), jnp.zeros((2, 2), jnp.float16),
+            jnp.zeros((1, 1), jnp.int32), jnp.zeros((1, 1)), scheme="fp8")
+    with pytest.raises(ValueError, match="batched-only"):
+        ops.fused_adapter_quant(
+            jnp.zeros((2, 2)), z3, jnp.zeros((2, 2)), z3, jnp.zeros((2, 2)),
+            jnp.zeros((2, 2)), jnp.zeros((2, 2)), scheme="int8")
+
+
+def test_resolve_impl_error_lists_valid_impls():
+    """Unrecognized impl strings must raise (never silently fall back) and
+    the message must name every valid impl."""
+    with pytest.raises(ValueError) as e:
+        ops.resolve_impl("cuda")
+    for impl in ops.IMPLS:
+        assert impl in str(e.value)

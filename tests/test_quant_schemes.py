@@ -1,0 +1,107 @@
+"""quant/schemes.py: int8/int4 quantize/dequantize roundtrips and bounds."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.quant import schemes as QS
+
+
+def _rand(shape, key=0, scale=0.05):
+    return scale * jax.random.normal(jax.random.key(key), shape, jnp.float32)
+
+
+def test_check_scheme_rejects_unknown():
+    with pytest.raises(ValueError, match="int8"):
+        QS.check_scheme("fp8")
+    for s in QS.SCHEMES:
+        assert QS.check_scheme(s) == s
+
+
+@pytest.mark.parametrize("n,group,want", [(64, 32, 32), (4, 32, 4),
+                                          (48, 32, 24), (6, 4, 3),
+                                          (1024, 32, 32)])
+def test_group_for(n, group, want):
+    assert QS.group_for(n, group) == want
+
+
+def test_group_for_odd_axis_raises():
+    with pytest.raises(ValueError, match="even"):
+        QS.group_for(7)
+
+
+def test_int8_roundtrip_error_bound():
+    x = _rand((5, 12, 64), key=1)
+    rec = QS.quantize(x, "int8")
+    assert rec["q"].dtype == jnp.int8 and rec["scale"].dtype == jnp.float16
+    assert rec["scale"].shape == (5, 12)
+    deq = QS.dequantize(rec, "int8")
+    err = np.abs(np.asarray(deq - x))
+    # per-row bound: half a quantization step (+ slack for the clip tail
+    # when the fp16 scale rounds down)
+    bound = 0.6 * np.asarray(rec["scale"], np.float32)[..., None] + 1e-8
+    assert (err <= bound).all(), err.max()
+
+
+@pytest.mark.parametrize("n,group", [(64, 32), (4, 32), (48, 16)])
+def test_int4_roundtrip_error_bound(n, group):
+    x = _rand((3, 8, n), key=2)
+    rec = QS.quantize(x, "int4", group=group)
+    g = QS.group_for(n, group)
+    assert rec["q"].dtype == jnp.uint8 and rec["q"].shape == (3, 8, n // 2)
+    assert rec["scale"].shape == (3, 8, n // g)
+    deq = QS.dequantize(rec, "int4")
+    assert deq.shape == x.shape
+    sc = np.repeat(np.asarray(rec["scale"], np.float32), g, axis=-1)
+    err = np.abs(np.asarray(deq - x))
+    assert (err <= 0.6 * sc + 1e-8).all(), err.max()
+
+
+def test_int4_pack_unpack_exact():
+    q = jnp.arange(-8, 8, dtype=jnp.int32).reshape(2, 8)
+    np.testing.assert_array_equal(np.asarray(QS.unpack_int4(QS.pack_int4(q))),
+                                  np.asarray(q))
+
+
+def test_zero_rows_quantize_to_zero():
+    x = jnp.zeros((2, 16))
+    for scheme in ("int8", "int4"):
+        rec = QS.quantize(x, scheme, group=8)
+        deq = QS.dequantize(rec, scheme)
+        assert not np.isnan(np.asarray(deq)).any()
+        np.testing.assert_array_equal(np.asarray(deq), 0.0)
+
+
+def test_quant_spec_matches_quantize_shapes():
+    x = _rand((6, 10), key=3)
+    for scheme in ("int8", "int4"):
+        qs, qdt, ss = QS.quant_spec(x.shape, scheme, group=4)
+        rec = QS.quantize(x, scheme, group=4)
+        assert rec["q"].shape == qs and rec["q"].dtype == qdt
+        assert rec["scale"].shape == ss
+
+
+def test_quantize_bank_names_and_bytes():
+    bank = {"bank_a": _rand((2, 4, 16, 8), key=4),
+            "bank_b": _rand((2, 4, 8, 16), key=5)}
+    q8 = QS.quantize_bank(bank, "int8")
+    assert set(q8) == {"bank_a_q", "bank_a_scale", "bank_b_q", "bank_b_scale"}
+    assert q8["bank_a_q"].shape == (2, 4, 16, 8)
+    assert q8["bank_a_scale"].shape == (2, 4, 16)
+    q4 = QS.quantize_bank(bank, "int4", group=8)
+    assert q4["bank_a_q"].shape == (2, 4, 16, 4)       # b=8 packed
+    assert q4["bank_b_q"].shape == (2, 4, 8, 8)        # d=16 packed
+    # true byte counts: int8 ~= half of bf16, int4 ~= a quarter + scales
+    bf16 = sum(v.size * 2 for v in bank.values())
+    n8 = sum(np.asarray(v).nbytes for v in q8.values())
+    n4 = sum(np.asarray(v).nbytes for v in q4.values())
+    assert n4 < n8 < bf16
+
+
+def test_dequantize_is_jit_safe():
+    x = _rand((4, 32), key=6)
+    for scheme in ("int8", "int4"):
+        rec = QS.quantize(x, scheme, group=16)
+        eager = QS.dequantize(rec, scheme)
+        jitted = jax.jit(lambda r, s=scheme: QS.dequantize(r, s))(rec)
+        np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))

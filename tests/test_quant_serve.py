@@ -1,0 +1,197 @@
+"""Quantized-bank serving end to end: bytes, decode parity, store-record
+admission, graduation quantize-on-write, and the bank_quant=none
+bitwise-no-change guarantee."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.models import init_lm
+from repro.serve.engine import ServeEngine
+from repro.serve.profile_cache import entry_nbytes
+from repro.serve.scheduler import Request
+
+
+def _build(scheme, *, n_prof=5, max_slots=4, seed=0, store=None):
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b")).with_xpeft(
+        bank_quant=scheme)
+    key = jax.random.key(seed)
+    params = init_lm(key, cfg)
+    if store is None:
+        xp = cfg.xpeft
+        store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                             xp.mask_type, xp.k, quant=scheme,
+                             quant_group=xp.quant_group)
+        table = XP.init_profile_table(key, cfg)
+        for pid in range(n_prof):
+            store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    eng = ServeEngine(cfg, params, store, max_slots=max_slots, max_seq=64,
+                      sync_every=4)
+    return cfg, eng, store
+
+
+def _decode(cfg, eng, *, n=4, max_new=16, base=0):
+    reqs = [Request(uid=base + i, prompt=np.arange(5 + i) % cfg.vocab_size,
+                    profile_id=i % 3, max_new_tokens=max_new)
+            for i in range(n)]
+    eng.run_until_drained(reqs)
+    return [list(r.generated) for r in reqs]
+
+
+def test_none_engine_is_unchanged():
+    """bank_quant='none' keeps the bf16/fp32 bank resident, the fp mask
+    buffers, and the k-sparse admission path — the pre-quant engine."""
+    cfg, eng, _ = _build("none")
+    assert eng.qbank is None and "xpeft_bank" in eng.params
+    assert "a_hat" in eng.masks and "a_q" not in eng.masks
+    _decode(cfg, eng, n=2, max_new=4)
+    assert eng.last_admission["path"] == "sparse"
+    assert "scheme" not in eng.last_admission
+
+
+def test_bank_quant_rejects_per_step_serving():
+    """precompute=False + bank_quant must REFUSE (the per-step path reads
+    the fp bank every step — none of the quant savings would exist)."""
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b")).with_xpeft(
+        bank_quant="int8")
+    xp = cfg.xpeft
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k, quant="int8")
+    with pytest.raises(ValueError, match="precompute"):
+        ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                    precompute=False)
+
+
+@pytest.mark.parametrize("scheme", ["int8", "int4"])
+def test_quant_engine_drops_bank_and_reads_fewer_bytes(scheme):
+    cfg0, eng0, _ = _build("none")
+    cfg, eng, _ = _build(scheme)
+    assert "xpeft_bank" not in eng.params and eng.qbank is not None
+    assert eng.masks["a_q"].dtype == (jnp.int8 if scheme == "int8"
+                                      else jnp.uint8)
+    _decode(cfg0, eng0, n=4, max_new=2)
+    _decode(cfg, eng, n=4, max_new=2)
+    assert eng.last_admission["path"] == "quant_sparse"
+    assert eng.last_admission["scheme"] == scheme
+    got = eng.last_admission["bank_bytes_per_request"]
+    ref = eng0.last_admission["bank_bytes_per_request"]
+    ceiling = {"int8": 0.55, "int4": 0.35}[scheme]
+    assert 0 < got <= ceiling * ref, (got, ref)
+    # quantized engine is strictly lighter per device (bank + buffers)
+    assert eng.resident_bytes_per_device()["total"] < \
+        eng0.resident_bytes_per_device()["total"]
+
+
+def test_int8_greedy_decode_matches_bf16_path():
+    """End-to-end greedy decode under int8 agrees with the unquantized
+    path on >= 99%% of tokens (the acceptance bar; measured exact here)."""
+    cfg0, eng0, _ = _build("none")
+    cfg, eng, _ = _build("int8")
+    base = _decode(cfg0, eng0, n=6, max_new=16)
+    got = _decode(cfg, eng, n=6, max_new=16)
+    flat = [(t, u) for s, su in zip(got, base) for t, u in zip(s, su)]
+    agree = sum(t == u for t, u in flat) / len(flat)
+    assert agree >= 0.99, agree
+
+
+def test_int4_prefill_step_agreement():
+    """int4's per-step choices track the bf16 path closely; full greedy
+    sequences may diverge after a flip (autoregressive compounding), so
+    the per-step metric is the honest one for the coarser scheme."""
+    cfg0, eng0, _ = _build("none")
+    cfg, eng, _ = _build("int4")
+    # first generated token of each request = one independent trial
+    base = [s[0] for s in _decode(cfg0, eng0, n=8, max_new=1)]
+    got = [s[0] for s in _decode(cfg, eng, n=8, max_new=1)]
+    agree = np.mean([t == u for t, u in zip(got, base)])
+    assert agree >= 0.75, agree
+
+
+@pytest.mark.parametrize("scheme", ["int8", "int4"])
+def test_store_record_admission_reads_zero_bank_bytes(scheme):
+    """Profiles graduated WITH quantized Â/B̂ records admit via store
+    hydration: zero bank reads, and the decode uses the stored record."""
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b")).with_xpeft(
+        bank_quant=scheme)
+    xp = cfg.xpeft
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    bank = params["xpeft_bank"]
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k, quant=scheme,
+                         quant_group=xp.quant_group)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(3):
+        prof = jax.tree.map(lambda t: t[pid], table)
+        eff = XP.precompute_effective_adapters(bank, prof, xp)
+        store.add_profile(pid, prof, agg=(eff["a_hat"], eff["b_hat"]))
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                      sync_every=4)
+    _decode(cfg, eng, n=2, max_new=4)
+    adm = eng.last_admission
+    assert adm["path"] == "quant_store"
+    assert adm["bank_bytes_per_request"] == 0
+    assert adm["store_hydrated_profiles"] == 2
+
+
+def test_quant_cache_entries_use_true_quantized_bytes():
+    """ProfileCache capacity accounting sees the TRUE quantized record
+    bytes — int4 entries are smaller than int8, both far under fp32."""
+    sizes = {}
+    for scheme in ("none", "int8", "int4"):
+        cfg, eng, _ = _build(scheme)
+        _decode(cfg, eng, n=3, max_new=2)
+        entry = eng.profile_cache.peek(0)
+        sizes[scheme] = entry_nbytes(entry)
+    assert sizes["int4"] < sizes["int8"] < sizes["none"]
+
+
+def test_regraduation_invalidates_quant_cache():
+    """Store notifications drop quantized cache entries too: re-graduating
+    a profile with NEW masks changes the next admission's record."""
+    cfg, eng, store = _build("int8")
+    _decode(cfg, eng, n=2, max_new=2)
+    assert 0 in eng.profile_cache
+    before = np.asarray(eng.profile_cache.peek(0)["a_q"]).copy()
+    table2 = XP.init_profile_table(jax.random.key(42), cfg)
+    store.add_profile(0, jax.tree.map(lambda t: t[0], table2))
+    assert 0 not in eng.profile_cache  # invalidated via subscription
+    _decode(cfg, eng, n=2, max_new=2, base=100)
+    after = np.asarray(eng.profile_cache.peek(0)["a_q"])
+    assert (before != after).any()
+
+
+def test_onboarding_graduation_writes_quant_records():
+    """build_onboarding_run under bank_quant: graduated profiles carry
+    quantized Â/B̂ records that a ServeEngine admits with zero bank reads
+    (train→serve loop closed for the quantized path)."""
+    from repro.data import ProfileClassification
+    from repro.train import GraduationPolicy
+    from repro.train.onboarding import build_onboarding_run
+
+    cfg = reduce_for_smoke(get_config("bert-base-xpeft")).with_(
+        num_labels=4, vocab_size=64).with_xpeft(num_adapters=8, k=2,
+                                                bank_quant="int8")
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=3, seed=5)
+    policy = GraduationPolicy(min_steps=4, max_steps=6, target_acc=2.0)
+    trainer, _ = build_onboarding_run(cfg, data, range(3), slots=2,
+                                      per_slot=2, seq_len=12, policy=policy,
+                                      lr=5e-2, log_every=5,
+                                      rng=jax.random.key(1))
+    trainer.run_until_drained(max_steps=300)
+    store = trainer.scheduler.store
+    assert store.quant == "int8"
+    assert store.profile_ids() == [0, 1, 2]
+    for pid in store.profile_ids():
+        assert store.has_quant_record(pid)
+        # record carries masks AND the quantized aggregate
+        assert store.record_nbytes(pid) > store.bytes_per_profile()
+    recs = store.quant_records([0, 1, 2])
+    assert recs["a_q"].dtype == jnp.int8
+    assert recs["a_q"].shape[:2] == (3, cfg.num_layers)

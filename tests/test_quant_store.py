@@ -1,0 +1,145 @@
+"""ProfileStore precision round-trips: fp16 head/ln hydration, quantized
+aggregated-record save→load bit-exactness, dequant error bounds, and the
+checkpoint manager round-tripping quantized trees bit-exactly."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.quant import schemes as QS
+
+
+def _cfg(scheme="int8"):
+    return reduce_for_smoke(get_config("qwen1.5-0.5b")).with_xpeft(
+        bank_quant=scheme)
+
+
+def _store_with_agg(cfg, n=3, key=0):
+    """Store with quantized aggregated records built from a real bank."""
+    xp = cfg.xpeft
+    k = jax.random.key(key)
+    bank = XP.init_xpeft_state(k, cfg)["bank"]
+    table = XP.init_profile_table(k, cfg)
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k, quant=xp.bank_quant,
+                         quant_group=xp.quant_group)
+    effs = {}
+    for pid in range(n):
+        prof = jax.tree.map(lambda t: t[pid], table)
+        # a per-profile head rides along to exercise the fp16 head path
+        prof["head_w"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(k, pid), (cfg.d_model, 4))
+        prof["head_b"] = jnp.arange(4, dtype=jnp.float32) * 0.5
+        eff = XP.precompute_effective_adapters(bank, prof, xp)
+        store.add_profile(pid, prof, agg=(eff["a_hat"], eff["b_hat"]))
+        effs[pid] = eff
+    return store, effs
+
+
+def test_fp16_head_and_ln_roundtrip(tmp_path):
+    cfg = _cfg()
+    store, _ = _store_with_agg(cfg)
+    path = str(tmp_path / "s.npz")
+    store.save(path)
+    loaded = ProfileStore.load(path)
+    assert (loaded.quant, loaded.quant_group) == (store.quant,
+                                                 store.quant_group)
+    for pid in store.profile_ids():
+        hw, hb = store.head(pid)
+        hw2, hb2 = loaded.head(pid)
+        np.testing.assert_array_equal(np.asarray(hw), np.asarray(hw2))
+        np.testing.assert_array_equal(np.asarray(hb), np.asarray(hb2))
+        ls, lb = store.ln_affines([pid])
+        ls2, lb2 = loaded.ln_affines([pid])
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(ls2))
+        np.testing.assert_array_equal(np.asarray(lb), np.asarray(lb2))
+    # fp16 storage is exact for values representable in fp16 (the bias
+    # ramp above), and hydration returns float32
+    assert store.head(0)[1].dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(store.head(0)[1]),
+                                  np.arange(4) * 0.5)
+
+
+@pytest.mark.parametrize("scheme", ["int8", "int4"])
+def test_quant_record_save_load_bit_exact(tmp_path, scheme):
+    cfg = _cfg(scheme)
+    store, _ = _store_with_agg(cfg)
+    path = str(tmp_path / "q.npz")
+    store.save(path)
+    loaded = ProfileStore.load(path)
+    pids = store.profile_ids()
+    a = store.quant_records(pids)
+    b = loaded.quant_records(pids)
+    for key in ("a_q", "a_scale", "b_q", "b_scale"):
+        assert a[key].dtype == b[key].dtype
+        np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(b[key]))
+    for pid in pids:
+        assert loaded.has_quant_record(pid)
+        assert loaded.record_nbytes(pid) == store.record_nbytes(pid)
+
+
+@pytest.mark.parametrize("scheme", ["int8", "int4"])
+def test_quant_record_dequant_error_bound(scheme):
+    """Dequantizing a stored record recovers the exact aggregated Â/B̂ to
+    within the scheme's per-row quantization step."""
+    cfg = _cfg(scheme)
+    store, effs = _store_with_agg(cfg)
+    recs = store.quant_records(store.profile_ids())
+    step = {"int8": 1 / 127, "int4": 1 / 7}[scheme]
+    for i, pid in enumerate(store.profile_ids()):
+        for qk, sk, ref in (("a_q", "a_scale", effs[pid]["a_hat"]),
+                            ("b_q", "b_scale", effs[pid]["b_hat"])):
+            deq = QS.dequant_block(recs[qk][i], recs[sk][i], scheme)
+            ref32 = np.asarray(ref, np.float32)
+            bound = 0.6 * step * np.abs(ref32).max() + 1e-7
+            assert np.abs(np.asarray(deq) - ref32).max() <= bound
+
+
+def test_quant_store_merge_requires_matching_scheme():
+    cfg = _cfg("int8")
+    a, _ = _store_with_agg(cfg)
+    xp = cfg.xpeft
+    other = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k, quant="int4")
+    with pytest.raises(AssertionError):
+        other.merge_from(a)
+
+
+def test_unquantized_store_rejects_agg_records():
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    xp = cfg.xpeft
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         xp.mask_type, xp.k)
+    table = XP.init_profile_table(jax.random.key(0), cfg)
+    prof = jax.tree.map(lambda t: t[0], table)
+    with pytest.raises(ValueError, match="quantized store"):
+        store.add_profile(0, prof,
+                          agg=(jnp.zeros((2, 4, 2)), jnp.zeros((2, 2, 4))))
+
+
+def test_checkpoint_manager_roundtrips_quantized_tree(tmp_path):
+    """CheckpointManager save→restore preserves int8/uint8 payloads and
+    fp16 scales bit-exactly (the quantized-store-in-training-state path)."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    bank = {"bank_a": 0.05 * jax.random.normal(jax.random.key(0),
+                                               (2, 4, 16, 8)),
+            "bank_b": 0.05 * jax.random.normal(jax.random.key(1),
+                                               (2, 4, 8, 16))}
+    state = {"q8": QS.quantize_bank(bank, "int8"),
+             "q4": QS.quantize_bank(bank, "int4", group=8),
+             "step": jnp.int32(7)}
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep_last=2)
+    mgr.save(1, state, blocking=True)
+    restored = mgr.restore(1, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), state))
+
+    def check(got, want):
+        got, want = jnp.asarray(got), jnp.asarray(want)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    jax.tree.map(check, restored, state)
