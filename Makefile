@@ -8,7 +8,8 @@
 PY      := python
 PP      := PYTHONPATH=src:.
 
-.PHONY: verify test bench-smoke onboard-smoke multidev-smoke quant-smoke bench
+.PHONY: verify test bench-smoke onboard-smoke multidev-smoke quant-smoke \
+	chaos-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -42,8 +43,19 @@ multidev-smoke:
 quant-smoke:
 	$(PP) $(PY) benchmarks/quant_smoke.py
 
+# chaos soak (PR 6 resilience layer): a seeded FaultPlan injects >= 20%
+# persistent hydration failures, 2 corrupted store records, NaN-poisoned
+# roster slots and a torn checkpoint; check_bench --fault-only gates the
+# degradation contract (every wave completes, degraded == planned, corrupt
+# never served, unaffected requests bitwise, quarantine accounting closes).
+# 8 forced host devices so the elastic-reshard record is emitted too.
+chaos-smoke:
+	$(PP) XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) benchmarks/fault_bench.py --smoke
+	$(PP) $(PY) benchmarks/check_bench.py --fault-only
+
 bench:
 	$(PP) $(PY) benchmarks/run.py
 
-verify: test bench-smoke onboard-smoke quant-smoke
+verify: test bench-smoke onboard-smoke quant-smoke chaos-smoke
 	@echo "verify: OK"

@@ -49,6 +49,26 @@ and the training-side lifecycle (BENCH_train.json, PR 3):
 - the graduation roundtrip is bit-exact (persisted store == trained masks)
 - BENCH_STRICT=1 additionally enforces an absolute profiles-graduated/min
   floor (perf machines only, same policy as the decode floor)
+
+and the chaos soak (BENCH_fault.json, PR 6 resilience layer — also
+runnable standalone via `check_bench.py --fault-only`, the chaos-smoke
+path):
+
+- >= 20% of profiles injected with persistent hydration failures and
+  >= 2 store records corrupted; every admission wave still completes
+- degraded_requests == the count the PLAN predicts (persistent failures
+  + quarantined corrupt records) — nothing more, nothing less; flaky
+  (transient) hydrations recover via retry and never degrade
+- no checksum-failing record is ever served; corrupt records are all
+  detected and quarantined
+- UNAFFECTED requests in faulted waves decode BITWISE identical to the
+  no-fault run
+- gang finite guard: healthy slots bitwise-unaffected by a NaN-poisoned
+  slot, the poisoned slot's params/moments bitwise-untouched
+- a torn (truncated) checkpoint is rejected and resume falls back to the
+  last checksum-clean step
+- poisoned onboarding profiles quarantine without graduating and the
+  lifecycle accounting still closes
 """
 from __future__ import annotations
 
@@ -79,6 +99,11 @@ QUANT_GATES = {
 MIN_INT4_STEP_AGREEMENT = 0.75
 MIN_QUANT_VS_NONE_TPS = 0.15      # BENCH_STRICT only
 
+# chaos soak (BENCH_fault.json, PR 6): injected-failure floors the plan
+# must reach for the soak to mean anything
+MIN_INJECTED_FAIL_RATE = 0.20
+MIN_CORRUPT_RECORDS = 2
+
 
 def fail(msg: str):
     print(f"check_bench: FAIL — {msg}")
@@ -102,11 +127,107 @@ def record(data: dict, name: str) -> dict:
     return rec
 
 
-def main():
+def check_fault(fault: dict):
+    """Chaos-soak gates (BENCH_fault.json): every resilience contract the
+    PR 6 layer claims, checked against what the soak actually observed."""
+    chaos = record(fault, "resilience.serve_chaos")
+    if chaos.get("failed_waves", 1) != 0 or not chaos.get("all_done"):
+        fail(f"chaos soak dropped work: {chaos.get('failed_waves')} failed "
+             f"admission waves, all_done={chaos.get('all_done')} — degraded "
+             "serving must complete every wave")
+    if chaos.get("injected_fail_rate", 0) < MIN_INJECTED_FAIL_RATE:
+        fail(f"chaos plan injected only {chaos.get('injected_fail_rate')} "
+             f"persistent hydration failures < {MIN_INJECTED_FAIL_RATE} — "
+             "the soak is not stressing anything")
+    if chaos.get("corrupt_records", 0) < MIN_CORRUPT_RECORDS:
+        fail(f"chaos plan corrupted {chaos.get('corrupt_records')} records "
+             f"< {MIN_CORRUPT_RECORDS}")
+    if chaos.get("corrupt_detected") != chaos.get("corrupt_records"):
+        fail(f"store crc missed corruption: {chaos.get('corrupt_detected')} "
+             f"detected of {chaos.get('corrupt_records')} injected")
+    if chaos.get("corrupt_served", 1) != 0:
+        fail(f"{chaos.get('corrupt_served')} requests were served from a "
+             "checksum-failing record — corrupt records must NEVER serve")
+    exp, got = chaos.get("expected_degraded"), chaos.get("degraded_requests")
+    if not exp or got != exp:
+        fail(f"degraded accounting broken: plan predicts {exp} degraded "
+             f"requests, engine served {got} — every persistent failure "
+             "degrades, nothing else does")
+    if chaos.get("flaky_degraded", 1) != 0:
+        fail(f"{chaos.get('flaky_degraded')} flaky-profile requests "
+             "degraded — transient hydration failures must recover via "
+             "retry")
+    if chaos.get("hydration_retries", 0) <= 0:
+        fail("the soak recorded zero hydration retries — the backoff path "
+             "is not being exercised")
+    if chaos.get("quarantined_profiles", 0) < MIN_CORRUPT_RECORDS:
+        fail(f"only {chaos.get('quarantined_profiles')} profiles "
+             f"quarantined, expected every corrupt record's")
+    if not chaos.get("unaffected_bitwise"):
+        fail("UNAFFECTED requests in faulted waves decoded differently "
+             "from the no-fault run — degradation must be surgical")
+
+    gang = record(fault, "resilience.gang_guard")
+    if not gang.get("healthy_bitwise"):
+        fail("gang finite guard: healthy slots' params/moments are not "
+             "bitwise-identical to the injection-off run")
+    if not gang.get("poisoned_untouched"):
+        fail("gang finite guard: the poisoned slot's params or Adam "
+             "moments moved — a non-finite update leaked through")
+    if gang.get("nonfinite_detected", 0) <= 0:
+        fail("gang finite guard saw zero non-finite strikes despite "
+             "injection — the detector is dead")
+
+    ck = record(fault, "resilience.ckpt_fallback")
+    if not ck.get("fallback_ok"):
+        fail(f"checkpoint fallback broken: torn step {ck.get('torn_step')} "
+             f"rejected={ck.get('torn_rejected')}, resumed from "
+             f"{ck.get('resumed_step')} — resume must land on the last "
+             "checksum-clean checkpoint")
+
+    ob = record(fault, "resilience.onboard_quarantine")
+    if ob.get("quarantined", 0) < 1:
+        fail("poisoned onboarding quarantined zero profiles")
+    if not ob.get("accounting_ok"):
+        fail(f"onboarding lost profiles under poisoning: "
+             f"{ob.get('graduated')} graduated + {ob.get('evicted')} "
+             f"evicted + {ob.get('quarantined')} quarantined != "
+             f"{ob.get('profiles')} streamed")
+    if ob.get("quarantined_served", 1) != 0:
+        fail("a quarantined profile reached the serving store")
+
+    # elastic reshard record is emitted only on >= 8-device runs
+    el = next((r for r in fault["records"]
+               if r["name"] == "resilience.elastic"), None)
+    if el is not None and not el.get("bitwise"):
+        fail("surviving-mesh reshard changed state values")
+
+    print(f"check_bench[fault]: OK — {chaos['degraded_requests']}/"
+          f"{chaos['requests']} requests degraded as planned over "
+          f"{chaos['waves']} waves (0 failed), "
+          f"{chaos['corrupt_detected']} corrupt records caught, "
+          f"{chaos['hydration_retries']} retries; gang guard bitwise OK "
+          f"({gang['nonfinite_detected']} strikes), checkpoint fell back "
+          f"to step {ck['resumed_step']}, onboarding quarantined "
+          f"{ob['quarantined']}/{ob['profiles']}"
+          + ("" if el is None else
+             f"; elastic reshard bitwise on {el['devices']} devices"))
+
+
+def main(fault_only: bool = False):
     base = os.environ.get("BENCH_DIR", ".")
+    if fault_only:
+        check_fault(load(os.path.join(base, "BENCH_fault.json")))
+        return
     kernels = load(os.path.join(base, "BENCH_kernels.json"))
     serve = load(os.path.join(base, "BENCH_serve.json"))
     train = load(os.path.join(base, "BENCH_train.json"))
+    # the chaos artifact is produced by `make chaos-smoke`, which runs its
+    # own mandatory `--fault-only` gate AFTER bench-smoke in `make verify`
+    # — here it is gated opportunistically (stale-artifact safety net)
+    fault_path = os.path.join(base, "BENCH_fault.json")
+    if os.path.exists(fault_path):
+        check_fault(load(fault_path))
 
     names = {r["name"] for r in kernels["records"]}
     for required in ("mask_aggregate_batched.pallas_interpret",
@@ -294,4 +415,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(fault_only="--fault-only" in sys.argv)

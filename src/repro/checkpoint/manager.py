@@ -19,6 +19,7 @@ from typing import Any, Optional
 import numpy as np
 import jax
 
+from repro.resilience.integrity import CheckpointCorruptError, file_crc
 from repro.utils import tree_paths
 
 
@@ -39,10 +40,14 @@ def _jsonify(obj):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int = 3,
+                 fault_plan=None):
         self.dir = directory
         self.keep_last = keep_last
         self._thread: Optional[threading.Thread] = None
+        # Chaos seam: a FaultPlan may truncate a payload AFTER its manifest
+        # checksum was computed — the torn-write case verify_step catches.
+        self.fault_plan = fault_plan
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------ save
@@ -67,8 +72,15 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "state.npz"),
+        state_path = os.path.join(tmp, "state.npz")
+        np.savez(state_path,
                  **{k.replace("/", "__"): v for k, v in host_flat.items()})
+        crc, nbytes = file_crc(state_path)
+        meta = dict(meta, state_crc32=crc, state_nbytes=nbytes)
+        if self.fault_plan is not None and \
+                self.fault_plan.truncate_checkpoint(step):
+            with open(state_path, "r+b") as f:  # torn write: drop the tail
+                f.truncate(max(nbytes // 2, 1))
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
             json.dump(meta, f)
         if os.path.exists(final):
@@ -101,10 +113,46 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify_step(self, step: int) -> None:
+        """Check a checkpoint's payload against its manifest checksum.
+
+        Raises `CheckpointCorruptError` on a size or crc32 mismatch (torn
+        write, disk corruption). Manifests predating the checksum field
+        pass — there is nothing to verify them against."""
+        path = os.path.join(self.dir, f"step_{step:010d}", "state.npz")
+        if not os.path.exists(path):
+            raise CheckpointCorruptError(
+                f"step {step}: state.npz missing")
+        meta = self.manifest(step)
+        if "state_crc32" not in meta:
+            return
+        crc, nbytes = file_crc(path)
+        if nbytes != meta["state_nbytes"]:
+            raise CheckpointCorruptError(
+                f"step {step}: payload {nbytes}B != "
+                f"manifest {meta['state_nbytes']}B (truncated write)")
+        if crc != meta["state_crc32"]:
+            raise CheckpointCorruptError(
+                f"step {step}: payload crc32 {crc:#010x} != "
+                f"manifest {meta['state_crc32']:#010x}")
+
+    def latest_good_step(self) -> Optional[int]:
+        """Newest step whose payload verifies — the resume fallback walks
+        backward past torn/corrupt checkpoints to the last good one."""
+        for step in reversed(self.all_steps()):
+            try:
+                self.verify_step(step)
+                return step
+            except CheckpointCorruptError:
+                continue
+        return None
+
     def restore(self, step: int, abstract_state, shardings=None):
         """Rebuild the state pytree (shaped like abstract_state) from disk.
         shardings: optional matching pytree of NamedSharding for placement
-        on a (possibly different) mesh."""
+        on a (possibly different) mesh. Verifies the payload checksum
+        before deserializing."""
+        self.verify_step(step)
         z = np.load(os.path.join(self.dir, f"step_{step:010d}", "state.npz"))
         flat = {k.replace("__", "/"): z[k] for k in z.files}
         paths = tree_paths(abstract_state)

@@ -17,6 +17,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import masks as M
+from repro.resilience.integrity import RecordIntegrityError, array_crc, \
+    record_crc
 
 
 class ProfileStore:
@@ -34,6 +36,13 @@ class ProfileStore:
         self.quant = quant
         self.quant_group = quant_group
         self._rec: Dict[int, dict] = {}
+        # Integrity sidecar — parallel to _rec, NEVER inside it: the crc
+        # map must not count toward record_nbytes or round-trip through
+        # the npz payload keys.
+        self._crc: Dict[int, Dict[str, int]] = {}
+        self._quarantined: Dict[int, str] = {}
+        self.corrupt_detected = 0   # total integrity violations caught
+        self.agg_dropped: list = []  # pids whose corrupt agg payload was shed
         self._listeners: list = []
 
     # -------------------------------------------------------- invalidation
@@ -105,11 +114,63 @@ class ProfileStore:
             rec["agg_b_q"] = np.asarray(qb["q"])
             rec["agg_b_scale"] = np.asarray(qb["scale"])
         self._rec[int(pid)] = rec
+        self._crc[int(pid)] = record_crc(rec)
+        # Re-graduating a profile replaces its record wholesale: a prior
+        # quarantine no longer describes anything — the profile heals.
+        self._quarantined.pop(int(pid), None)
         self._notify(int(pid))
+
+    # ------------------------------------------------------------- integrity
+    def check_record(self, pid: int) -> None:
+        """Verify one record against its graduation-time checksums.
+
+        Raises `RecordIntegrityError` if the profile is quarantined or a
+        core field (masks / LN affines / head) fails its crc — such a
+        record is quarantined and NEVER served. A quantized record whose
+        corruption is confined to the aggregated ``agg_*`` payload is
+        HEALED instead: the agg fields are shed (and subscribers notified,
+        dropping any cached copy) and the call returns normally — the
+        masks are intact, so the existing sparse bank-read path
+        re-hydrates the profile exactly.
+        """
+        pid = int(pid)
+        if pid in self._quarantined:
+            raise RecordIntegrityError(pid, (), self._quarantined[pid])
+        rec = self._rec[pid]
+        want = self._crc.get(pid)
+        if want is None:  # legacy record (pre-integrity snapshot): bless it
+            self._crc[pid] = record_crc(rec)
+            return
+        bad = [k for k in sorted(set(rec) | set(want))
+               if k not in rec or k not in want
+               or array_crc(np.asarray(rec[k])) != want[k]]
+        if not bad:
+            return
+        self.corrupt_detected += 1
+        if all(k.startswith("agg_") for k in bad):
+            for k in [k for k in rec if k.startswith("agg_")]:
+                rec.pop(k, None)
+                want.pop(k, None)
+            self.agg_dropped.append(pid)
+            self._notify(pid)
+            return
+        self._quarantined[pid] = \
+            f"checksum mismatch ({', '.join(bad)})"
+        self._notify(pid)
+        raise RecordIntegrityError(pid, bad)
+
+    def quarantined_ids(self):
+        return sorted(self._quarantined)
+
+    def integrity_stats(self) -> dict:
+        return dict(corrupt_detected=self.corrupt_detected,
+                    quarantined=self.quarantined_ids(),
+                    agg_dropped=sorted(set(self.agg_dropped)))
 
     # ---------------------------------------------------------------- fetch
     def mask_weights(self, pid: int):
         """Hydrate float mask weights [L, N] x2 for one profile."""
+        self.check_record(pid)
         rec = self._rec[int(pid)]
         if self.mask_type == "hard":
             wa = M.khot_weights_from_bits(M.unpack_mask(rec["mA"], self.N), self.k)
@@ -134,6 +195,7 @@ class ProfileStore:
     def sparse_indices(self, pid: int):
         """Hard-mask profiles: ([L, k] idx, [L, k] w) x2 for sparse agg."""
         assert self.mask_type == "hard"
+        self.check_record(pid)
         rec = self._rec[int(pid)]
         bits_a = M.unpack_mask(rec["mA"], self.N)
         bits_b = M.unpack_mask(rec["mB"], self.N)
@@ -154,8 +216,18 @@ class ProfileStore:
         return ia, wa, ib, wb
 
     def has_quant_record(self, pid: int) -> bool:
-        """True when `pid` carries a quantized aggregated Â/B̂ record."""
-        return "agg_a_q" in self._rec.get(int(pid), {})
+        """True when `pid` carries a quantized aggregated Â/B̂ record
+        that passes its checksums — a record whose agg payload just got
+        shed by `check_record` (or whose core fields are quarantined)
+        answers False, steering admission onto the sparse bank-read
+        path / the degraded fallback."""
+        if "agg_a_q" not in self._rec.get(int(pid), {}):
+            return False
+        try:
+            self.check_record(pid)
+        except RecordIntegrityError:
+            return False
+        return "agg_a_q" in self._rec[int(pid)]
 
     def quant_records(self, pids: Iterable[int]):
         """Stacked quantized aggregated records for a batch of profiles:
@@ -173,6 +245,7 @@ class ProfileStore:
     def head(self, pid: int):
         """Per-profile classifier head (fp16-stored) as float32 jnp arrays,
         or None for profiles graduated without one."""
+        self.check_record(pid)
         rec = self._rec[int(pid)]
         if "head_w" not in rec:
             return None
@@ -182,6 +255,9 @@ class ProfileStore:
     def ln_affines(self, pids: Iterable[int]):
         """Stacked adapter-LN affines ([R, L, b] scale, [R, L, b] bias) as
         float32 — the other half of batched admission hydration."""
+        pids = list(pids)
+        for pid in pids:
+            self.check_record(pid)
         scales = np.stack([self._rec[int(pid)]["ln_scale"] for pid in pids])
         biases = np.stack([self._rec[int(pid)]["ln_bias"] for pid in pids])
         return (jnp.asarray(scales, jnp.float32),
@@ -201,8 +277,13 @@ class ProfileStore:
                 self.quant, self.quant_group) == \
             (other.L, other.N, other.b, other.mask_type, other.k,
              other.quant, other.quant_group), "store shape mismatch"
-        self._rec.update(other._rec)
-        for pid in other._rec:
+        for pid, rec in other._rec.items():
+            if int(pid) in other._quarantined:
+                continue  # never adopt a known-bad record
+            self._rec[int(pid)] = rec
+            self._crc[int(pid)] = dict(
+                other._crc.get(int(pid)) or record_crc(rec))
+            self._quarantined.pop(int(pid), None)
             self._notify(int(pid))
 
     def bytes_per_profile(self, include_ln: bool = False) -> int:
@@ -226,12 +307,15 @@ class ProfileStore:
     def save(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         payload = {}
-        for pid, rec in self._rec.items():
-            for k, v in rec.items():
+        saved = [p for p in sorted(self._rec) if p not in self._quarantined]
+        for pid in saved:
+            for k, v in self._rec[pid].items():
                 payload[f"{pid}:{k}"] = v
         meta = dict(L=self.L, N=self.N, b=self.b, mask_type=self.mask_type,
                     k=self.k, quant=self.quant,
-                    quant_group=self.quant_group, pids=sorted(self._rec))
+                    quant_group=self.quant_group, pids=saved,
+                    crc={str(pid): self._crc.get(pid)
+                         or record_crc(self._rec[pid]) for pid in saved})
         # mkstemp with a .npz suffix: np.savez appends ".npz" to names that
         # lack it, which used to leave the original empty temp file behind
         fd, tmp = tempfile.mkstemp(suffix=".npz",
@@ -247,6 +331,7 @@ class ProfileStore:
         store = cls(meta["L"], meta["N"], meta["b"], meta["mask_type"],
                     meta["k"], meta.get("quant", "none"),
                     meta.get("quant_group", 32))
+        crcs = meta.get("crc", {})
         for pid in meta["pids"]:
             # records carry a variable key set (optional per-profile heads):
             # adopt every "<pid>:<key>" entry rather than a fixed tuple
@@ -254,4 +339,14 @@ class ProfileStore:
             store._rec[int(pid)] = {
                 key[len(prefix):]: z[key] for key in z.files
                 if key.startswith(prefix)}
+            want = crcs.get(str(pid))
+            if want is not None:
+                store._crc[int(pid)] = {k: int(v) for k, v in want.items()}
+        # Verify every record against its persisted checksums up front:
+        # disk/transfer corruption quarantines here, never at serve time.
+        for pid in list(store._rec):
+            try:
+                store.check_record(pid)
+            except RecordIntegrityError:
+                pass  # quarantined; surfaced via integrity_stats()
         return store

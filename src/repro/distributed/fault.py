@@ -40,7 +40,10 @@ class StepWatchdog:
 
     def step_end(self) -> bool:
         """Returns True if this step was a straggler."""
+        if self._t0 is None:  # step_start never called: nothing to score
+            return False
         dt = self.clock() - self._t0
+        self._t0 = None
         hist = self._durations[-self.window:]
         slow = bool(hist) and dt > self.deadline_factor * float(np.median(hist))
         self._durations.append(dt)
@@ -79,7 +82,12 @@ def rebalance_assignment(num_examples: int, hosts: List[int],
     slow_hosts: {host_id: relative_speed in (0,1]} — a host at 0.5 gets half
     a share. Deterministic: every host computes the same assignment.
     """
+    if not hosts:
+        raise ValueError("rebalance_assignment: hosts must be non-empty")
     weights = np.array([slow_hosts.get(h, 1.0) for h in hosts], np.float64)
+    # A reported speed of 0 means "barely alive", not "assign nothing at
+    # the cost of a 0/0 split" — clamp to a positive floor.
+    weights = np.maximum(weights, 1e-6)
     weights = weights / weights.sum()
     counts = np.floor(weights * num_examples).astype(int)
     counts[-1] += num_examples - counts.sum()
@@ -95,18 +103,32 @@ def rebalance_assignment(num_examples: int, hosts: List[int],
 # ----------------------------------------------------------------------------
 
 class PreemptionHandler:
-    """SIGTERM -> set flag; the trainer checkpoints and exits cleanly at the
-    next step boundary."""
+    """SIGTERM / SIGINT -> set flag; the trainer checkpoints and exits
+    cleanly at the next step boundary.
 
-    def __init__(self, sig=signal.SIGTERM):
+    Chains to any previously-installed Python handler instead of silently
+    replacing it (launchers commonly install their own logging/cleanup
+    hooks). SIG_DFL / SIG_IGN / the default KeyboardInterrupt handler are
+    NOT chained — re-raising KeyboardInterrupt would defeat the graceful
+    checkpoint this handler exists to allow.
+    """
+
+    def __init__(self, sigs=(signal.SIGTERM, signal.SIGINT)):
         self._flag = threading.Event()
-        try:
-            signal.signal(sig, self._on)
-        except ValueError:
-            pass  # not the main thread (tests)
+        self._prev: Dict[int, Callable] = {}
+        for sig in (sigs if isinstance(sigs, (tuple, list)) else (sigs,)):
+            try:
+                prev = signal.signal(sig, self._on)
+            except ValueError:
+                continue  # not the main thread (tests)
+            if callable(prev) and prev is not signal.default_int_handler:
+                self._prev[int(sig)] = prev
 
-    def _on(self, *_):
+    def _on(self, signum=None, frame=None):
         self._flag.set()
+        prev = self._prev.get(int(signum)) if signum is not None else None
+        if prev is not None:
+            prev(signum, frame)
 
     def preempted(self) -> bool:
         return self._flag.is_set()

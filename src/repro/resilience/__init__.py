@@ -1,0 +1,35 @@
+"""Resilience layer: seeded fault injection, retry/degrade primitives, and
+record/checkpoint integrity.
+
+Three pieces the serve/train hot paths run through (DESIGN: ISSUE 6):
+
+- `faults.py`     — `FaultPlan`: a seeded, declarative chaos plan injected
+                    behind thin seams (ProfileStore hydration, ServeEngine
+                    admission, the gang step, CheckpointManager writes).
+                    `None` everywhere = production behavior, zero overhead.
+- `retry.py`      — `retry_with_backoff` + `RetryPolicy`: deadline-bounded
+                    jittered exponential backoff (admission hydration).
+- `integrity.py`  — crc32 checksums over store records / checkpoint
+                    payloads and the error types the hot paths catch
+                    (`RecordIntegrityError`, `CheckpointCorruptError`).
+
+The invariant the whole layer leans on is X-PEFT's structure: every
+profile is a tiny mask over ONE shared frozen PLM, so the bare PLM (a
+zero-adapter mask) is always resident and always valid — hydration
+failures degrade a request to it instead of failing the wave
+(cf. arXiv:2305.16742, where the unadapted backbone is a first-class
+inference path).
+"""
+from repro.resilience.faults import (FaultPlan, InjectedFault,
+                                     InjectedHydrationError)
+from repro.resilience.integrity import (CheckpointCorruptError,
+                                        RecordIntegrityError, array_crc,
+                                        file_crc, record_crc)
+from repro.resilience.retry import RetryPolicy, retry_with_backoff
+
+__all__ = [
+    "FaultPlan", "InjectedFault", "InjectedHydrationError",
+    "RecordIntegrityError", "CheckpointCorruptError",
+    "array_crc", "record_crc", "file_crc",
+    "RetryPolicy", "retry_with_backoff",
+]

@@ -52,6 +52,8 @@ import jax.numpy as jnp
 from repro.core import xpeft as XP
 from repro.core.profiles import ProfileStore
 from repro.models import model as MDL
+from repro.resilience import (InjectedHydrationError, RecordIntegrityError,
+                              RetryPolicy, retry_with_backoff)
 from repro.serve.profile_cache import ProfileCache
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.slots import SlotState
@@ -63,7 +65,8 @@ class ServeEngine:
     def __init__(self, cfg, params, store: ProfileStore, *, max_slots: int = 4,
                  max_seq: int = 256, precompute: bool = True,
                  sync_every: int = 8, cache_bytes: Optional[int] = 64 << 20,
-                 mesh=None):
+                 mesh=None, fault_plan=None,
+                 retry_policy: Optional[RetryPolicy] = None):
         self.cfg = cfg
         self.store = store
         self.S = max_seq
@@ -138,6 +141,14 @@ class ServeEngine:
                 self._specs["cache"], mesh)
             self.cache = jax.device_put(self.cache, self._shardings["cache"])
         self.slot_req: List[Optional[Request]] = [None] * max_slots
+        # resilience: admission probes each profile (with retry) before
+        # hydration; a request whose profile can't be served degrades to
+        # the bare PLM (zero-adapter masks) instead of failing its wave
+        self.fault_plan = fault_plan
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.degraded_requests = 0
+        self.hydration_retries = 0
+        self.slot_degraded: List[bool] = [False] * max_slots
         self.scheduler = Scheduler(cfg.block_pattern)
         self.profile_cache = ProfileCache(cache_bytes)
         # re-graduation hook: the store notifies every added/replaced pid,
@@ -267,6 +278,57 @@ class ServeEngine:
             return big.at[:, slots].set(small[:, :B].astype(big.dtype))
         return jax.tree.map(ins, cache, mini)
 
+    # ------------------------------------------------------------ resilience
+    def _zero_entry(self):
+        """One request's bare-PLM hydration entry: the free-slot buffer
+        template (all-zero masks, identity LN). A zero adapter is the
+        EXACT bare PLM — LN(0)·0 @ B̂ contributes 0 to the residual —
+        so a degraded request decodes as if X-PEFT were disabled."""
+        zero = {k: jnp.zeros(v.shape[1:], v.dtype)
+                for k, v in self.masks.items()}
+        zero["ln_scale"] = jnp.ones_like(zero["ln_scale"])
+        return zero
+
+    def _probe_profile(self, pid: int) -> bool:
+        """Pre-hydration health probe for one profile, with retry.
+
+        Transient (injected) hydration failures are retried under the
+        engine's deadline-bounded backoff policy; a persistent failure, a
+        quarantined/corrupt record, or a missing pid returns False — the
+        caller degrades those requests to the bare PLM. `check_record`
+        may legally shed a corrupt quantized agg payload here; that still
+        probes True (the sparse path re-hydrates the intact masks)."""
+        attempt = [0]
+
+        def probe():
+            i, attempt[0] = attempt[0], attempt[0] + 1
+            if self.fault_plan is not None:
+                self.fault_plan.on_hydration(pid, i)
+            self.store.check_record(pid)
+
+        def on_retry(exc, a, delay):
+            self.hydration_retries += 1
+
+        try:
+            retry_with_backoff(probe, policy=self.retry_policy,
+                               retry_on=(InjectedHydrationError,),
+                               seed=pid, on_retry=on_retry)
+            return True
+        except (InjectedHydrationError, RecordIntegrityError, KeyError):
+            return False
+
+    def _probe_wave(self, reqs: List[Request]) -> None:
+        """Mark requests whose profile cannot be served as degraded
+        (probed once per unique pid per wave)."""
+        verdict = {}
+        for r in reqs:
+            pid = int(r.profile_id)
+            if pid not in verdict:
+                verdict[pid] = self._probe_profile(pid)
+            if not verdict[pid] and not r.degraded:
+                r.degraded = True
+                self.degraded_requests += 1
+
     # ------------------------------------------------------------- hydration
     def _hydrate_stacked(self, reqs: List[Request]):
         """Stacked [R, ...] mask-row tree for an admission wave (or None).
@@ -281,18 +343,31 @@ class ServeEngine:
         R = len(reqs)
         pids = [int(r.profile_id) for r in reqs]
         if not self.precompute:
-            wa, wb, ls, lb = self.store.batch_mask_weights(pids)
+            ok_idx = [i for i, r in enumerate(reqs) if not r.degraded]
+            if ok_idx:
+                wa, wb, ls, lb = self.store.batch_mask_weights(
+                    [pids[i] for i in ok_idx])
+            zero = self._zero_entry()
+            rows = [dict(zero) for _ in range(R)]
+            for j, i in enumerate(ok_idx):
+                rows[i] = {"w_a": wa[j], "w_b": wb[j],
+                           "ln_scale": ls[j], "ln_bias": lb[j]}
             self.last_admission = {"path": "per_step", "requests": R,
-                                   "cache_hits": 0, "cache_misses": R,
+                                   "cache_hits": 0,
+                                   "cache_misses": len(ok_idx),
+                                   "degraded": R - len(ok_idx),
                                    "bank_bytes_per_request": 0}
-            return {"w_a": wa, "w_b": wb, "ln_scale": ls, "ln_bias": lb}
+            return {key: jnp.stack([row[key] for row in rows])
+                    for key in ("w_a", "w_b", "ln_scale", "ln_bias")}
         if self.quant != "none":
             return self._hydrate_stacked_quant(reqs, pids)
 
         entries = {}
         hits = misses = 0
         missing: List[int] = []  # unique uncached pids, admission order
-        for pid in pids:
+        for pid, r in zip(pids, reqs):
+            if r.degraded:
+                continue  # bare-PLM entry; never cached, never aggregated
             entry = self.profile_cache.get(pid)
             if entry is not None:
                 hits += 1
@@ -352,8 +427,12 @@ class ServeEngine:
             "path": path, "requests": R, "cache_hits": hits,
             "cache_misses": misses, "unique_profiles": len(set(pids)),
             "aggregated_profiles": aggregated,
+            "degraded": sum(r.degraded for r in reqs),
             "bank_bytes_per_request": bank_bytes // R}
-        return {key: jnp.stack([entries[pid][key] for pid in pids])
+        zero = self._zero_entry()
+        return {key: jnp.stack([zero[key] if r.degraded
+                                else entries[pid][key]
+                                for pid, r in zip(pids, reqs)])
                 for key in ("a_hat", "b_hat", "ln_scale", "ln_bias")}
 
     def _hydrate_stacked_quant(self, reqs: List[Request], pids: List[int]):
@@ -367,7 +446,9 @@ class ServeEngine:
         entries = {}
         hits = misses = 0
         missing: List[int] = []  # unique uncached pids, admission order
-        for pid in pids:
+        for pid, r in zip(pids, reqs):
+            if r.degraded:
+                continue  # bare-PLM entry; never cached, never aggregated
             entry = self.profile_cache.get(pid)
             if entry is not None:
                 hits += 1
@@ -439,8 +520,12 @@ class ServeEngine:
             "aggregated_profiles": aggregated,
             "store_hydrated_profiles": store_hydrated,
             "scheme": self.quant,
+            "degraded": sum(r.degraded for r in reqs),
             "bank_bytes_per_request": bank_bytes // R}
-        return {key: jnp.stack([entries[pid][key] for pid in pids])
+        zero = self._zero_entry()
+        return {key: jnp.stack([zero[key] if r.degraded
+                                else entries[pid][key]
+                                for pid, r in zip(pids, reqs)])
                 for key in ("a_q", "a_scale", "b_q", "b_scale",
                             "ln_scale", "ln_bias")}
 
@@ -462,6 +547,11 @@ class ServeEngine:
         reqs = reqs[:len(free)]
         if not reqs:
             return 0
+        if self.masks is not None:
+            # health-probe every profile first (with retry): requests whose
+            # profile can't be hydrated degrade to the bare PLM below,
+            # never failing the wave for their healthy peers
+            self._probe_wave(reqs)
         stacked = self._hydrate_stacked(reqs)
         assigned = free[:len(reqs)]
         slot_of = {id(r): s for r, s in zip(reqs, assigned)}
@@ -512,6 +602,7 @@ class ServeEngine:
                 r.done = True  # budget spent by the prefill token
             else:
                 self.slot_req[slot] = r
+                self.slot_degraded[slot] = r.degraded
         self._refresh_window()
         return len(reqs)
 
@@ -547,6 +638,7 @@ class ServeEngine:
             if not s.active[i]:
                 req.done = True
                 self.slot_req[i] = None
+                self.slot_degraded[i] = False
         self._refresh_window()
         return self.active_count()
 
@@ -585,6 +677,7 @@ class ServeEngine:
             if req is not None:
                 req.done = True
                 self.slot_req[i] = None
+            self.slot_degraded[i] = False
         self._refresh_window()
 
     def run_until_drained(self, queue: Optional[List[Request]] = None,
@@ -647,4 +740,12 @@ class ServeEngine:
                 self.prefill_real / max(self.prefill_rows, 1), 4),
             "profile_cache": self.profile_cache.stats(),
             "scheduler": self.scheduler.stats(),
+            # resilience surface: how often serving fell back to the bare
+            # PLM, how hard hydration had to retry, and what the store has
+            # quarantined — the operator's first look under chaos
+            "degraded_requests": self.degraded_requests,
+            "degraded_slots": sum(self.slot_degraded),
+            "hydration_retries": self.hydration_retries,
+            "quarantined_profiles": len(self.store.quarantined_ids()),
+            "store_integrity": self.store.integrity_stats(),
         }

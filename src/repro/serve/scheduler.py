@@ -33,6 +33,10 @@ class Request:
     max_new_tokens: int = 16
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    # Set by the engine when the profile could not be hydrated (persistent
+    # failure / integrity quarantine): the request was served by the bare
+    # PLM (zero-adapter masks) instead of failing the wave.
+    degraded: bool = False
 
 
 class Scheduler:

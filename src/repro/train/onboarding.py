@@ -49,6 +49,11 @@ class GraduationPolicy:
     target_loss: Optional[float] = None
     target_acc: Optional[float] = None
     evict_at_max: bool = False
+    # poisoned-slot quarantine: a profile whose slot hits this many
+    # non-finite gang steps (the in-step finite guard skipped its update)
+    # is evicted WITHOUT graduating — a data/numerics problem this bad is
+    # the profile's, and retraining it forever would pin a slot
+    max_poison_strikes: int = 3
 
 
 class RosterBatcher:
@@ -101,6 +106,7 @@ class OnboardingScheduler:
         self.slot_pid: List[Optional[int]] = [None] * roster.capacity
         self.graduated: List[dict] = []
         self.evicted: List[dict] = []
+        self.quarantined: List[dict] = []
         self.admission_waves = 0
         # quantized stores: graduation also freezes the profile's
         # aggregated Â/B̂ (masks x bank, computed here from the bf16/fp32
@@ -135,6 +141,13 @@ class OnboardingScheduler:
         pol = self.policy
         for slot, pid in enumerate(self.slot_pid):
             if pid is None:
+                continue
+            # strike check FIRST: a poisoned slot's slot_step freezes (the
+            # finite guard skips its updates), so it would otherwise sit
+            # below min_steps forever, pinning the slot
+            if int(met["nonfinite"][slot]) >= pol.max_poison_strikes:
+                rstate = self.quarantine(rstate, slot, met)
+                batcher.slot_pids[slot] = None
                 continue
             steps = int(met["slot_step"][slot])
             if steps < pol.min_steps:
@@ -183,6 +196,18 @@ class OnboardingScheduler:
         self.slot_pid[slot] = None
         return rstate
 
+    def quarantine(self, rstate: dict, slot: int, met: dict) -> dict:
+        """Drop a repeatedly-poisoned occupant: its slot took
+        `max_poison_strikes` non-finite gang steps. The profile never
+        graduates (nothing of it reaches the store) and the freed slot is
+        refilled like any other."""
+        rec = self._record(slot, met)
+        rec["nonfinite"] = int(met["nonfinite"][slot])
+        self.quarantined.append(rec)
+        rstate = self.roster.evict(rstate, slot)
+        self.slot_pid[slot] = None
+        return rstate
+
     def finished(self) -> bool:
         return not self.pending and all(p is None for p in self.slot_pid)
 
@@ -191,6 +216,7 @@ class OnboardingScheduler:
                 "in_training": sum(p is not None for p in self.slot_pid),
                 "graduated": len(self.graduated),
                 "evicted": len(self.evicted),
+                "quarantined": len(self.quarantined),
                 "admission_waves": self.admission_waves}
 
     # -------------------------------------------------------------- persist
@@ -200,6 +226,7 @@ class OnboardingScheduler:
                              for p in self.slot_pid],
                 "graduated": list(self.graduated),
                 "evicted": list(self.evicted),
+                "quarantined": list(self.quarantined),
                 "admission_waves": int(self.admission_waves)}
 
     def load_state_dict(self, s: dict) -> None:
@@ -208,6 +235,7 @@ class OnboardingScheduler:
                          for p in s["slot_pid"]]
         self.graduated = list(s["graduated"])
         self.evicted = list(s["evicted"])
+        self.quarantined = list(s.get("quarantined", []))
         self.admission_waves = int(s["admission_waves"])
 
 
@@ -275,7 +303,7 @@ def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
                          policy: Optional[GraduationPolicy] = None,
                          lr: float = 1e-3, ema_decay: float = 0.9,
                          seed: int = 0, frozen=None, store=None,
-                         mesh=None, **trainer_kw):
+                         mesh=None, fault_plan=None, **trainer_kw):
     """Wire the whole lifecycle stack — frozen PLM, roster, gang step,
     batcher, store, scheduler, trainer — the one assembly the launcher,
     example, and bench all share. Returns (trainer, gang_step_fn); the
@@ -316,7 +344,10 @@ def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
     state = {"frozen": frozen, "roster": rstate}
     policy = policy or GraduationPolicy(ema_decay=ema_decay)
     # the step's EMA decay and the policy's debias decay must agree
-    gang = make_gang_step(cfg, lr=lr, ema_decay=policy.ema_decay, mesh=mesh)
+    # one FaultPlan governs the whole run: gang-step grad poisoning here,
+    # checkpoint truncation via the trainer's CheckpointManager below
+    gang = make_gang_step(cfg, lr=lr, ema_decay=policy.ema_decay, mesh=mesh,
+                          fault_plan=fault_plan)
     batcher = RosterBatcher(source, slots, per_slot, seq_len)
     xp = cfg.xpeft
     if store is None:
@@ -329,6 +360,8 @@ def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
         bank=frozen["xpeft_bank"] if store.quant != "none" else None,
         xp=xp if store.quant != "none" else None)
     trainer_kw.setdefault("rng", _jax.random.key(seed + 1))
+    if fault_plan is not None:
+        trainer_kw.setdefault("fault_plan", fault_plan)
     trainer = OnboardingTrainer(_jax.jit(gang), state, batcher, scheduler,
                                 **trainer_kw)
     return trainer, gang

@@ -62,6 +62,10 @@ def init_roster_state(key, cfg, capacity: int) -> dict:
         "ema_loss": jnp.zeros((capacity,), jnp.float32),
         "ema_acc": jnp.zeros((capacity,), jnp.float32),
         "ema_count": jnp.zeros((capacity,), jnp.int32),
+        # poisoned-step counter: gang steps where this slot's loss/grads
+        # came back non-finite (the update was skipped); feeds the
+        # onboarding strike counter that quarantines the profile
+        "nonfinite": jnp.zeros((capacity,), jnp.int32),
     }
 
 
@@ -100,6 +104,7 @@ class Roster:
                 "ema_loss": state["ema_loss"].at[slot].set(0.0),
                 "ema_acc": state["ema_acc"].at[slot].set(0.0),
                 "ema_count": state["ema_count"].at[slot].set(0),
+                "nonfinite": state["nonfinite"].at[slot].set(0),
             }
             return constrain_leading(out, mesh)
 
@@ -129,15 +134,16 @@ class Roster:
     def metrics(self, state: dict, ema_decay: float) -> Dict[str, np.ndarray]:
         """ONE device→host transfer of the convergence signals. EMAs are
         debiased by their update count (EMA starts at 0 on admission)."""
-        active, steps, el, ea, cnt = jax.device_get(
+        active, steps, el, ea, cnt, nf = jax.device_get(
             (state["active"], state["slot_step"], state["ema_loss"],
-             state["ema_acc"], state["ema_count"]))
+             state["ema_acc"], state["ema_count"], state["nonfinite"]))
         debias = 1.0 - np.power(ema_decay, np.maximum(cnt, 1))
         return {"active": np.asarray(active),
                 "slot_step": np.asarray(steps),
                 "ema_loss": np.asarray(el) / debias,
                 "ema_acc": np.asarray(ea) / debias,
-                "ema_count": np.asarray(cnt)}
+                "ema_count": np.asarray(cnt),
+                "nonfinite": np.asarray(nf)}
 
     def slot_params(self, state: dict, slot: int) -> dict:
         """Host copy of one slot's trainables, flattened to the profile

@@ -27,6 +27,7 @@ from repro.core.adapters import init_adapter_bank
 from repro.models import model as MDL
 from repro.optim import (adamw_init, adamw_update, adamw_update_rows,
                          clip_by_global_norm, clip_by_row_norm)
+from repro.optim.adamw import _bcast_rows
 from repro.utils import merge_trees
 
 
@@ -220,7 +221,7 @@ def loss_for_batch(frozen, trainable, batch, cfg, mode, rng, training=True):
 # ----------------------------------------------------------------------------
 
 def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
-                   ema_decay: float = 0.9, mesh=None):
+                   ema_decay: float = 0.9, mesh=None, fault_plan=None):
     """Slot-packed gang step for the onboarding roster.
 
     One jitted update trains every ACTIVE slot on its own per-slot
@@ -235,6 +236,17 @@ def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
     - inactive slots contribute zero loss, and `adamw_update_rows` masks
       their params AND moments, so a parked slot's trajectory is untouched
       by any admit/evict activity elsewhere.
+
+    Finite guard (always on): a slot whose loss or grads come back
+    non-finite is masked out of the update exactly like an inactive one —
+    its params AND Adam moments stay bitwise-untouched, its EMAs and
+    slot_step freeze, and the roster's per-slot ``nonfinite`` counter
+    increments (the onboarding strike counter reads it at sync cadence to
+    quarantine repeat offenders). Healthy slots are bitwise-unaffected:
+    the guard reuses the same per-row masking `adamw_update_rows` already
+    applies to parked slots. A `fault_plan` with `poison_slots` overwrites
+    the selected slots' loss/grads with NaN AFTER `value_and_grad` — the
+    chaos seam that proves the guard, off (and free) in production.
 
     Convergence EMAs (loss/accuracy) update on device inside the step;
     the host reads them via `Roster.metrics` at sync cadence only.
@@ -297,27 +309,45 @@ def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
 
         (_, (slot_loss, slot_acc)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(rstate["trainable"])
+        if fault_plan is not None and fault_plan.poisons_gang():
+            # chaos seam, AFTER value_and_grad: healthy slots' gradient
+            # computation is bitwise-unchanged by the injection
+            pmask = fault_plan.gang_poison_mask(rstate["slot_step"], S)
+            grads = jax.tree.map(
+                lambda g: jnp.where(_bcast_rows(pmask, g), jnp.nan, g),
+                grads)
+            slot_loss = jnp.where(pmask, jnp.nan, slot_loss)
+        # finite guard: treat a poisoned slot exactly like a parked one
+        finite = jnp.isfinite(slot_loss)
+        for g in jax.tree.leaves(grads):
+            finite &= jnp.all(jnp.isfinite(g),
+                              axis=tuple(range(1, g.ndim)))
+        ok = active & finite
         grads, gnorm = clip_by_row_norm(grads, clip_norm)
         new_params, new_opt = adamw_update_rows(
-            grads, rstate["opt"], rstate["trainable"], active, lr=lr,
+            grads, rstate["opt"], rstate["trainable"], ok, lr=lr,
             weight_decay=weight_decay)
         d = ema_decay
-        ema = lambda old, x: jnp.where(active, d * old + (1 - d) * x, old)
+        ema = lambda old, x: jnp.where(ok, d * old + (1 - d) * x, old)
         new_r = {
             "trainable": new_params, "opt": new_opt, "active": active,
-            "slot_step": rstate["slot_step"] + active.astype(jnp.int32),
+            "slot_step": rstate["slot_step"] + ok.astype(jnp.int32),
             "ema_loss": ema(rstate["ema_loss"], slot_loss),
             "ema_acc": ema(rstate["ema_acc"], slot_acc),
-            "ema_count": rstate["ema_count"] + active.astype(jnp.int32),
+            "ema_count": rstate["ema_count"] + ok.astype(jnp.int32),
+            "nonfinite": rstate["nonfinite"]
+            + (active & ~finite).astype(jnp.int32),
         }
         new_r = constrain_leading(new_r, mesh)
-        af = active.astype(jnp.float32)
-        n_act = jnp.maximum(af.sum(), 1.0)
-        metrics = {"loss": (slot_loss * af).sum() / n_act,
-                   "grad_norm": (gnorm * af).sum() / n_act,
-                   "active_slots": af.sum()}
+        okf = ok.astype(jnp.float32)
+        n_ok = jnp.maximum(okf.sum(), 1.0)
+        metrics = {"loss": jnp.where(ok, slot_loss, 0.0).sum() / n_ok,
+                   "grad_norm": jnp.where(ok, gnorm, 0.0).sum() / n_ok,
+                   "active_slots": active.astype(jnp.float32).sum(),
+                   "nonfinite_slots":
+                       (active & ~finite).astype(jnp.float32).sum()}
         if cfg.num_labels:
-            metrics["accuracy"] = (slot_acc * af).sum() / n_act
+            metrics["accuracy"] = jnp.where(ok, slot_acc, 0.0).sum() / n_ok
         return {"frozen": frozen, "roster": new_r}, metrics
 
     step.trace_counter = counter

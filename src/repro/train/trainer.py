@@ -22,6 +22,7 @@ the boundaries:
 from __future__ import annotations
 
 import time
+import zipfile
 from typing import Callable, List, Optional
 
 import jax
@@ -29,6 +30,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.distributed.fault import PreemptionHandler, StepWatchdog
+from repro.resilience.integrity import CheckpointCorruptError
 
 
 class Trainer:
@@ -36,13 +38,15 @@ class Trainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
                  keep_last: int = 3, watchdog: Optional[StepWatchdog] = None,
                  preemption: Optional[PreemptionHandler] = None,
-                 log_every: int = 10, rng=None):
+                 log_every: int = 10, rng=None, fault_plan=None):
         self.step_fn = step_fn
         self.state = state
         self.loader = loader
         self.step = 0
         self.ckpt_every = ckpt_every
-        self.mgr = CheckpointManager(ckpt_dir, keep_last) if ckpt_dir else None
+        self.mgr = CheckpointManager(ckpt_dir, keep_last,
+                                     fault_plan=fault_plan) \
+            if ckpt_dir else None
         self.watchdog = watchdog or StepWatchdog()
         self.preemption = preemption
         self.log_every = log_every
@@ -56,18 +60,25 @@ class Trainer:
 
     # ------------------------------------------------------------- recovery
     def try_resume(self) -> bool:
+        """Resume from the newest checkpoint that verifies — a torn or
+        corrupt latest checkpoint falls back to the one before it (and so
+        on), never fails the run."""
         if not self.mgr:
-            return False
-        latest = self.mgr.latest_step()
-        if latest is None:
             return False
         abstract = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
-        self.state = self.mgr.restore(latest, abstract)
-        man = self.mgr.manifest(latest)
-        self.step = man["step"]
-        self.restore_extra(man["extra"])
-        return True
+        for latest in reversed(self.mgr.all_steps()):
+            try:
+                state = self.mgr.restore(latest, abstract)
+            except (CheckpointCorruptError, OSError, ValueError,
+                    zipfile.BadZipFile):
+                continue  # torn/corrupt payload: walk back one checkpoint
+            self.state = state
+            man = self.mgr.manifest(latest)
+            self.step = man["step"]
+            self.restore_extra(man["extra"])
+            return True
+        return False
 
     def extra_state(self) -> dict:
         """Manifest payload for exact resume (subclasses extend)."""

@@ -1,0 +1,433 @@
+"""Resilience layer: retry/backoff, FaultPlan determinism, store record
+integrity + quarantine, degraded bare-PLM serving, gang-step finite guard,
+poisoned-profile quarantine, checkpoint checksum fallback."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.models import init_lm
+from repro.resilience import (CheckpointCorruptError, FaultPlan,
+                              InjectedHydrationError, RecordIntegrityError,
+                              RetryPolicy, array_crc, retry_with_backoff)
+from repro.serve.engine import Request, ServeEngine
+
+FAST_RETRY = RetryPolicy(attempts=3, delay_s=1e-4, max_delay_s=1e-3,
+                         deadline_s=5.0)
+
+
+# ------------------------------------------------------------------- retry
+
+def test_retry_succeeds_after_transient_failures():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    sleeps = []
+    assert retry_with_backoff(flaky, policy=FAST_RETRY,
+                              retry_on=(RuntimeError,),
+                              sleep=sleeps.append) == "ok"
+    assert len(calls) == 3 and len(sleeps) == 2
+    assert sleeps[1] > sleeps[0]  # exponential backoff
+
+
+def test_retry_raises_last_error_and_is_deterministic():
+    def always():
+        raise ValueError("nope")
+
+    sleeps_a, sleeps_b = [], []
+    for sleeps in (sleeps_a, sleeps_b):
+        with pytest.raises(ValueError):
+            retry_with_backoff(always, policy=FAST_RETRY, seed=7,
+                               retry_on=(ValueError,), sleep=sleeps.append)
+    assert sleeps_a == sleeps_b  # seeded jitter replays exactly
+
+
+def test_retry_non_matching_exception_propagates_at_once():
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise KeyError("not retryable")
+
+    with pytest.raises(KeyError):
+        retry_with_backoff(boom, policy=FAST_RETRY, retry_on=(ValueError,))
+    assert len(calls) == 1
+
+
+def test_retry_respects_deadline():
+    """A retry whose backoff would start past the deadline is abandoned."""
+    t = [0.0]
+    policy = RetryPolicy(attempts=10, delay_s=0.5, backoff=1.0,
+                         max_delay_s=0.5, jitter=0.0, deadline_s=1.0)
+    calls = []
+
+    def always():
+        calls.append(1)
+        raise RuntimeError("down")
+
+    def sleep(d):
+        t[0] += d
+
+    with pytest.raises(RuntimeError):
+        retry_with_backoff(always, policy=policy, retry_on=(RuntimeError,),
+                           sleep=sleep, clock=lambda: t[0])
+    # deadline 1.0 / delay 0.5 -> attempts at t=0, 0.5, 1.0; the 4th would
+    # start at 1.5 > deadline
+    assert len(calls) == 3
+
+
+# --------------------------------------------------------------- FaultPlan
+
+def test_fault_plan_is_deterministic_and_rate_accurate():
+    plan = FaultPlan(seed=11, hydration_fail_rate=0.25,
+                     hydration_flaky_rate=0.25)
+    pids = list(range(400))
+    fails = plan.persistent_fail_pids(pids)
+    flaky = plan.flaky_hydration_pids(pids)
+    assert fails == FaultPlan(seed=11, hydration_fail_rate=0.25,
+                              hydration_flaky_rate=0.25) \
+        .persistent_fail_pids(pids)
+    assert not set(fails) & set(flaky)
+    assert 0.15 < len(fails) / len(pids) < 0.35
+    assert 0.15 < len(flaky) / len(pids) < 0.35
+    # a different seed draws a different fault set
+    assert fails != FaultPlan(seed=12, hydration_fail_rate=0.25,
+                              hydration_flaky_rate=0.25) \
+        .persistent_fail_pids(pids)
+
+
+def test_fault_plan_hydration_modes():
+    plan = FaultPlan(fail_pids=(1,), flaky_pids=(2,))
+    with pytest.raises(InjectedHydrationError):
+        plan.on_hydration(1, attempt=0)
+    with pytest.raises(InjectedHydrationError):
+        plan.on_hydration(1, attempt=5)   # persistent: every attempt
+    with pytest.raises(InjectedHydrationError):
+        plan.on_hydration(2, attempt=0)
+    plan.on_hydration(2, attempt=1)       # flaky: retry succeeds
+    plan.on_hydration(3, attempt=0)       # healthy pid: no-op
+
+
+# ------------------------------------------------------------ store records
+
+def _store(quant="none", n=4, L=2, N=16, b=4, k=4):
+    st = ProfileStore(L, N, b, "hard", k, quant=quant)
+    rng = np.random.default_rng(0)
+    for pid in range(n):
+        prof = dict(mA=rng.normal(size=(L, N)), mB=rng.normal(size=(L, N)),
+                    ln_scale=np.ones((L, b)), ln_bias=np.zeros((L, b)))
+        agg = None
+        if quant != "none":
+            agg = (rng.normal(size=(L, 8, b)).astype(np.float32),
+                   rng.normal(size=(L, b, 8)).astype(np.float32))
+        st.add_profile(pid, prof, agg=agg)
+    return st
+
+
+def test_store_checksums_catch_corruption_and_quarantine():
+    st = _store()
+    ev = FaultPlan(seed=5, corrupt_pids=(1,)).corrupt_store(st)
+    assert len(ev) == 1 and ev[0]["pid"] == 1
+    with pytest.raises(RecordIntegrityError):
+        st.mask_weights(1)
+    assert st.quarantined_ids() == [1]
+    # quarantined stays quarantined on every later hydration attempt
+    with pytest.raises(RecordIntegrityError):
+        st.sparse_indices(1)
+    # healthy records unaffected
+    st.mask_weights(0)
+    assert st.integrity_stats()["corrupt_detected"] == 1
+
+
+def test_store_heals_on_regraduation():
+    st = _store()
+    FaultPlan(seed=5, corrupt_pids=(2,)).corrupt_store(st)
+    with pytest.raises(RecordIntegrityError):
+        st.mask_weights(2)
+    rng = np.random.default_rng(9)
+    st.add_profile(2, dict(mA=rng.normal(size=(2, 16)),
+                           mB=rng.normal(size=(2, 16)),
+                           ln_scale=np.ones((2, 4)),
+                           ln_bias=np.zeros((2, 4))))
+    st.mask_weights(2)  # re-graduation replaces the record: healed
+    assert st.quarantined_ids() == []
+
+
+def test_store_quant_agg_corruption_sheds_payload_not_profile():
+    """Corruption confined to the quantized agg payload drops the agg
+    fields but keeps the profile servable via the sparse bank-read path."""
+    st = _store(quant="int8")
+    assert st.has_quant_record(1)
+    FaultPlan(seed=5, corrupt_pids=(1,),
+              corrupt_agg_only=True).corrupt_store(st)
+    assert not st.has_quant_record(1)   # shed, not quarantined
+    assert st.quarantined_ids() == []
+    st.mask_weights(1)                  # masks intact -> still hydrates
+    assert st.integrity_stats()["agg_dropped"] == [1]
+    assert "agg_a_q" not in st._rec[1]
+
+
+def test_store_save_load_roundtrip_verifies_checksums(tmp_path):
+    st = _store()
+    FaultPlan(seed=5, corrupt_pids=(3,)).corrupt_store(st)
+    with pytest.raises(RecordIntegrityError):
+        st.ln_affines([3])
+    path = str(tmp_path / "store.npz")
+    st.save(path)   # quarantined pid 3 is never persisted
+    st2 = ProfileStore.load(path)
+    assert st2.profile_ids() == [0, 1, 2]
+    assert st2.quarantined_ids() == []
+    for pid in st2.profile_ids():  # crcs round-trip and verify clean
+        st2.check_record(pid)
+    # on-disk corruption after load is still caught at hydration
+    st2._rec[0]["mB"] = st2._rec[0]["mB"].copy()
+    st2._rec[0]["mB"][-1] ^= 0x55
+    with pytest.raises(RecordIntegrityError):
+        st2.batch_mask_weights([0])
+
+
+def test_array_crc_covers_dtype_and_shape():
+    a = np.arange(8, dtype=np.int32)
+    assert array_crc(a) != array_crc(a.astype(np.int64))
+    assert array_crc(a) != array_crc(a.reshape(2, 4))
+    assert array_crc(a) == array_crc(a.copy())
+
+
+# -------------------------------------------------------- degraded serving
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    table = XP.init_profile_table(key, cfg)
+    return cfg, params, table
+
+
+def _serve_store(cfg, table, n=4):
+    st = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                      cfg.xpeft.bottleneck, "hard", cfg.xpeft.k)
+    for pid in range(n):
+        st.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    return st
+
+
+def _serve(cfg, params, store, plan):
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                      fault_plan=plan, retry_policy=FAST_RETRY)
+    reqs = [Request(uid=i, prompt=np.arange(4 + i % 3) % cfg.vocab_size,
+                    profile_id=i % 4, max_new_tokens=5) for i in range(8)]
+    eng.run_until_drained(list(reqs))
+    assert all(r.done for r in reqs)
+    return eng, reqs
+
+
+def test_degraded_wave_completes_and_peers_are_bitwise_equal(serve_setup):
+    cfg, params, table = serve_setup
+    ref_eng, ref = _serve(cfg, params, _serve_store(cfg, table), None)
+    plan = FaultPlan(fail_pids=(1,), flaky_pids=(2,))
+    eng, reqs = _serve(cfg, params, _serve_store(cfg, table), plan)
+    stats = eng.serve_stats()
+    # every pid-1 request degraded; nothing else did
+    assert [r.uid for r in reqs if r.degraded] == [1, 5]
+    assert stats["degraded_requests"] == 2
+    # flaky pid 2 recovered via retry (never degraded)
+    assert stats["hydration_retries"] > 0
+    assert not any(r.degraded for r in reqs if r.profile_id == 2)
+    # unaffected requests decode bitwise-identically to the no-fault run
+    for r, rr in zip(reqs, ref):
+        if not r.degraded:
+            assert r.generated == rr.generated, r.uid
+    # degraded entries must not poison the cache for later recovery
+    assert eng.profile_cache.peek(1) is None
+
+
+def test_corrupt_record_is_never_served(serve_setup):
+    cfg, params, table = serve_setup
+    store = _serve_store(cfg, table)
+    FaultPlan(seed=5, corrupt_pids=(3,)).corrupt_store(store)
+    eng, reqs = _serve(cfg, params, store, None)
+    assert all(r.done for r in reqs)
+    assert all(r.degraded for r in reqs if r.profile_id == 3)
+    assert eng.serve_stats()["quarantined_profiles"] == 1
+    assert eng.profile_cache.peek(3) is None
+
+
+def test_zero_adapter_entry_matches_bare_plm(serve_setup):
+    """A degraded request's decode equals X-PEFT disabled entirely —
+    the zero-adapter mask IS the bare PLM, bitwise."""
+    cfg, params, table = serve_setup
+    store = _serve_store(cfg, table)
+    prompt = np.arange(6) % cfg.vocab_size
+
+    eng = ServeEngine(cfg, params, store, max_slots=1, max_seq=64,
+                      fault_plan=FaultPlan(fail_pids=(0,)),
+                      retry_policy=FAST_RETRY)
+    r_deg = Request(uid=0, prompt=prompt, profile_id=0, max_new_tokens=6)
+    eng.run_until_drained([r_deg])
+    assert r_deg.degraded
+
+    bare_cfg = cfg.with_xpeft(enabled=False)
+    bare = ServeEngine(bare_cfg, params, store, max_slots=1, max_seq=64)
+    r_bare = Request(uid=0, prompt=prompt, profile_id=0, max_new_tokens=6)
+    bare.run_until_drained([r_bare])
+    assert r_deg.generated == r_bare.generated
+
+
+def test_missing_profile_degrades_instead_of_crashing(serve_setup):
+    cfg, params, table = serve_setup
+    store = _serve_store(cfg, table)
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                      retry_policy=FAST_RETRY)
+    reqs = [Request(uid=0, prompt=np.arange(5), profile_id=0,
+                    max_new_tokens=4),
+            Request(uid=1, prompt=np.arange(5), profile_id=999,  # unknown
+                    max_new_tokens=4)]
+    eng.run_until_drained(list(reqs))
+    assert reqs[1].degraded and not reqs[0].degraded
+    assert eng.serve_stats()["degraded_requests"] == 1
+
+
+# ------------------------------------------------------- gang finite guard
+
+def test_gang_finite_guard_isolates_poisoned_slot():
+    """A NaN-poisoned slot's params and Adam moments stay bitwise-frozen
+    while healthy slots update bitwise-identically to a no-fault step.
+
+    The bitwise reference is the SAME plan with a never-firing poison
+    window: injection on vs off within one compiled program. (A plan-free
+    step compiles to different HLO — without the seam's where-ops XLA
+    fuses the EMA multiply-adds differently, a 1-ulp compiler artifact
+    that has nothing to do with the guard.)"""
+    from repro.data import ProfileClassification
+    from repro.train.roster import Roster, init_roster_state
+    from repro.train.steps import make_gang_step
+
+    cfg = reduce_for_smoke(get_config("bert-base-xpeft")).with_(
+        num_labels=4, vocab_size=64).with_xpeft(num_adapters=8, k=2)
+    S, m = 3, 2
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=S, seed=5)
+
+    def build(plan):
+        key = jax.random.key(0)
+        frozen = init_lm(key, cfg)
+        roster = Roster(cfg, jax.random.key(2), S)
+        rstate = init_roster_state(jax.random.key(1), cfg, S)
+        for s in range(S):
+            rstate = roster.admit(rstate, s, s)
+        step = jax.jit(make_gang_step(cfg, lr=5e-2, fault_plan=plan))
+        state = {"frozen": frozen, "roster": rstate}
+        pids = np.repeat(np.arange(S), m)
+        b = data.sample(0, S * m, 12, profile_ids=pids)
+        batch = {k: jnp.asarray(np.asarray(v).reshape((S, m) + v.shape[1:]))
+                 for k, v in b.items()}
+        for _ in range(3):
+            state, met = step(state, batch, jax.random.key(3))
+        return jax.device_get(state["roster"]), jax.device_get(met)
+
+    clean, met0 = build(FaultPlan(poison_slots=(1,),
+                                  poison_from_step=10 ** 9))
+    faulty, met1 = build(FaultPlan(poison_slots=(1,)))
+
+    assert met0["nonfinite_slots"] == 0
+    assert met1["nonfinite_slots"] == 1
+    assert np.isfinite(met1["loss"])  # NaN never leaks into metrics
+    assert faulty["nonfinite"].tolist() == [0, 3, 0]
+    assert faulty["slot_step"].tolist() == [3, 0, 3]
+
+    def rows(tree, s):
+        return [np.asarray(leaf[s]) for leaf in jax.tree.leaves(tree)]
+
+    for s in (0, 2):  # healthy slots: bitwise-identical to the clean run
+        for a, b in zip(rows(clean, s), rows(faulty, s)):
+            assert np.array_equal(a, b)
+    # poisoned slot: params and moments bitwise-frozen at admission values
+    for key in ("trainable",):
+        for a0, a1 in zip(rows(clean[key], 1), rows(faulty[key], 1)):
+            assert not np.array_equal(a0, a1)  # clean DID train slot 1
+    for leaf in jax.tree.leaves(faulty["opt"]["m"]) + \
+            jax.tree.leaves(faulty["opt"]["v"]):
+        assert np.all(np.asarray(leaf)[1] == 0.0)
+    assert faulty["opt"]["step"][1] == 0
+
+
+def test_poisoned_profile_quarantined_without_graduation():
+    from repro.data import ProfileClassification
+    from repro.train import GraduationPolicy
+    from repro.train.onboarding import build_onboarding_run
+
+    cfg = reduce_for_smoke(get_config("bert-base-xpeft")).with_(
+        num_labels=4, vocab_size=64).with_xpeft(num_adapters=8, k=2)
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=4, seed=5)
+    pol = GraduationPolicy(min_steps=3, max_steps=5, target_acc=2.0,
+                           max_poison_strikes=2)
+    trainer, _ = build_onboarding_run(
+        cfg, data, range(4), slots=2, per_slot=2, seq_len=12, policy=pol,
+        lr=5e-2, log_every=3, rng=jax.random.key(1),
+        fault_plan=FaultPlan(poison_slots=(0,)))
+    trainer.run_until_drained(max_steps=300)
+    st = trainer.scheduler.stats()
+    assert st["quarantined"] >= 1
+    assert st["graduated"] + st["evicted"] + st["quarantined"] == 4
+    quarantined_pids = {r["pid"] for r in trainer.scheduler.quarantined}
+    # nothing of a quarantined profile reached the store
+    assert not quarantined_pids & set(trainer.scheduler.store.profile_ids())
+
+
+# ------------------------------------------------------ checkpoint fallback
+
+def test_checkpoint_truncation_falls_back_to_last_good(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    state = {"w": jnp.arange(8.0), "b": jnp.zeros((3,))}
+    plan = FaultPlan(truncate_ckpt_steps=(20,))
+    mgr = CheckpointManager(str(tmp_path), keep_last=5, fault_plan=plan)
+    mgr.save(10, state)
+    mgr.save(20, jax.tree.map(lambda x: x + 1, state))  # torn write
+    with pytest.raises(CheckpointCorruptError):
+        mgr.verify_step(20)
+    assert mgr.latest_step() == 20          # newest on disk...
+    assert mgr.latest_good_step() == 10     # ...but not restorable
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(20, abstract)
+    got = mgr.restore(10, abstract)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(8.0))
+
+
+def test_trainer_resume_skips_corrupt_checkpoint(tmp_path):
+    from repro.data import MarkovLM
+    from repro.data.loader import ShardedLoader
+    from repro.train.steps import init_train_state, make_train_step
+    from repro.train.trainer import Trainer
+
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    step = jax.jit(make_train_step(cfg, "xpeft", lr=1e-3))
+
+    def build(plan=None):
+        loader = ShardedLoader(MarkovLM(cfg.vocab_size, 4, seed=0), 2, 8)
+        return Trainer(step,
+                       init_train_state(jax.random.key(0), cfg, "xpeft"),
+                       loader, ckpt_dir=str(tmp_path), ckpt_every=2,
+                       log_every=1000, fault_plan=plan)
+
+    t1 = build(FaultPlan(truncate_ckpt_steps=(4,)))
+    t1.run(4)   # checkpoints at 2 (good) and 4 (truncated)
+    t1.mgr.wait()
+    assert t1.mgr.latest_step() == 4
+    t2 = build()
+    assert t2.try_resume()
+    assert t2.step == 2  # fell back past the torn step-4 checkpoint

@@ -184,7 +184,8 @@ class _PublicOnlyStore:
     _PUBLIC = ("mask_weights", "batch_mask_weights", "sparse_indices",
                "batch_sparse_indices", "ln_affines", "profile_ids",
                "bytes_per_profile", "total_bytes", "mask_type", "k",
-               "L", "N", "b", "subscribe")
+               "L", "N", "b", "subscribe", "check_record",
+               "quarantined_ids", "integrity_stats")
 
     def subscribe(self, fn):
         # engines register their invalidation hook at construction; the
