@@ -9,7 +9,7 @@ PY      := python
 PP      := PYTHONPATH=src:.
 
 .PHONY: verify test bench-smoke onboard-smoke multidev-smoke quant-smoke \
-	chaos-smoke bench
+	chaos-smoke cb-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -54,8 +54,18 @@ chaos-smoke:
 		$(PY) benchmarks/fault_bench.py --smoke
 	$(PP) $(PY) benchmarks/check_bench.py --fault-only
 
+# continuous-batching smoke (PR 7 paged engine): the windowed and the
+# paged continuous engine drain the SAME skewed-length workload; gates are
+# bitwise token parity, strictly higher slot occupancy / lower stranded
+# slot-steps, and one decode trace across admissions/preemptions/resumes.
+# The >= 1.3x tok/s floor applies under BENCH_STRICT=1 only (shared CI
+# wall clock varies). The same numbers land in BENCH_serve.json (cb.*
+# records, gated by check_bench inside bench-smoke).
+cb-smoke:
+	$(PP) $(PY) benchmarks/cb_smoke.py --check
+
 bench:
 	$(PP) $(PY) benchmarks/run.py
 
-verify: test bench-smoke onboard-smoke quant-smoke chaos-smoke
+verify: test bench-smoke onboard-smoke quant-smoke chaos-smoke cb-smoke
 	@echo "verify: OK"

@@ -13,6 +13,13 @@ properties:
   (the PR 1 architecture's cadence, so the gate is machine-independent);
   BENCH_STRICT=1 additionally enforces the absolute PR 1 number — for
   perf machines, not shared CI runners whose wall clock varies 2-4x
+- continuous batching (PR 7 paged engine, cb.* records): per-request token
+  ids BITWISE equal to the windowed engine on the skewed workload, the
+  decode step compiled exactly ONCE across admissions/preemptions/resumes,
+  mean slot occupancy strictly higher and stranded slot-steps strictly
+  lower than windowed; BENCH_STRICT=1 additionally enforces the >= 1.3x
+  decode tok/s floor (wall clock on shared runners varies — the
+  structural gates are the unconditional contract)
 - the 8-fake-device mesh is BITWISE equal to the 1-device path (graduated
   store bytes, admission Â/B̂, decode token ids) and shards memory
   (per-device resident bytes strictly below single-device); the
@@ -85,6 +92,7 @@ MIN_DECODE_TOKENS_PER_S = 2723.0  # PR 1 absolute, BENCH_STRICT only
 MIN_SHARDED_VS_SINGLE = 0.05      # 8-fake-device tok/s floor, STRICT only
                                   # (fake devices timeshare one CPU; this
                                   # only catches catastrophic regressions)
+MIN_CB_TOK_S_RATIO = 1.3          # continuous vs windowed, STRICT only
 MAX_SYNCS_PER_TRAIN_STEP = 1.0
 MIN_PROFILES_PER_MIN = 300.0      # smoke-config absolute, BENCH_STRICT only
 
@@ -349,13 +357,43 @@ def main(fault_only: bool = False):
                  f"{MIN_QUANT_VS_NONE_TPS}x the same-run bf16 rate "
                  f"{qdec.get('none_tokens_per_s')} (BENCH_STRICT)")
 
+    # ---- continuous batching (paged KV + adapter-slot memory) -----------
+    cbp = record(serve, "cb.parity")
+    if not cbp.get("tokens_equal"):
+        fail("continuous-batching tokens != windowed tokens — the paged "
+             "engine must be BITWISE identical per request")
+    if cbp.get("step_traces") != 1:
+        fail(f"continuous decode step traced {cbp.get('step_traces')} "
+             "times — admissions/preemptions/resumes must reuse ONE "
+             "compiled program")
+    cbo = record(serve, "cb.occupancy")
+    if cbo.get("continuous", 0) <= cbo.get("windowed", 1):
+        fail(f"continuous slot occupancy {cbo.get('continuous')} <= "
+             f"windowed {cbo.get('windowed')} — continuous batching "
+             "stopped filling freed slots mid-decode")
+    if cbo.get("continuous_stranded", 1) >= cbo.get("windowed_stranded", 0):
+        fail(f"continuous stranded slot-steps {cbo.get('continuous_stranded')}"
+             f" >= windowed {cbo.get('windowed_stranded')} — short requests "
+             "are still waiting out the wave straggler")
+    cbt = record(serve, "cb.tok_s_vs_windowed")
+    if cbt.get("ratio", 0) <= 0:
+        fail("continuous-vs-windowed tok/s ratio is not positive")
+    if os.environ.get("BENCH_STRICT") and \
+            cbt.get("ratio", 0) < MIN_CB_TOK_S_RATIO:
+        fail(f"continuous decode at {cbt.get('ratio')}x windowed tok/s < "
+             f"{MIN_CB_TOK_S_RATIO}x floor (BENCH_STRICT)")
+
     # ---- multi-device (8-fake-device mesh vs 1 device) ------------------
     par = record(serve, "sharded.parity")
     for bit in ("onboard_store_bitwise_equal", "serve_entries_bitwise_equal",
-                "decode_tokens_equal"):
+                "decode_tokens_equal", "cb_decode_tokens_equal"):
         if not par.get(bit):
             fail(f"sharded parity broken: {bit} is false — the mesh path "
                  "no longer reproduces the single-device results")
+    cbtr = par.get("cb_step_traces", {})
+    if cbtr.get("sharded") != 1:
+        fail(f"continuous decode step traced {cbtr.get('sharded')} times "
+             "on the mesh — one compiled program must serve all devices")
     shtp = record(serve, "sharded.throughput")
     single_b = shtp.get("single_bytes_per_device", {}).get("total", 0)
     shard_b = shtp.get("sharded_bytes_per_device", {}).get("total", 0)
@@ -406,6 +444,10 @@ def main(fault_only: bool = False):
           f"{pre['occupancy']}, {sync['syncs_per_token']} syncs/token, "
           f"decode {tp['tokens_per_s']} tok/s "
           f"(per-token-sync baseline {base.get('tokens_per_s')}); "
+          f"continuous batching bitwise OK, occupancy "
+          f"{cbo['windowed']} -> {cbo['continuous']}, stranded "
+          f"{cbo['windowed_stranded']} -> {cbo['continuous_stranded']}, "
+          f"{cbt['ratio']}x tok/s; "
           f"{par['devices']}-device parity bitwise OK at {shard_b} B/device "
           f"(single {single_b}, {shtp['sharded_vs_single']}x tok/s); "
           f"train {tsync['syncs_per_step']} syncs/step, onboarding "

@@ -21,6 +21,14 @@ BENCH_serve.json (gated by benchmarks/check_bench.py):
                               benchmarks/sharded_smoke.py)
 - sharded.throughput          sharded-vs-single tokens/s + analytic
                               per-device resident bytes under the mesh
+- cb.parity                   continuous-batching engine vs windowed on the
+                              skewed workload: per-request token ids BITWISE
+                              equal, decode step compiled exactly once
+- cb.occupancy                mean slot occupancy + stranded slot-steps,
+                              continuous vs windowed (continuous must win)
+- cb.tok_s_vs_windowed        decode tok/s ratio (>= 1.3x floor under
+                              BENCH_STRICT only; structural gates above are
+                              unconditional) — see benchmarks/cb_smoke.py
 """
 from __future__ import annotations
 
@@ -259,6 +267,27 @@ def main(smoke: bool = False):
                bank_bytes_per_request=adm_s["bank_bytes_per_request"],
                store_hydrated=adm_s["store_hydrated_profiles"])
 
+    # ---- continuous batching vs windowed (paged KV + slot memory) -------
+    # same skewed workload through both engines; cb_smoke owns the
+    # workload + comparison so `make cb-smoke` and this record agree
+    from benchmarks.cb_smoke import run_cb_workload
+    cb = run_cb_workload(n_reqs=12)
+    win_cb, cont = cb["windowed"], cb["continuous"]
+    w.emit("cb.parity", None, tokens_equal=cb["tokens_equal"],
+           requests=cb["requests"], step_traces=cont["step_traces"],
+           preemptions=cont["preemptions"], resumes=cont["resumes"])
+    w.emit("cb.occupancy", None, windowed=win_cb["occupancy"],
+           continuous=cont["occupancy"],
+           windowed_stranded=win_cb["stranded_slot_steps"],
+           continuous_stranded=cont["stranded_slot_steps"],
+           windowed_device_steps=win_cb["device_steps"],
+           continuous_device_steps=cont["device_steps"])
+    w.emit("cb.tok_s_vs_windowed", None,
+           windowed_tokens_per_s=win_cb["tokens_per_s"],
+           continuous_tokens_per_s=cont["tokens_per_s"],
+           ratio=cb["tok_s_ratio"], page_size=cb["page_size"],
+           pages=cont["pages"])
+
     # multi-device parity + throughput: subprocess (this process pinned
     # itself to 1 CPU device at first jax use; the smoke forces 8 fake
     # host devices and runs BOTH paths, so the record is self-contained)
@@ -268,6 +297,8 @@ def main(smoke: bool = False):
            onboard_store_bitwise_equal=sm["onboard_store_bitwise_equal"],
            serve_entries_bitwise_equal=sm["serve_entries_bitwise_equal"],
            decode_tokens_equal=sm["decode_tokens_equal"],
+           cb_decode_tokens_equal=sm["cb_decode_tokens_equal"],
+           cb_step_traces=sm["cb_step_traces"],
            gang_traces=sm["gang_traces"])
     w.emit("sharded.throughput", None,
            single_tokens_per_s=sm["single"]["tokens_per_s"],

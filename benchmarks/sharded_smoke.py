@@ -8,6 +8,10 @@ i.e. 4x2) — and checks:
   fp16 LN affines) are byte-identical,
 - serving:    the admission-time aggregated Â/B̂ cache entries are
               bit-identical and the decoded token ids equal,
+- continuous: the paged continuous-batching engine decodes the skewed
+              workload bitwise-identical on the mesh (pages shard like
+              the slot axis, so the page-table gather/scatter never
+              crosses a device boundary) with its step compiled once,
 
 plus throughput and the analytic per-device resident bytes for both
 paths. Prints ONE JSON line (the last stdout line) that serve_bench
@@ -168,12 +172,34 @@ def main():
         for pid in ent1 for k in ent1[pid])
     tokens_ok = toks1 == toks8
 
+    # ------------------------------------------------- continuous batching
+    # the paged engine holds the same mesh-vs-single bitwise contract on
+    # the skewed workload (mid-decode admission + page reuse included)
+    from benchmarks.cb_smoke import skewed_requests
+
+    def serve_cb(mesh_):
+        eng = ServeEngine(cfg, frozen, store1, max_slots=slots, max_seq=64,
+                          sync_every=4, continuous=True, page_size=8,
+                          mesh=mesh_)
+        eng.run_until_drained(skewed_requests(cfg, 2 * slots, seed=0,
+                                              long_new=16))
+        reqs = skewed_requests(cfg, 2 * slots, seed=0, long_new=16)
+        eng.run_until_drained(reqs)
+        return ({r.uid: list(map(int, r.generated)) for r in reqs},
+                eng.serve_stats()["step_traces"])
+
+    cb_toks1, cb_tr1 = serve_cb(None)
+    cb_toks8, cb_tr8 = serve_cb(mesh)
+    cb_tokens_ok = cb_toks1 == cb_toks8
+
     out = {
         "devices": args.devices,
         "mesh": mesh_str,
         "onboard_store_bitwise_equal": bool(onboard_ok),
         "serve_entries_bitwise_equal": bool(entries_ok),
         "decode_tokens_equal": bool(tokens_ok),
+        "cb_decode_tokens_equal": bool(cb_tokens_ok),
+        "cb_step_traces": {"single": cb_tr1, "sharded": cb_tr8},
         "gang_traces": {"single": traces1, "sharded": traces8},
         "single": {"tokens_per_s": tps1,
                    "resident_bytes_per_device": bytes1},
@@ -182,7 +208,9 @@ def main():
         "sharded_vs_single": round(tps8 / max(tps1, 1e-9), 3),
     }
     print(json.dumps(out))
-    if args.check and not (onboard_ok and entries_ok and tokens_ok):
+    cb_ok = cb_tokens_ok and cb_tr1 == 1 and cb_tr8 == 1
+    if args.check and not (onboard_ok and entries_ok and tokens_ok
+                           and cb_ok):
         print("sharded_smoke: PARITY FAILED", file=sys.stderr)
         return 1
     return 0

@@ -230,6 +230,21 @@ def cache_specs(abstract_cache, mesh: Mesh, cfg, batch: int):
     return map_with_path(one, abstract_cache)
 
 
+def paged_cache_specs(paged_cache, mesh: Mesh, cfg, n_slots: int):
+    """Sharding for the continuous engine's block-paged cache
+    (`serve/pages.py`): pool leaves are ``[lead, n_pages, page, ...]`` —
+    the PAGE axis sits where the dense cache's slot axis sat, so
+    `cache_specs` applies verbatim (pages over "data", kv heads dim 3 over
+    "model", recurrent resident leaves unchanged) and the PR-4 invariant
+    "pages sharded like the slot axis" holds by construction. The page
+    table shards its slot axis over "data" like every slot-packed array."""
+    dsize = dict(mesh.shape).get("data", 1)
+    data = cache_specs(paged_cache["data"], mesh, cfg, n_slots)
+    t = paged_cache["table"].shape
+    lead = "data" if t[0] % dsize == 0 and t[0] >= dsize else None
+    return {"data": data, "table": P(lead, None)}
+
+
 def to_shardings(specs, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -3,3 +3,7 @@ from repro.serve.scheduler import Request, Scheduler  # noqa: F401
 from repro.serve.slots import SlotState, SlotSync  # noqa: F401
 from repro.serve.profile_cache import ProfileCache  # noqa: F401
 from repro.serve.steps import make_prefill_step, make_decode_step  # noqa: F401
+from repro.serve.pages import (  # noqa: F401
+    PageAllocator, PageOOM, pages_needed, paged_seq_len,
+    make_paged_cache, dense_view,
+)

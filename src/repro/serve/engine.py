@@ -54,6 +54,7 @@ from repro.core.profiles import ProfileStore
 from repro.models import model as MDL
 from repro.resilience import (InjectedHydrationError, RecordIntegrityError,
                               RetryPolicy, retry_with_backoff)
+from repro.serve import pages as PG
 from repro.serve.profile_cache import ProfileCache
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.slots import SlotState
@@ -66,7 +67,11 @@ class ServeEngine:
                  max_seq: int = 256, precompute: bool = True,
                  sync_every: int = 8, cache_bytes: Optional[int] = 64 << 20,
                  mesh=None, fault_plan=None,
-                 retry_policy: Optional[RetryPolicy] = None):
+                 retry_policy: Optional[RetryPolicy] = None,
+                 continuous: bool = False, page_size: int = 16,
+                 max_pages: Optional[int] = None,
+                 mask_pages: Optional[int] = None,
+                 max_wait_waves: Optional[int] = None):
         self.cfg = cfg
         self.store = store
         self.S = max_seq
@@ -74,6 +79,13 @@ class ServeEngine:
         self.precompute = precompute and cfg.xpeft.enabled
         self.sync_every = sync_every
         self.mesh = mesh
+        # continuous batching (ISSUE 7): the KV/recurrent cache and the
+        # per-slot adapter records live in block-paged pools; slots retire,
+        # refill, preempt and resume at every host sync instead of decoding
+        # in lockstep waves. continuous=False keeps the PR-2 windowed
+        # engine bit-for-bit (the parity baseline cb_smoke gates against).
+        self.continuous = continuous
+        self.page_size = page_size
         # quantized bank (cfg.xpeft.bank_quant): the bf16/fp32 bank is
         # quantized ONCE here and DROPPED from the resident params — the
         # engine serves every admission from the int8/int4 rows (k-sparse
@@ -133,10 +145,52 @@ class ServeEngine:
                     self._specs["qbank"], mesh)
                 self.qbank = jax.device_put(self.qbank,
                                             self._shardings["qbank"])
-        self.cache = MDL.init_cache(cfg, max_slots, max_seq)
+        # cache: dense [lead, n_slots, S, ...] block (windowed), or paged
+        # pools + per-slot page table (continuous). Pure-recurrent archs
+        # have no sequence-axis leaves — the pool degenerates away and the
+        # continuous engine still gets mid-stream admission.
+        self._paged = False
+        self.page_alloc: Optional[PG.PageAllocator] = None
+        self.mask_alloc: Optional[PG.PageAllocator] = None
+        self.n_pages = 0
+        if continuous:
+            template = jax.eval_shape(
+                lambda: MDL.init_cache(cfg, max_slots, max_seq))
+            self._paged = PG.paged_seq_len(template) > 0
+            if self._paged:
+                if max_seq % page_size:
+                    raise ValueError(f"max_seq {max_seq} must be a "
+                                     f"multiple of page_size {page_size}")
+                per_req = PG.pages_needed(max_seq, page_size)
+                self.n_pages = (max_pages if max_pages is not None
+                                else max_slots * per_req)
+                if self.n_pages < per_req:
+                    raise ValueError(
+                        f"max_pages={self.n_pages} cannot hold one "
+                        f"max-length request ({per_req} pages) — the "
+                        "engine could deadlock instead of preempting")
+                ncolors = 1
+                if mesh is not None:
+                    d = dict(mesh.shape).get("data", 1)
+                    if self.n_pages % d == 0:
+                        ncolors = d
+                self.page_alloc = PG.PageAllocator(self.n_pages,
+                                                   n_colors=ncolors)
+            self.cache = PG.make_paged_cache(template, max(self.n_pages, 1),
+                                             page_size, max_slots)
+            self._mp = int(self.cache["table"].shape[1])
+            self._sentinel = max(self.n_pages, 1)
+            self._page_table_h = np.full((max_slots, self._mp),
+                                         self._sentinel, np.int32)
+        else:
+            self.cache = MDL.init_cache(cfg, max_slots, max_seq)
         if mesh is not None:
-            self._specs["cache"] = SH.cache_specs(self.cache, mesh, cfg,
-                                                  max_slots)
+            if continuous:
+                self._specs["cache"] = SH.paged_cache_specs(
+                    self.cache, mesh, cfg, max_slots)
+            else:
+                self._specs["cache"] = SH.cache_specs(self.cache, mesh, cfg,
+                                                      max_slots)
             self._shardings["cache"] = SH.to_shardings(
                 self._specs["cache"], mesh)
             self.cache = jax.device_put(self.cache, self._shardings["cache"])
@@ -149,7 +203,16 @@ class ServeEngine:
         self.degraded_requests = 0
         self.hydration_retries = 0
         self.slot_degraded: List[bool] = [False] * max_slots
-        self.scheduler = Scheduler(cfg.block_pattern)
+        # continuous mode admits in small increments (1-2 freed slots), so
+        # largest-bucket-first keeps prefill launches full; max_wait_waves
+        # (default 4 there) stops that from starving rare lengths. The
+        # windowed engine keeps strict head-first FIFO.
+        if max_wait_waves is None and continuous:
+            max_wait_waves = 4
+        self.scheduler = Scheduler(
+            cfg.block_pattern,
+            policy="efficiency" if continuous else "fifo",
+            max_wait_waves=max_wait_waves)
         self.profile_cache = ProfileCache(cache_bytes)
         # re-graduation hook: the store notifies every added/replaced pid,
         # so a re-trained profile can never serve a stale cached aggregate.
@@ -158,15 +221,26 @@ class ServeEngine:
         store.subscribe(self.invalidate_profile)
         xp = cfg.xpeft
         L, N, b, d = cfg.num_layers, xp.num_adapters, xp.bottleneck, cfg.d_model
+        # continuous mode: mask records live in an ENTRY POOL (one entry =
+        # one request's aggregated record, the adapter-state analogue of a
+        # KV page) addressed through a per-slot table, so record capacity
+        # decouples from slot count and preempted records free their entry
+        mask_lead = max_slots
+        if continuous:
+            self.n_mask_entries = (mask_pages if mask_pages is not None
+                                   else max_slots)
+            if self.n_mask_entries < 1:
+                raise ValueError("mask_pages must be >= 1")
+            mask_lead = self.n_mask_entries
         if self.precompute and self.quant != "none":
             # per-slot QUANTIZED Â/B̂ records + fp16 scales — the decode
             # step reads these and dequantizes in-register
             # (kernels/fused_adapter_quant.py via models._xpeft_apply)
             from repro.quant import schemes as QS
-            aq_s, aq_dt, as_s = QS.quant_spec((max_slots, L, d, b),
+            aq_s, aq_dt, as_s = QS.quant_spec((mask_lead, L, d, b),
                                               self.quant,
                                               group=xp.quant_group)
-            bq_s, bq_dt, bs_s = QS.quant_spec((max_slots, L, b, d),
+            bq_s, bq_dt, bs_s = QS.quant_spec((mask_lead, L, b, d),
                                               self.quant,
                                               group=xp.quant_group)
             self.masks = {
@@ -174,38 +248,83 @@ class ServeEngine:
                 "a_scale": jnp.zeros(as_s, jnp.float16),
                 "b_q": jnp.zeros(bq_s, bq_dt),
                 "b_scale": jnp.zeros(bs_s, jnp.float16),
-                "ln_scale": jnp.ones((max_slots, L, b), jnp.float32),
-                "ln_bias": jnp.zeros((max_slots, L, b), jnp.float32),
+                "ln_scale": jnp.ones((mask_lead, L, b), jnp.float32),
+                "ln_bias": jnp.zeros((mask_lead, L, b), jnp.float32),
             }
         elif self.precompute:
             dt = jnp.dtype(cfg.dtype)
             self.masks = {
-                "a_hat": jnp.zeros((max_slots, L, d, b), dt),
-                "b_hat": jnp.zeros((max_slots, L, b, d), dt),
-                "ln_scale": jnp.ones((max_slots, L, b), jnp.float32),
-                "ln_bias": jnp.zeros((max_slots, L, b), jnp.float32),
+                "a_hat": jnp.zeros((mask_lead, L, d, b), dt),
+                "b_hat": jnp.zeros((mask_lead, L, b, d), dt),
+                "ln_scale": jnp.ones((mask_lead, L, b), jnp.float32),
+                "ln_bias": jnp.zeros((mask_lead, L, b), jnp.float32),
             }
         elif cfg.xpeft.enabled:
             self.masks = {
-                "w_a": jnp.zeros((max_slots, L, N), jnp.float32),
-                "w_b": jnp.zeros((max_slots, L, N), jnp.float32),
-                "ln_scale": jnp.ones((max_slots, L, b), jnp.float32),
-                "ln_bias": jnp.zeros((max_slots, L, b), jnp.float32),
+                "w_a": jnp.zeros((mask_lead, L, N), jnp.float32),
+                "w_b": jnp.zeros((mask_lead, L, N), jnp.float32),
+                "ln_scale": jnp.ones((mask_lead, L, b), jnp.float32),
+                "ln_bias": jnp.zeros((mask_lead, L, b), jnp.float32),
             }
         else:
             self.masks = None
+        if continuous and self.masks is not None:
+            self.mask_alloc = PG.PageAllocator(self.n_mask_entries)
+            self._mask_table_h = np.full((max_slots,), self.n_mask_entries,
+                                         np.int32)
+            self.masks = {"pool": self.masks,
+                          "table": jnp.asarray(self._mask_table_h)}
         if mesh is not None and self.masks is not None:
             from repro.distributed import sharding as SH
             self._specs["masks"] = SH.leading_axis_specs(self.masks, mesh)
             self._shardings["masks"] = SH.to_shardings(
                 self._specs["masks"], mesh)
             self.masks = jax.device_put(self.masks, self._shardings["masks"])
+        # continuous mode decodes against a slot-indexed VIEW of the mask
+        # record pool, re-gathered only when an entry table moves (host
+        # syncs) — the pool is the record store that makes swap/refill a
+        # table edit; the view is what the per-token step actually reads,
+        # so record pooling costs the decode loop nothing
+        self._masks_view = None
+        if continuous and self.masks is not None:
+            view = jax.tree.map(
+                lambda m: jnp.zeros((max_slots,) + m.shape[1:], m.dtype),
+                self.masks["pool"])
+            if mesh is not None:
+                self._specs["masks_view"] = SH.leading_axis_specs(view, mesh)
+                self._shardings["masks_view"] = SH.to_shardings(
+                    self._specs["masks_view"], mesh)
+                view = jax.device_put(view, self._shardings["masks_view"])
+            self._masks_view = view
 
-        def decode_fn(params, cache, last_tok, lengths, masks):
-            hidden, cache, _ = MDL.forward(params, last_tok[:, None], cfg,
-                                           profile_masks=masks, cache=cache,
-                                           cache_pos=lengths)
-            return greedy_next(MDL.lm_logits(params, hidden, cfg)), cache
+        if continuous:
+            # paged decode: gather KV through the page table back to the
+            # dense layout forward() already takes (bitwise-identical
+            # values — junk pages only cover positions attention masks to
+            # NEG_INF), then scatter the one written position back to its
+            # page. All inside the ONE jitted slot step. Masks arrive as
+            # the slot-indexed VIEW materialized at table-change time
+            # (entry tables only move at host syncs, so gathering the
+            # record pool per step would be pure overhead).
+            def decode_fn(params, cache, last_tok, lengths, masks, active):
+                dense = PG.dense_view(cache["data"], cache["table"],
+                                      page_size)
+                hidden, dense, _ = MDL.forward(params, last_tok[:, None],
+                                               cfg, profile_masks=masks,
+                                               cache=dense,
+                                               cache_pos=lengths)
+                data = PG.writeback(cache["data"], dense, cache["table"],
+                                    lengths, active, page_size)
+                return greedy_next(MDL.lm_logits(params, hidden, cfg)), \
+                    {"data": data, "table": cache["table"]}
+        else:
+            def decode_fn(params, cache, last_tok, lengths, masks, active):
+                hidden, cache, _ = MDL.forward(params, last_tok[:, None],
+                                               cfg, profile_masks=masks,
+                                               cache=cache,
+                                               cache_pos=lengths)
+                return greedy_next(MDL.lm_logits(params, hidden, cfg)), \
+                    cache
 
         self.slots = SlotState(max_slots, max_seq, sync_every, decode_fn,
                                mesh=mesh,
@@ -221,6 +340,32 @@ class ServeEngine:
                 lambda b_, r_: b_.at[slots].set(r_.astype(b_.dtype)),
                 buf, rows),
             out_shardings=self._shardings.get("masks"))
+        if continuous:
+            csh = self._shardings.get("cache")
+            dsh = csh["data"] if csh is not None else None
+            self._insert_cb = jax.jit(
+                lambda data, mini, slots, table: PG.insert_group(
+                    data, mini, slots, table, page_size),
+                donate_argnums=(0,), out_shardings=dsh)
+            self._extract_cb = jax.jit(PG.extract_slot)
+            self._restore_cb = jax.jit(
+                PG.restore_slot, donate_argnums=(0,), out_shardings=dsh)
+            if self.masks is not None:
+                msh = self._shardings.get("masks")
+                psh = msh["pool"] if msh is not None else None
+                self._scatter_pool = jax.jit(
+                    lambda pool, idx, rows: jax.tree.map(
+                        lambda b_, r_: b_.at[idx].set(r_.astype(b_.dtype)),
+                        pool, rows),
+                    out_shardings=psh)
+                self._extract_mask = jax.jit(
+                    lambda pool, entry: jax.tree.map(
+                        lambda m: m[entry], pool))
+                self._gather_mask_view = jax.jit(
+                    lambda pool, table: jax.tree.map(
+                        lambda m: jnp.take(m, table, axis=0, mode="clip"),
+                        pool),
+                    out_shardings=self._shardings.get("masks_view"))
         # jitted admission aggregations (padded to pow2 profile counts); the
         # sparse path reads only k·L·d·b bank bytes per aggregated profile
         self._aggregate_sparse = jax.jit(
@@ -251,10 +396,27 @@ class ServeEngine:
         self.prefill_batches = 0
         self.prefill_rows = 0
         self.prefill_real = 0
-        # current sync window: sync_every capped by the host's upper bound
-        # on tokens any live request can still emit, so slots never
-        # dead-step a full window after every request in it finished
+        # current sync window. Windowed: sync_every capped by the UPPER
+        # bound on tokens any live request can still emit (slots never
+        # dead-step a full window after every request finished).
+        # Continuous: capped by the LOWER bound — the host predicts the
+        # first retirement exactly (greedy decode terminates on budget or
+        # capacity, both host-known), so the sync lands the moment a slot
+        # frees and its capacity is re-admitted immediately.
         self._window = sync_every
+        # continuous-batching state: admission-order stamps (preempt the
+        # youngest), the preempted-request resume queue (oldest first),
+        # and the capacity accounting serve_stats reports
+        self._slot_seq = [0] * max_slots
+        self._admit_seq = 0
+        self._resume_q: List[dict] = []
+        self._backlog = False
+        self._tables_dirty = True
+        self._view_dirty = True
+        self.preemptions = 0
+        self.resumes = 0
+        self.useful_slot_steps = 0
+        self.stranded_slot_steps = 0
 
     # ------------------------------------------------------------- jit impls
     def _prefill_impl(self, params, tokens, masks, lengths):
@@ -278,14 +440,205 @@ class ServeEngine:
             return big.at[:, slots].set(small[:, :B].astype(big.dtype))
         return jax.tree.map(ins, cache, mini)
 
+    # ------------------------------------------------------- paged memory
+    def _push_tables(self) -> None:
+        """Re-commit the host page/entry table mirrors to device with their
+        PINNED shardings — a plain asarray would land on the default device
+        and retrace the decode step on the next call. Mirrors are pushed
+        only when dirty (every mutator sets the flag): a sync that retired
+        nothing costs zero device traffic here."""
+        if not self._tables_dirty:
+            return
+        self._tables_dirty = False
+        t = jnp.asarray(self._page_table_h)
+        csh = self._shardings.get("cache")
+        if csh is not None:
+            t = jax.device_put(t, csh["table"])
+        self.cache["table"] = t
+        if self.mask_alloc is not None:
+            mt = jnp.asarray(self._mask_table_h)
+            msh = self._shardings.get("masks")
+            if msh is not None:
+                mt = jax.device_put(mt, msh["table"])
+            self.masks["table"] = mt
+
+    def _slot_color(self, slot: int) -> int:
+        """Data-shard index of a slot — the allocator color that keeps its
+        pages on the shard that owns the slot."""
+        if self.page_alloc is None or self.page_alloc.n_colors == 1:
+            return 0
+        return slot * self.page_alloc.n_colors // self.n_slots
+
+    def _pages_for(self, length: int) -> int:
+        return PG.pages_needed(length, self.page_size) if self._paged else 0
+
+    def _reserve_resources(self, reqs: List[Request],
+                           slots: List[int]) -> List[Request]:
+        """Claim a mask entry + prompt-covering pages for each admission
+        candidate; requests the pool can't hold yet go back to the FRONT of
+        the scheduler queue (admission never preempts running requests —
+        only page growth for already-running slots does)."""
+        kept: List[Request] = []
+        for k, r in enumerate(reqs):
+            try:
+                if self.mask_alloc is not None:
+                    self.mask_alloc.alloc(1, r.uid)
+                need = self._pages_for(len(r.prompt))
+                if need:
+                    try:
+                        self.page_alloc.alloc(need, r.uid,
+                                              color=self._slot_color(
+                                                  slots[k]))
+                    except PG.PageOOM:
+                        if self.mask_alloc is not None:
+                            self.mask_alloc.free_owner(r.uid)
+                        raise
+            except PG.PageOOM:
+                self.scheduler.requeue_front(reqs[k:])
+                break
+            kept.append(r)
+        return kept
+
+    def _release_request(self, slot: int, req: Request) -> None:
+        """Free a retired request's pages + mask entry and sentinel its
+        table rows (pushed to device at the next table commit; the slot is
+        already inactive on device, so its writes drop either way)."""
+        if self._paged:
+            self.page_alloc.free_owner(req.uid)
+            self._page_table_h[slot] = self._sentinel
+            self._tables_dirty = True
+        if self.mask_alloc is not None:
+            self.mask_alloc.free_owner(req.uid)
+            self._mask_table_h[slot] = self.n_mask_entries
+            self._tables_dirty = True
+        # the freed slot is inactive on device, so its (stale) mask-view
+        # row is never read — no view refresh on the retirement path
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Swap a running request out to host (pages + mask record +
+        host-reconstructible slot scalars), free its device resources, and
+        queue it for resume. Swap, not recompute: the saved pages come back
+        bit-identical, so a preempted request's tokens cannot drift."""
+        r = self.slot_req[slot]
+        rows = jax.device_get(self._extract_cb(
+            self.cache["data"], jnp.asarray(self._page_table_h[slot]), slot))
+        mask_row = None
+        if self.mask_alloc is not None:
+            entry = self.mask_alloc.pages_of(r.uid)[0]
+            mask_row = jax.device_get(
+                self._extract_mask(self.masks["pool"], entry))
+        self._resume_q.append({
+            "req": r, "rows": rows, "mask": mask_row,
+            "len": len(r.prompt) + len(r.generated) - 1,
+            "seq": self._slot_seq[slot],
+            "degraded": self.slot_degraded[slot]})
+        self._release_request(slot, r)
+        hot = np.zeros((self.n_slots,), bool)
+        hot[slot] = True
+        self.slots.deactivate(hot)
+        self.slot_req[slot] = None
+        self.slot_degraded[slot] = False
+        r.preemptions += 1
+        self.preemptions += 1
+
+    def _youngest_live(self, but: int) -> Optional[int]:
+        """Preemption victim: the most recently admitted live slot other
+        than `but` (LIFO preemption keeps the oldest work finishing)."""
+        live = [(self._slot_seq[i], i)
+                for i, r in enumerate(self.slot_req)
+                if r is not None and i != but]
+        return max(live)[1] if live else None
+
+    def _try_resume(self) -> int:
+        """Restore preempted requests (oldest first) into free slots while
+        pages + entries allow. A blocked head blocks the queue — resumes
+        never leapfrog, so preemption stays starvation-free."""
+        n = 0
+        while self._resume_q and self.free_slots():
+            snap = self._resume_q[0]
+            r = snap["req"]
+            slot = self.free_slots()[0]
+            try:
+                if self.mask_alloc is not None:
+                    self.mask_alloc.alloc(1, r.uid)
+                need = self._pages_for(snap["len"])
+                if need:
+                    try:
+                        self.page_alloc.alloc(
+                            need, r.uid, color=self._slot_color(slot))
+                    except PG.PageOOM:
+                        if self.mask_alloc is not None:
+                            self.mask_alloc.free_owner(r.uid)
+                        raise
+            except PG.PageOOM:
+                break
+            self._resume_q.pop(0)
+            if self._paged:
+                pages = self.page_alloc.pages_of(r.uid)
+                self._page_table_h[slot] = self._sentinel
+                self._page_table_h[slot, :len(pages)] = pages
+            if self.mask_alloc is not None:
+                entry = self.mask_alloc.pages_of(r.uid)[0]
+                self._mask_table_h[slot] = entry
+                self._view_dirty = True
+            self._tables_dirty = True
+            self._push_tables()
+            self.cache["data"] = self._restore_cb(
+                self.cache["data"],
+                jax.tree.map(jnp.asarray, snap["rows"]),
+                jnp.asarray(self._page_table_h[slot]), slot)
+            if snap["mask"] is not None:
+                row = jax.tree.map(lambda x: jnp.asarray(x)[None],
+                                   snap["mask"])
+                self.masks["pool"] = self._scatter_pool(
+                    self.masks["pool"], jnp.asarray([entry]), row)
+            self.slots.restore([slot], [r.generated[-1]], [snap["len"]],
+                               [len(r.generated)], [r.max_new_tokens])
+            self.slot_req[slot] = r
+            self.slot_degraded[slot] = snap["degraded"]
+            self._slot_seq[slot] = snap["seq"]
+            self.resumes += 1
+            n += 1
+        return n
+
+    def _ensure_window_pages(self, window: int) -> None:
+        """Grow every live slot's allocation to cover the next `window`
+        decode writes, oldest slot first; on pool exhaustion the YOUNGEST
+        live slot is preempted-to-pending and its pages reused. Init
+        guarantees the pool holds one max-length request, so the oldest
+        slot always makes progress — no deadlock, no starvation."""
+        if not self._paged:
+            return
+        for _, i in sorted((self._slot_seq[i], i)
+                           for i, r in enumerate(self.slot_req)
+                           if r is not None):
+            r = self.slot_req[i]
+            if r is None:
+                continue  # preempted by an earlier iteration
+            cur = len(r.prompt) + len(r.generated) - 1
+            need = PG.pages_needed(min(cur + window, self.S - 1),
+                                   self.page_size)
+            while need > len(self.page_alloc.pages_of(r.uid)):
+                have = len(self.page_alloc.pages_of(r.uid))
+                try:
+                    new = self.page_alloc.alloc(need - have, r.uid,
+                                                color=self._slot_color(i))
+                    self._page_table_h[i, have:need] = new
+                    self._tables_dirty = True
+                except PG.PageOOM:
+                    victim = self._youngest_live(but=i)
+                    if victim is None:
+                        raise  # can't happen: pool >= one full request
+                    self._preempt_slot(victim)
+
     # ------------------------------------------------------------ resilience
     def _zero_entry(self):
         """One request's bare-PLM hydration entry: the free-slot buffer
         template (all-zero masks, identity LN). A zero adapter is the
         EXACT bare PLM — LN(0)·0 @ B̂ contributes 0 to the residual —
         so a degraded request decodes as if X-PEFT were disabled."""
-        zero = {k: jnp.zeros(v.shape[1:], v.dtype)
-                for k, v in self.masks.items()}
+        pool = self.masks["pool"] if self.continuous else self.masks
+        zero = {k: jnp.zeros(v.shape[1:], v.dtype) for k, v in pool.items()}
         zero["ln_scale"] = jnp.ones_like(zero["ln_scale"])
         return zero
 
@@ -543,22 +896,56 @@ class ServeEngine:
         slot-state scatter. Returns #admitted."""
         if self.slots.buf_fill:
             self.sync()  # flush the window before touching slot state
+        resumed = 0
+        if self.continuous and self._resume_q:
+            resumed = self._try_resume()  # preempted work outranks fresh
         free = self.free_slots()
-        reqs = reqs[:len(free)]
+        if len(reqs) > len(free):
+            # the caller sized the wave to the PRE-sync free count; the
+            # sync/resume above may have shrunk it (resumed work outranks
+            # fresh) — overflow goes back to the head, never dropped
+            self.scheduler.requeue_front(reqs[len(free):])
+            reqs = reqs[:len(free)]
+        if self.continuous and reqs:
+            reqs = self._reserve_resources(reqs, free)
         if not reqs:
+            if resumed:
+                self._refresh_window()  # resumed slots need window + view
             return 0
+        assigned = free[:len(reqs)]
+        if self.continuous:
+            # commit page/entry tables BEFORE the prefill insert and mask
+            # scatter — both address device memory through them
+            for r, s in zip(reqs, assigned):
+                if self._paged:
+                    pages = self.page_alloc.pages_of(r.uid)
+                    self._page_table_h[s] = self._sentinel
+                    self._page_table_h[s, :len(pages)] = pages
+                if self.mask_alloc is not None:
+                    self._mask_table_h[s] = \
+                        self.mask_alloc.pages_of(r.uid)[0]
+                    self._view_dirty = True
+                self._slot_seq[s] = self._admit_seq
+                self._admit_seq += 1
+            self._tables_dirty = True
+            self._push_tables()
         if self.masks is not None:
             # health-probe every profile first (with retry): requests whose
             # profile can't be hydrated degrade to the bare PLM below,
             # never failing the wave for their healthy peers
             self._probe_wave(reqs)
         stacked = self._hydrate_stacked(reqs)
-        assigned = free[:len(reqs)]
         slot_of = {id(r): s for r, s in zip(reqs, assigned)}
         if stacked is not None:
             # ONE scatter into the per-slot buffers for the whole wave
-            self.masks = self._scatter_masks(
-                self.masks, jnp.asarray(assigned), stacked)
+            if self.continuous:
+                entries = jnp.asarray(
+                    [self.mask_alloc.pages_of(r.uid)[0] for r in reqs])
+                self.masks["pool"] = self._scatter_pool(
+                    self.masks["pool"], entries, stacked)
+            else:
+                self.masks = self._scatter_masks(
+                    self.masks, jnp.asarray(assigned), stacked)
 
         idx_of = {id(r): i for i, r in enumerate(reqs)}
         groups = self.scheduler.group_by_bucket(reqs)
@@ -579,7 +966,11 @@ class ServeEngine:
             nxt, mini = self._prefill(self.params, jnp.asarray(toks), rows,
                                       jnp.asarray(lens))
             gslots = jnp.asarray([slot_of[id(r)] for r in group])
-            self.cache = self._insert(self.cache, mini, gslots)
+            if self.continuous:
+                self.cache["data"] = self._insert_cb(
+                    self.cache["data"], mini, gslots, self.cache["table"])
+            else:
+                self.cache = self._insert(self.cache, mini, gslots)
             nxt_h = np.asarray(nxt[:B])
             for j, r in enumerate(group):
                 next_toks[id(r)] = int(nxt_h[j])
@@ -600,6 +991,8 @@ class ServeEngine:
             r.generated.append(next_toks[id(r)])
             if r.max_new_tokens <= 1 or len(r.prompt) >= self.S - 1:
                 r.done = True  # budget spent by the prefill token
+                if self.continuous:
+                    self._release_request(slot, r)
             else:
                 self.slot_req[slot] = r
                 self.slot_degraded[slot] = r.degraded
@@ -616,16 +1009,31 @@ class ServeEngine:
         active = self.active_count()
         if not active:
             return 0
-        self.cache = self.slots.step(self.params, self.cache, self.masks)
+        masks = self._masks_view if self.continuous else self.masks
+        self.cache = self.slots.step(self.params, self.cache, masks)
         if self.slots.buf_fill >= self._window:
             self.sync()
         return active
 
     def sync(self) -> int:
         """Force a device→host sync: distribute the window's tokens to
-        their requests, mark finished requests done, free their slots.
-        Returns the number of still-active slots."""
+        their requests, mark finished requests done, free their slots (and,
+        continuous mode, their pages/entries — then resume preempted work
+        into the freed capacity). Returns the number of still-active
+        slots."""
         s = self.slots.sync()
+        if s.fill:
+            # capacity accounting: an occupied slot that emitted fewer
+            # tokens than the window stepped idled the difference
+            # (stranded between finish and refill); an EMPTY slot strands
+            # the whole window whenever work was waiting for it
+            for i, req in enumerate(self.slot_req):
+                c = int(s.counts[i])
+                self.useful_slot_steps += c
+                if req is not None:
+                    self.stranded_slot_steps += s.fill - c
+                elif self._backlog:
+                    self.stranded_slot_steps += s.fill
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -639,18 +1047,37 @@ class ServeEngine:
                 req.done = True
                 self.slot_req[i] = None
                 self.slot_degraded[i] = False
+                if self.continuous:
+                    self._release_request(i, req)
+        if self.continuous and self._resume_q:
+            self._try_resume()
         self._refresh_window()
         return self.active_count()
 
     def _refresh_window(self) -> None:
         # device capacity stop is lengths >= S-1 post-increment with
         # lengths = prompt + generated - 1, so a slot can still emit
-        # S - prompt - generated tokens (not S-1 - ...)
+        # S - prompt - generated tokens (not S-1 - ...). Windowed mode
+        # bounds the window by the MAX remaining (don't dead-step after
+        # everyone finished); continuous mode by the MIN remaining — greedy
+        # decode retires deterministically, so the sync lands exactly when
+        # the first slot frees and its capacity turns over immediately.
         remaining = [min(r.max_new_tokens - len(r.generated),
                          self.S - len(r.prompt) - len(r.generated))
                      for r in self.slot_req if r is not None]
-        bound = max(remaining) if remaining else self.sync_every
+        if self.continuous:
+            bound = min(remaining) if remaining else self.sync_every
+        else:
+            bound = max(remaining) if remaining else self.sync_every
         self._window = max(1, min(self.sync_every, bound))
+        if self.continuous:
+            self._ensure_window_pages(self._window)
+            self._push_tables()
+            if self.masks is not None and self._view_dirty:
+                self._view_dirty = False
+                self._masks_view = self._gather_mask_view(
+                    self.masks["pool"], self.masks["table"])
+        self._backlog = bool(self.scheduler.pending() or self._resume_q)
 
     def submit(self, reqs) -> None:
         """Queue requests with the scheduler (admitted as slots free up)."""
@@ -677,7 +1104,12 @@ class ServeEngine:
             if req is not None:
                 req.done = True
                 self.slot_req[i] = None
+                if self.continuous:
+                    self._release_request(i, req)
             self.slot_degraded[i] = False
+        for snap in self._resume_q:
+            snap["req"].done = True  # preempted work aborts too
+        self._resume_q.clear()
         self._refresh_window()
 
     def run_until_drained(self, queue: Optional[List[Request]] = None,
@@ -688,11 +1120,17 @@ class ServeEngine:
             self.scheduler.submit(list(queue))
         steps = 0
         while steps < max_steps:
+            if self._resume_q and self.free_slots() \
+                    and self.slots.buf_fill == 0:
+                # window boundary only: slot restore requires a synced
+                # window (slots/pages can only have freed at a sync anyway)
+                if self._try_resume():
+                    self._refresh_window()
             free = self.free_slots()
             if free and self.scheduler.pending():
                 self.admit_many(self.scheduler.next_batch(len(free)))
             if not self.active_count():
-                if not self.scheduler.pending():
+                if not self.scheduler.pending() and not self._resume_q:
                     break
                 continue  # admission freed nothing; next wave will
             self.step()
@@ -726,9 +1164,20 @@ class ServeEngine:
     def serve_stats(self) -> dict:
         """Counters the bench reports (and operators can scrape)."""
         toks = max(self.decode_tokens, 1)
-        return {
+        out = {
+            "mode": "continuous" if self.continuous else "windowed",
             "devices": 1 if self.mesh is None else self.mesh.size,
             "bank_quant": self.quant,
+            # capacity accounting: slot_occupancy = share of slot-steps
+            # that emitted a token; stranded_slot_steps = active-capable
+            # slot-steps idled between a finish and the refill (the number
+            # continuous batching exists to drive to ~0)
+            "useful_slot_steps": self.useful_slot_steps,
+            "stranded_slot_steps": self.stranded_slot_steps,
+            "slot_occupancy": round(
+                self.useful_slot_steps
+                / max(self.n_slots * self.slots.device_steps, 1), 4),
+            "step_traces": self.slots.step_traces,
             "resident_bytes_per_device": self.resident_bytes_per_device(),
             "host_syncs": self.slots.host_syncs,
             "device_steps": self.slots.device_steps,
@@ -749,3 +1198,13 @@ class ServeEngine:
             "quarantined_profiles": len(self.store.quarantined_ids()),
             "store_integrity": self.store.integrity_stats(),
         }
+        if self.continuous:
+            out["preemptions"] = self.preemptions
+            out["resumes"] = self.resumes
+            out["resume_pending"] = len(self._resume_q)
+            out["page_size"] = self.page_size
+            if self.page_alloc is not None:
+                out["pages"] = self.page_alloc.stats()
+            if self.mask_alloc is not None:
+                out["mask_entries"] = self.mask_alloc.stats()
+        return out

@@ -12,8 +12,12 @@ Invariants the engine relies on:
   position 0 emits tokens at buffer positions 0..c-1 and then goes (and
   stays) inactive, so the sync can hand exactly ``n_gen`` deltas of tokens
   to the request without per-step bookkeeping;
-- admission must be preceded by a sync (the engine flushes the window
-  before touching slot state), so buffers always start a window clean.
+- admission/restore must be preceded by a sync (the engine flushes the
+  window before touching slot state), so buffers always start a window
+  clean;
+- the step traces exactly ONCE (``step_traces``): every mutator pins its
+  out-shardings, so no admit/retire/preempt cycle can drift a placement
+  and recompile the decode program mid-serve.
 """
 from __future__ import annotations
 
@@ -24,14 +28,24 @@ import jax
 import jax.numpy as jnp
 
 
-def _admit_scatter(arrays, slots, last_toks, lengths, max_news, actives):
-    """One batched scatter of the admission wave into the slot arrays."""
+def _admit_scatter(arrays, slots, last_toks, lengths, n_gens, max_news,
+                   actives):
+    """One batched scatter of an admission (or resume) wave into the slot
+    arrays. n_gens is 1 for fresh admissions (the prefill token) and the
+    already-generated count when restoring a preempted request."""
     return {"last_tok": arrays["last_tok"].at[slots].set(last_toks),
             "lengths": arrays["lengths"].at[slots].set(lengths),
             "active": arrays["active"].at[slots].set(actives),
-            "n_gen": arrays["n_gen"].at[slots].set(jnp.ones_like(slots)),
+            "n_gen": arrays["n_gen"].at[slots].set(n_gens),
             "max_new": arrays["max_new"].at[slots].set(max_news),
             "tok_buf": arrays["tok_buf"]}
+
+
+def _deactivate_scatter(arrays, mask):
+    """Clear `active` for the masked slots (preemption; fixed [S] shape)."""
+    out = dict(arrays)
+    out["active"] = arrays["active"] & ~mask
+    return out
 
 
 class SlotSync(NamedTuple):
@@ -40,13 +54,16 @@ class SlotSync(NamedTuple):
     counts: np.ndarray       # [n_slots] tokens emitted since last sync
     lengths: np.ndarray      # [n_slots] int32
     active: np.ndarray       # [n_slots] bool
+    fill: int                # device steps this window took (stranding calc)
 
 
 class SlotState:
     """Slot decode state + the single jitted step advancing it.
 
-    decode_fn(params, cache, last_tok [S], lengths [S], masks) ->
-    (next_tok [S], cache) is the model-side half the engine provides.
+    decode_fn(params, cache, last_tok [S], lengths [S], masks, active [S])
+    -> (next_tok [S], cache) is the model-side half the engine provides
+    (`active` lets a paged cache drop writes from slots whose pages were
+    re-owned; the dense engine ignores it).
 
     With a `mesh`, the slot axis shards over the "data" mesh axis
     (`distributed.sharding.leading_axis_specs`) and the jitted step pins
@@ -74,6 +91,7 @@ class SlotState:
         self._prev_n_gen = np.zeros((n_slots,), np.int32)  # host mirror
         self.host_syncs = 0
         self.device_steps = 0
+        self.step_traces = 0         # times the decode step (re)compiled
         # multi-device: slot axis over "data" (per-slot decode stays
         # device-local), arrays committed once and every jitted update
         # pinned to the same shardings so the step never retraces on a
@@ -92,8 +110,10 @@ class SlotState:
         self._all_inactive = self.active
 
         def step_impl(params, cache, masks, arrays, step_idx):
+            self.step_traces += 1    # python side effect: runs per TRACE
             nxt, cache = decode_fn(params, cache, arrays["last_tok"],
-                                   arrays["lengths"], masks)
+                                   arrays["lengths"], masks,
+                                   arrays["active"])
             was_active = arrays["active"]
             lengths = arrays["lengths"] + was_active.astype(jnp.int32)
             n_gen = arrays["n_gen"] + was_active.astype(jnp.int32)
@@ -112,9 +132,12 @@ class SlotState:
                                           self.arr_shardings))
             self._admit_scatter = jax.jit(
                 _admit_scatter, out_shardings=self.arr_shardings)
+            self._deactivate = jax.jit(
+                _deactivate_scatter, out_shardings=self.arr_shardings)
         else:
             self._step = jax.jit(step_impl)
             self._admit_scatter = jax.jit(_admit_scatter)
+            self._deactivate = jax.jit(_deactivate_scatter)
 
     # ----------------------------------------------------------------- device
     def _arrays(self) -> dict:
@@ -141,24 +164,41 @@ class SlotState:
         self.device_steps += 1
         return cache
 
+    def restore(self, slots, last_toks, lengths, n_gens, max_news) -> None:
+        """Scatter requests into the slot arrays with explicit generation
+        counters — fresh admissions (n_gen=1, the prefill token) and
+        preempt-resumes (n_gen = tokens already emitted) share this one
+        jitted update. A request whose budget or sequence capacity is
+        already spent never becomes active."""
+        assert self.buf_fill == 0, "engine must sync() before admission"
+        slots_h = np.asarray(slots, np.int32)
+        lengths_h = np.asarray(lengths, np.int32)
+        n_gens_h = np.asarray(n_gens, np.int32)
+        max_news_h = np.asarray(max_news, np.int32)
+        actives_h = (n_gens_h < max_news_h) & (lengths_h < self.S - 1)
+        arrays = self._admit_scatter(
+            self._arrays(), jnp.asarray(slots_h),
+            jnp.asarray(np.asarray(last_toks, np.int32)),
+            jnp.asarray(lengths_h), jnp.asarray(n_gens_h),
+            jnp.asarray(max_news_h), jnp.asarray(actives_h))
+        self._set_arrays(arrays)
+        self._prev_n_gen[slots_h] = n_gens_h
+
     def admit(self, slots, last_toks, lengths, max_news) -> None:
         """Scatter freshly prefilled requests into the slot arrays (one
         jitted update for the whole admission batch). The prefill's first
         generated token counts toward ``max_new`` (n_gen starts at 1); a
         request whose budget is exhausted by that token (or whose prompt
         already fills the sequence) never becomes active."""
-        assert self.buf_fill == 0, "engine must sync() before admission"
-        slots_h = np.asarray(slots, np.int32)
-        lengths_h = np.asarray(lengths, np.int32)
-        max_news_h = np.asarray(max_news, np.int32)
-        actives_h = (max_news_h > 1) & (lengths_h < self.S - 1)
-        arrays = self._admit_scatter(
-            self._arrays(), jnp.asarray(slots_h),
-            jnp.asarray(np.asarray(last_toks, np.int32)),
-            jnp.asarray(lengths_h), jnp.asarray(max_news_h),
-            jnp.asarray(actives_h))
-        self._set_arrays(arrays)
-        self._prev_n_gen[slots_h] = 1
+        self.restore(slots, last_toks, lengths,
+                     np.ones((len(np.asarray(slots)),), np.int32), max_news)
+
+    def deactivate(self, mask) -> None:
+        """Mark the masked slots inactive on device (preemption; the engine
+        syncs first so no window tokens are in flight)."""
+        assert self.buf_fill == 0, "sync() before deactivating"
+        self._set_arrays(self._deactivate(self._arrays(),
+                                          jnp.asarray(mask, bool)))
 
     def deactivate_all(self) -> None:
         """Mark every slot inactive on device (abort; engine syncs first)."""
@@ -180,4 +220,4 @@ class SlotState:
         self.buf_fill = 0
         self.host_syncs += 1
         return SlotSync(np.asarray(tok_buf), counts, np.asarray(lengths),
-                        np.asarray(active))
+                        np.asarray(active), fill)

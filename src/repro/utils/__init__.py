@@ -8,4 +8,5 @@ from repro.utils.tree import (  # noqa: F401
     merge_trees,
     tree_zeros_like,
     map_with_path,
+    map_with_paths,
 )

@@ -38,6 +38,16 @@ def map_with_path(fn, tree):
     )
 
 
+def map_with_paths(fn, tree, *rest):
+    """Multi-tree tree_map where fn receives (path_str, leaf, *other_leaves).
+    The extra trees must share `tree`'s structure (serve/pages.py maps the
+    paged cache pool against the model's freshly-written dense view)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x, *r: fn("/".join(_key_str(k) for k in p), x, *r),
+        tree, *rest
+    )
+
+
 def _leaf_size(x) -> int:
     return int(np.prod(x.shape)) if hasattr(x, "shape") else 1
 
