@@ -9,7 +9,7 @@ PY      := python
 PP      := PYTHONPATH=src:.
 
 .PHONY: verify test bench-smoke onboard-smoke multidev-smoke quant-smoke \
-	chaos-smoke cb-smoke bench
+	chaos-smoke cb-smoke spec-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -64,8 +64,22 @@ chaos-smoke:
 cb-smoke:
 	$(PP) $(PY) benchmarks/cb_smoke.py --check
 
+# self-speculative decoding smoke (ISSUE 8): the bare PLM (zero-adapter
+# view, zero extra weight memory) drafts gamma tokens per slot, the
+# adapted model verifies them in ONE batched step. Gates: greedy spec
+# output BITWISE equal plain greedy per request — on the normal workload
+# AND with an adversarial profile that forces rejections — one compiled
+# decode step, committed tokens per device step > 1, strictly fewer
+# device steps than plain. The spec-vs-plain tok/s floor applies under
+# BENCH_STRICT=1 only (CPU toy shapes are compute-bound; verify costs
+# gamma+1 tokens of FLOPs). The same numbers land in BENCH_serve.json
+# (spec.* records, gated by check_bench inside bench-smoke).
+spec-smoke:
+	$(PP) $(PY) benchmarks/spec_smoke.py --check
+
 bench:
 	$(PP) $(PY) benchmarks/run.py
 
-verify: test bench-smoke onboard-smoke quant-smoke chaos-smoke cb-smoke
+verify: test bench-smoke onboard-smoke quant-smoke chaos-smoke cb-smoke \
+	spec-smoke
 	@echo "verify: OK"

@@ -151,11 +151,81 @@ def _bench_quant_kernels(w: BenchWriter, smoke: bool):
                tpu_win=round(bf16_rec / rec_bytes, 2))
 
 
+def _bench_decode_fused(w: BenchWriter, smoke: bool):
+    """Decode megakernel (ISSUE 8): one program per layer at T=1 applying
+    norm/attention/MLP AND the adapter. Weight and KV-row reads are
+    identical either way, so the analytic columns count only ACTIVATION
+    HBM round-trips: the composed path materializes ~12 intermediates per
+    layer (ln1, qkv, rope'd q/k, probs, ctx, proj, residual, ln2, mlp
+    up/act/down, adapter h/out), the megakernel reads x once and writes y
+    once. Parity here is bitwise vs the jitted jnp oracle — both routes
+    jitted, since eager dispatch fuses (FMA) differently."""
+    print("# decode_fused: per-layer decode megakernel + adapter routes")
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core import xpeft as XP
+    from repro.models import init_lm
+
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    B, S = (4, 32) if smoke else (8, 128)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    block = jax.tree.map(lambda t: t[0], params["blocks"])
+    ks = jax.random.split(jax.random.key(11), 4)
+    dt = jnp.dtype(cfg.dtype)
+    x = jax.random.normal(ks[0], (B, 1, cfg.d_model), dt)
+    kc = jax.random.normal(ks[1], (B, S, KV, hd), dt)
+    vc = jax.random.normal(ks[2], (B, S, KV, hd), dt)
+    pos = (jnp.arange(B, dtype=jnp.int32) * 7) % S
+
+    table = XP.init_profile_table(ks[3], cfg)
+    prof = XP.gather_profiles(table, jnp.arange(B) % cfg.xpeft.max_profiles)
+    agg = jax.vmap(lambda p: XP.precompute_effective_adapters(
+        params["xpeft_bank"], p, cfg.xpeft))(prof)
+    lay = {k: v[:, 0] for k, v in agg.items()}
+
+    act = B * 1 * cfg.d_model * dt.itemsize
+    unfused_act = 2 * 12 * act   # ~12 per-layer intermediate round-trips
+    fused_act = 2 * act          # read x once, write y once
+    for route in ("none", "bf16", "int8", "int4"):
+        if route in ("none", "bf16"):
+            masks_l = {} if route == "none" else lay
+        else:
+            qa = QS.quantize(lay["a_hat"], route,
+                             group=cfg.xpeft.quant_group)
+            qb = QS.quantize(lay["b_hat"], route,
+                             group=cfg.xpeft.quant_group)
+            masks_l = {"a_q": qa["q"], "a_scale": qa["scale"],
+                       "b_q": qb["q"], "b_scale": qb["scale"],
+                       "ln_scale": lay["ln_scale"],
+                       "ln_bias": lay["ln_bias"]}
+        kw = dict(norm=cfg.norm, qkv_bias=cfg.qkv_bias,
+                  use_rope=cfg.pos == "rope", theta=cfg.rope_theta,
+                  cap=cfg.logit_softcap, mlp_type=cfg.mlp_type,
+                  act_name=cfg.act, adapter=route,
+                  adapter_act=cfg.xpeft.adapter_activation)
+        args = (x, pos, block, kc, vc, masks_l)
+        ref_out = jax.jit(lambda *a: ops.decode_block_fused(
+            *a, impl="ref", **kw))(*args)
+        itp_out = jax.jit(lambda *a: ops.decode_block_fused(
+            *a, impl="interpret", **kw))(*args)
+        parity = all(
+            bool(jnp.array_equal(r, i).item())
+            for r, i in zip(ref_out, itp_out))
+        us = timeit(lambda: ops.decode_block_fused(*args, impl="interpret",
+                                                   **kw),
+                    iters=2, warmup=1)
+        w.emit(f"decode_fused.{route}.pallas_interpret", us, B=B, S=S,
+               parity=int(parity), hbm_act_bytes=fused_act,
+               tpu_win=round(unfused_act / fused_act, 2))
+
+
 def main(smoke: bool = False):
     w = BenchWriter("kernels")
     _bench_mask_aggregate(w, smoke)
     _bench_fused_adapter(w, smoke)
     _bench_quant_kernels(w, smoke)
+    _bench_decode_fused(w, smoke)
     w.write()
     return w.records
 

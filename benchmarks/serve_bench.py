@@ -29,6 +29,17 @@ BENCH_serve.json (gated by benchmarks/check_bench.py):
 - cb.tok_s_vs_windowed        decode tok/s ratio (>= 1.3x floor under
                               BENCH_STRICT only; structural gates above are
                               unconditional) — see benchmarks/cb_smoke.py
+- spec.parity                 self-speculative greedy (bare-PLM draft,
+                              adapted verify) BITWISE equal plain greedy per
+                              request — normal AND adversarial-profile
+                              workloads — in one compiled step
+- spec.acceptance             drafted/accepted counters, acceptance rate
+                              (adversarial profile must force rejections),
+                              committed tokens per device step (> 1)
+- spec.tok_s_vs_plain         spec-vs-plain decode tok/s + device-step
+                              ratio (tok/s floor under BENCH_STRICT only:
+                              CPU toy shapes are compute-bound, see
+                              benchmarks/spec_smoke.py)
 """
 from __future__ import annotations
 
@@ -287,6 +298,32 @@ def main(smoke: bool = False):
            continuous_tokens_per_s=cont["tokens_per_s"],
            ratio=cb["tok_s_ratio"], page_size=cb["page_size"],
            pages=cont["pages"])
+
+    # ---- self-speculative decoding (bare-PLM draft, adapted verify) -----
+    # spec_smoke owns the workloads + comparison so `make spec-smoke` and
+    # these records agree; the adversarial profile forces rejections so
+    # the fallback path is measured, not just the accept-everything case
+    from benchmarks.spec_smoke import run_spec_workload
+    sp = run_spec_workload(n_reqs=6)
+    w.emit("spec.parity", None, tokens_equal=sp["tokens_equal"],
+           adversarial_tokens_equal=sp["adversarial_tokens_equal"],
+           requests=sp["requests"], gamma=sp["gamma"],
+           step_traces=sp["spec"]["step_traces"])
+    w.emit("spec.acceptance", None, gamma=sp["gamma"],
+           drafted=sp["spec"]["drafted"], accepted=sp["spec"]["accepted"],
+           acceptance_rate=sp["spec"]["acceptance_rate"],
+           adversarial_acceptance_rate=sp["spec"]
+           ["adversarial_acceptance_rate"],
+           committed_per_device_step=sp["spec"]
+           ["committed_per_device_step"],
+           plain_committed_per_device_step=sp["plain"]
+           ["committed_per_device_step"])
+    w.emit("spec.tok_s_vs_plain", None,
+           plain_tokens_per_s=sp["plain"]["tokens_per_s"],
+           spec_tokens_per_s=sp["spec"]["tokens_per_s"],
+           ratio=sp["tok_s_ratio"],
+           plain_device_steps=sp["plain"]["device_steps"],
+           spec_device_steps=sp["spec"]["device_steps"])
 
     # multi-device parity + throughput: subprocess (this process pinned
     # itself to 1 CPU device at first jax use; the smoke forces 8 fake

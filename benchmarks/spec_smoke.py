@@ -1,0 +1,223 @@
+"""Self-speculative decoding smoke: plain greedy vs draft/verify/commit on
+the paged continuous engine.
+
+The draft model is the SAME frozen PLM serving every profile — the engine
+swaps in the zero-adapter view (bitwise the bare PLM), so speculation costs
+zero extra weight memory. The contract is exact: greedy speculative output
+is BITWISE the non-speculative greedy output per request, while the decode
+step still compiles exactly once and commits > 1 token per device step.
+
+Two workloads run through both engines:
+
+- normal     the skewed cb workload over weak random-init adapters (drafts
+             mostly accepted — the speculation win case)
+- adversarial every request pinned to a profile whose ln_scale/ln_bias are
+             cranked so the adapted model disagrees with the bare draft at
+             almost every position — acceptance collapses, rejections fire
+             every round, and parity must STILL hold (the fallback token is
+             the verifier's own argmax, so correctness never depends on the
+             draft being good)
+
+Gates (--check):
+
+- parity       speculative tokens BITWISE equal plain tokens, both workloads
+- one trace    the spec decode step compiled exactly once
+- progress     committed tokens per device step > 1 on the normal workload,
+               and strictly fewer device steps than the plain engine
+- rejection    the adversarial run observed rejections (acceptance < 1) and
+               accepted strictly less than the normal run
+- tok/s        spec >= 0.4x plain under BENCH_STRICT=1 only: verify is a
+               gamma+1-token forward, so on CPU toy shapes (compute-bound)
+               speculation is a wash — the wall-clock win needs
+               memory-bound decode, i.e. real accelerators
+
+`run_spec_workload()` is the shared entry point: serve_bench embeds its
+summary into BENCH_serve.json (spec.* records, gated by check_bench) and
+`make spec-smoke` runs this file standalone with --check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.cb_smoke import skewed_requests
+
+ADVERSARIAL_PID = 3
+
+
+def _adversarial_profile(table):
+    """A profile whose adapter output is large enough that the adapted
+    argmax disagrees with the bare PLM's at almost every position: the
+    draft's worst case, forced deterministically."""
+    import jax
+    prof = jax.tree.map(lambda t: t[0], table)
+    return {"mA": prof["mA"], "mB": prof["mB"],
+            "ln_scale": 8.0 * prof["ln_scale"],
+            "ln_bias": prof["ln_bias"] + 3.0}
+
+
+def run_spec_workload(arch: str = "qwen1.5-0.5b", *, gamma: int = 3,
+                      max_slots: int = 2, max_seq: int = 64,
+                      sync_every: int = 4, page_size: int = 16,
+                      n_reqs: int = 6, long_new: int = 20,
+                      mesh=None) -> dict:
+    """Drain the same workloads through a plain and a speculative engine
+    (warmup pass + timed pass each) and return the comparison the bench
+    records / gates are built from."""
+    import jax
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core import xpeft as XP
+    from repro.core.profiles import ProfileStore
+    from repro.models import init_lm
+    from repro.serve.engine import ServeEngine
+    from repro.serve.scheduler import Request
+
+    cfg = reduce_for_smoke(get_config(arch))
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, "hard", cfg.xpeft.k)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(3):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    store.add_profile(ADVERSARIAL_PID, _adversarial_profile(table))
+
+    def adversarial_requests(n=4, max_new=10):
+        reqs = []
+        for i in range(n):
+            r = np.random.default_rng(9001 + i)
+            reqs.append(Request(uid=500 + i,
+                                prompt=r.integers(0, cfg.vocab_size,
+                                                  int(r.integers(3, 9))),
+                                profile_id=ADVERSARIAL_PID,
+                                max_new_tokens=max_new))
+        return reqs
+
+    out = {}
+    for mode in ("plain", "spec"):
+        spec = mode == "spec"
+        eng = ServeEngine(cfg.with_(spec_enable=spec, spec_gamma=gamma),
+                          params, store, max_slots=max_slots,
+                          max_seq=max_seq, sync_every=sync_every,
+                          continuous=True, page_size=page_size, mesh=mesh)
+        # warmup drain compiles the one decode step (and, spec, the
+        # draft-scan/verify program); the timed pass re-runs fresh request
+        # objects with the same seeds so both engines decode identically
+        eng.run_until_drained(skewed_requests(cfg, n_reqs, seed=0,
+                                              long_new=long_new))
+        steps0, toks0 = eng.slots.device_steps, eng.decode_tokens
+        timed = skewed_requests(cfg, n_reqs, seed=0, long_new=long_new)
+        t0 = time.perf_counter()
+        eng.run_until_drained(timed)
+        dt = time.perf_counter() - t0
+        adv = adversarial_requests()
+        eng.run_until_drained(adv)
+        st = eng.serve_stats()
+        d_steps = eng.slots.device_steps - steps0
+        tokens = {r.uid: list(map(int, r.generated)) for r in timed}
+        n_tok = sum(len(t) for t in tokens.values())
+        out[mode] = {
+            "tokens": tokens,
+            "adv_tokens": {r.uid: list(map(int, r.generated)) for r in adv},
+            "tokens_per_s": round(n_tok / dt, 1),
+            "device_steps": d_steps,
+            "committed_per_device_step": round(
+                (eng.decode_tokens - toks0) / max(d_steps, 1), 4),
+            "step_traces": st["step_traces"],
+        }
+        if spec:
+            sp = st["spec"]
+            adv_acc = [sp["per_request_acceptance"][r.uid] for r in adv
+                       if r.uid in sp["per_request_acceptance"]]
+            out[mode].update(
+                gamma=sp["gamma"], drafted=sp["drafted"],
+                accepted=sp["accepted"],
+                acceptance_rate=sp["acceptance_rate"],
+                adversarial_acceptance_rate=round(
+                    float(np.mean(adv_acc)) if adv_acc else 1.0, 4))
+        eng.page_alloc.check()
+
+    plain, spec = out["plain"], out["spec"]
+    return {
+        "arch": arch, "gamma": gamma, "requests": n_reqs,
+        "slots": max_slots,
+        "tokens_equal": plain["tokens"] == spec["tokens"],
+        "adversarial_tokens_equal":
+            plain["adv_tokens"] == spec["adv_tokens"],
+        "plain": {k: v for k, v in plain.items()
+                  if k not in ("tokens", "adv_tokens")},
+        "spec": {k: v for k, v in spec.items()
+                 if k not in ("tokens", "adv_tokens")},
+        "tok_s_ratio": round(spec["tokens_per_s"]
+                             / max(plain["tokens_per_s"], 1e-9), 3),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--gamma", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless parity + one-trace + progress + "
+                    "forced-rejection hold (tok/s floor only with "
+                    "BENCH_STRICT=1)")
+    args = ap.parse_args()
+
+    import os
+    res = run_spec_workload(args.arch, gamma=args.gamma,
+                            n_reqs=args.requests)
+    print(json.dumps(res, indent=1))
+    if not args.check:
+        return 0
+    plain, spec = res["plain"], res["spec"]
+    errs = []
+    if not res["tokens_equal"]:
+        errs.append("speculative tokens != plain tokens (parity broken)")
+    if not res["adversarial_tokens_equal"]:
+        errs.append("adversarial-profile speculative tokens != plain — "
+                    "the rejection fallback is not the verifier's argmax")
+    if spec["step_traces"] != 1:
+        errs.append(f"spec decode step traced {spec['step_traces']} times")
+    if spec["committed_per_device_step"] <= 1.0:
+        errs.append(f"committed {spec['committed_per_device_step']} "
+                    "tokens/device-step <= 1 — speculation is not "
+                    "amortizing steps")
+    if spec["device_steps"] >= plain["device_steps"]:
+        errs.append(f"spec device steps {spec['device_steps']} >= plain "
+                    f"{plain['device_steps']}")
+    if spec["drafted"] <= 0:
+        errs.append("zero tokens drafted")
+    if not (0.0 <= spec["acceptance_rate"] <= 1.0):
+        errs.append(f"acceptance rate {spec['acceptance_rate']} out of "
+                    "[0, 1]")
+    if spec["adversarial_acceptance_rate"] >= 1.0:
+        errs.append("adversarial profile forced no rejections — the "
+                    "reject/fallback path went untested")
+    if spec["adversarial_acceptance_rate"] >= spec["acceptance_rate"]:
+        errs.append(f"adversarial acceptance "
+                    f"{spec['adversarial_acceptance_rate']} not below the "
+                    f"normal workload's {spec['acceptance_rate']}")
+    if os.environ.get("BENCH_STRICT") and res["tok_s_ratio"] < 0.4:
+        errs.append(f"spec at {res['tok_s_ratio']}x plain tok/s < 0.4x "
+                    "floor (BENCH_STRICT)")
+    for e in errs:
+        print(f"spec_smoke: FAIL — {e}", file=sys.stderr)
+    if not errs:
+        print(f"spec_smoke: OK — parity bitwise (normal + adversarial), "
+              f"1 trace, {spec['committed_per_device_step']} committed "
+              f"tokens/device-step (device steps "
+              f"{plain['device_steps']} -> {spec['device_steps']}), "
+              f"acceptance {spec['acceptance_rate']} "
+              f"(adversarial {spec['adversarial_acceptance_rate']}), "
+              f"{res['tok_s_ratio']}x tok/s")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

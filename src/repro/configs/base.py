@@ -87,6 +87,20 @@ class ModelConfig:
     frontend: str = "none"           # "none" | "audio_frames" | "vision_patches"
     num_prefix_tokens: int = 0
 
+    # decode fast path (serve): `decode_fused` routes T=1 cached decode
+    # through the per-layer megakernel (kernels/decode_fused.py — norm,
+    # attention, MLP and the X-PEFT adapter in ONE program per layer,
+    # backend picked by xpeft.kernel_impl); `spec_enable` turns on
+    # self-speculative decoding in the continuous engine: the bare PLM
+    # (zero-adapter masks, bitwise the frozen model) drafts `spec_gamma`
+    # tokens per slot and the adapted model verifies them in one
+    # prefill-shaped step. The two are exclusive per engine: the verify
+    # forward runs at T=gamma+1 where the megakernel does not apply, so
+    # mixing them would break the spec-vs-nonspec bitwise parity gate.
+    decode_fused: bool = False
+    spec_enable: bool = False
+    spec_gamma: int = 3              # draft tokens per speculation round
+
     # misc
     norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
     cache_dtype: str = ""            # KV cache dtype ("" = model dtype);

@@ -103,6 +103,29 @@ def fused_adapter(x, a_hat, b_hat, ln_scale, ln_bias, *,
                          activation=activation, interpret=impl == "interpret")
 
 
+def decode_block_fused(x, pos, block, k_cache, v_cache, masks_l, *,
+                       norm: str, qkv_bias: bool, use_rope: bool,
+                       theta: float, cap: float, mlp_type: str,
+                       act_name: str, adapter: str, adapter_act: str,
+                       impl: str = "auto"):
+    """Decode megakernel (ModelConfig.decode_fused): one program per layer
+    applying norm/attention/MLP AND the X-PEFT adapter over the resident
+    [B, 1, d] activations. `adapter` picks the fused route ("none", "bf16",
+    "int8", "int4"); returns (y, k_rows, v_rows) — the caller scatters the
+    K/V rows into the cache (paged writeback stays outside the kernel)."""
+    from repro.kernels.decode_fused import decode_block_pallas
+
+    impl = resolve_impl(impl)
+    kw = dict(norm=norm, qkv_bias=qkv_bias, use_rope=use_rope, theta=theta,
+              cap=cap, mlp_type=mlp_type, act_name=act_name, adapter=adapter,
+              adapter_act=adapter_act)
+    if impl == "ref":
+        return ref.decode_block_ref(x, pos, block, k_cache, v_cache,
+                                    masks_l, **kw)
+    return decode_block_pallas(x, pos, block, k_cache, v_cache, masks_l,
+                               interpret=impl == "interpret", **kw)
+
+
 # ----------------------------------------------------------------------------
 # Quantized-bank routes (XPeftConfig.bank_quant != "none"). Pure additions:
 # with bank_quant "none" nothing below is reachable and the unquantized

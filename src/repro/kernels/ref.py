@@ -80,6 +80,33 @@ def fused_adapter_quant_batched_ref(x, a_q, a_scale, b_q, b_scale, ln_scale,
     return jnp.stack(rows)
 
 
+def decode_block_ref(x, pos, block, k_cache, v_cache, masks_l, *, norm: str,
+                     qkv_bias: bool, use_rope: bool, theta: float,
+                     cap: float, mlp_type: str, act_name: str,
+                     adapter: str, adapter_act: str):
+    """Oracle twin of the decode megakernel: a python loop over slots
+    calling the SAME per-row math (`decode_fused.decode_block_row`) the
+    kernel body runs — interpret-vs-ref parity is bitwise by construction
+    on all three adapter routes (none/bf16, int8, int4)."""
+    from repro.kernels.decode_fused import ADAPTER_LEAVES, decode_block_row
+
+    B = x.shape[0]
+    leaves = ADAPTER_LEAVES[adapter]
+    ys, krs, vrs = [], [], []
+    for i in range(B):
+        ad_i = {nm: masks_l[nm][i] for nm in leaves}
+        y, kr, vr = decode_block_row(
+            x[i], pos[i], block["n1"], block["n2"], block["attn"],
+            block["mlp"], k_cache[i], v_cache[i], ad_i, norm=norm,
+            qkv_bias=qkv_bias, use_rope=use_rope, theta=theta, cap=cap,
+            mlp_type=mlp_type, act_name=act_name, adapter=adapter,
+            adapter_act=adapter_act)
+        ys.append(y)
+        krs.append(kr)
+        vrs.append(vr)
+    return jnp.stack(ys), jnp.stack(krs), jnp.stack(vrs)
+
+
 def mask_aggregate_batched_ref(bank, idx, w):
     """bank [N, d, b], idx [P, k], w [P, k] -> [P, d, b] fp32."""
     g = jnp.take(bank, idx, axis=0).astype(jnp.float32)      # [P, k, d, b]

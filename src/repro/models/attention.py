@@ -149,12 +149,15 @@ def attention(params, x, *, positions, cfg, cache=None, cache_pos=None,
             cv = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
         else:
-            # per-slot positions (continuous batching): scatter one step
-            assert T == 1, "vector cache_pos is a decode-only path"
-            ck = cache["k"].at[jnp.arange(B), cache_pos].set(
-                k[:, 0].astype(cache["k"].dtype), mode="drop")
-            cv = cache["v"].at[jnp.arange(B), cache_pos].set(
-                v[:, 0].astype(cache["v"].dtype), mode="drop")
+            # per-slot positions (continuous batching / speculative verify):
+            # scatter T consecutive steps at each slot's own offset; writes
+            # past S fall off the end and are dropped (the engine masks
+            # those slots via kv_valid and never commits their tokens)
+            idx = cache_pos[:, None] + jnp.arange(T)
+            ck = cache["k"].at[jnp.arange(B)[:, None], idx].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[jnp.arange(B)[:, None], idx].set(
+                v.astype(cache["v"].dtype), mode="drop")
         new_cache = {"k": ck, "v": cv}
         # quantized caches (e.g. f8) cast back to compute dtype on read
         keys, vals = ck.astype(k.dtype), cv.astype(v.dtype)

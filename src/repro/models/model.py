@@ -173,6 +173,53 @@ def _xpeft_apply(x, bank_l, masks_l, cfg):
                                 masks_l["ln_bias"][..., None, :], cfg.xpeft)
 
 
+def _decode_fused_route(cfg, masks, use_cache: bool, Tt: int):
+    """Static eligibility of the decode megakernel: returns the adapter
+    route ("none" | "bf16" | "int8" | "int4") or None for the composed
+    path. Only the T=1 cached full-attention decode step qualifies; the
+    on-the-fly mask routes (w_a / idx_a) keep the composed path — the
+    megakernel fuses admission-time aggregated records only."""
+    if not (cfg.decode_fused and use_cache and Tt == 1
+            and cfg.block_pattern == "attn" and not cfg.moe
+            and cfg.attn_type == "full" and cfg.causal):
+        return None
+    if masks is None or not cfg.xpeft.enabled:
+        return "none"
+    if "a_q" in masks:
+        return cfg.xpeft.bank_quant \
+            if cfg.xpeft.bank_quant in ("int8", "int4") else None
+    if "a_hat" in masks:
+        return "bf16"
+    return None
+
+
+def _decode_fused_apply(block, x, masks_l, cfg, *, positions, cache_l,
+                        cache_pos, route):
+    """Megakernel step: one program for norm/attn/MLP/adapter, then the
+    K/V row scatter OUTSIDE the kernel (same semantics as attention.py's
+    cache update, so paged sentinel-drop writeback is unchanged)."""
+    from repro.kernels import ops
+    B = x.shape[0]
+    y, k_rows, v_rows = ops.decode_block_fused(
+        x, positions[:, 0], block, cache_l["k"], cache_l["v"], masks_l,
+        norm=cfg.norm, qkv_bias=cfg.qkv_bias, use_rope=cfg.pos == "rope",
+        theta=cfg.rope_theta, cap=cfg.logit_softcap, mlp_type=cfg.mlp_type,
+        act_name=cfg.act, adapter=route,
+        adapter_act=cfg.xpeft.adapter_activation,
+        impl=cfg.xpeft.kernel_impl)
+    if jnp.ndim(cache_pos) == 0:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], k_rows[:, None], cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], v_rows[:, None], cache_pos, axis=1)
+    else:
+        ck = cache_l["k"].at[jnp.arange(B), cache_pos].set(
+            k_rows, mode="drop")
+        cv = cache_l["v"].at[jnp.arange(B), cache_pos].set(
+            v_rows, mode="drop")
+    return y, {"k": ck, "v": cv}
+
+
 def _attn_block_apply(block, x, cfg, *, positions, cache_l, cache_pos,
                       is_global):
     h = norm_apply(x, block["n1"], cfg.norm)
@@ -189,13 +236,22 @@ def _attn_block_apply(block, x, cfg, *, positions, cache_l, cache_pos,
     return x, new_cache, aux
 
 
-def _make_body(cfg, positions, cache_pos, use_cache):
+def _make_body(cfg, positions, cache_pos, use_cache, fused_route=None):
     """Scan body over stacked layers for uniform-block archs."""
 
     def body(x, xs):
         block, bank_l, masks_l, is_global, cache_l = xs
         if not use_cache:
             cache_l = None
+        if fused_route is not None:
+            # decode megakernel: attention/MLP AND the adapter in one
+            # program per layer (adapter already applied — skip
+            # _xpeft_apply below)
+            x, new_cache = _decode_fused_apply(
+                block, x, masks_l, cfg, positions=positions,
+                cache_l=cache_l, cache_pos=cache_pos, route=fused_route)
+            x = ctx.hint(x, "batch", "seq", "embed")
+            return x, (new_cache, jnp.float32(0))
         if cfg.block_pattern == "rwkv":
             x, new_cache = RK.rwkv_block(
                 block["rwkv"], x, cfg,
@@ -273,7 +329,9 @@ def forward(params, tokens, cfg, *, prefix_embeds=None, profile_masks=None,
         return _forward_zamba(params, x, cfg, positions, cache, cache_pos,
                               bank, masks, meta)
 
-    body = _remat(_make_body(cfg, positions, cache_pos, use_cache), cfg)
+    fused_route = _decode_fused_route(cfg, masks, use_cache, Tt)
+    body = _remat(_make_body(cfg, positions, cache_pos, use_cache,
+                             fused_route), cfg)
     dummy_cache = cache if use_cache else jnp.zeros((cfg.num_layers,), jnp.float32)
     xs = (params["blocks"], bank, masks, meta, dummy_cache)
     x, (new_cache, auxs) = jax.lax.scan(body, x, xs)

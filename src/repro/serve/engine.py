@@ -86,6 +86,30 @@ class ServeEngine:
         # engine bit-for-bit (the parity baseline cb_smoke gates against).
         self.continuous = continuous
         self.page_size = page_size
+        # self-speculative decoding (ISSUE 8): the shared frozen PLM — the
+        # zero-adapter entry, bitwise the bare PLM — drafts spec_gamma
+        # tokens per slot per round; the adapted model verifies all of them
+        # in ONE batched step and commits the accepted prefix plus one
+        # correction/bonus token. Greedy output is bitwise identical to
+        # non-speculative greedy per request; speculation only changes how
+        # many device steps the same tokens take.
+        self.spec = bool(cfg.spec_enable)
+        self.spec_gamma = int(cfg.spec_gamma)
+        if self.spec:
+            if not continuous:
+                raise ValueError("spec_enable requires continuous=True "
+                                 "(drafting rides the paged decode path)")
+            if cfg.decode_fused:
+                raise ValueError(
+                    "spec_enable and decode_fused are exclusive per "
+                    "engine: verification runs a T=gamma+1 composed "
+                    "forward, which the T=1 megakernel cannot serve")
+            if cfg.block_pattern != "attn":
+                raise ValueError("spec_enable requires pure-attention "
+                                 "blocks (recurrent state cannot rewind "
+                                 "rejected drafts)")
+            if self.spec_gamma < 1:
+                raise ValueError("spec_gamma must be >= 1")
         # quantized bank (cfg.xpeft.bank_quant): the bf16/fp32 bank is
         # quantized ONCE here and DROPPED from the resident params — the
         # engine serves every admission from the int8/int4 rows (k-sparse
@@ -296,8 +320,67 @@ class ServeEngine:
                     self._specs["masks_view"], mesh)
                 view = jax.device_put(view, self._shardings["masks_view"])
             self._masks_view = view
+        # speculative draft masks: a constant all-slot zero-adapter view
+        # (identity LN) — the draft model IS the bare PLM, at zero extra
+        # parameter memory (the whole point of SELF-speculation)
+        self._zero_view = None
+        if self.spec and self._masks_view is not None:
+            zv = jax.tree.map(jnp.zeros_like, self._masks_view)
+            zv["ln_scale"] = jnp.ones_like(zv["ln_scale"])
+            if mesh is not None:
+                zv = jax.device_put(zv, self._shardings["masks_view"])
+            self._zero_view = zv
 
-        if continuous:
+        if continuous and self.spec:
+            # speculation round (still ONE jitted program): gamma bare-PLM
+            # draft steps (scan over the same paged T=1 decode), then ONE
+            # adapted T=gamma+1 verify forward at each slot's own offset.
+            # The verify rewrites the drafts' bare KV with adapted KV
+            # before attending (write-then-read inside forward), and
+            # writeback_span commits the whole span to pages — positions
+            # past the accepted prefix hold stale KV that the causal mask
+            # hides and the next round overwrites.
+            gamma, W = self.spec_gamma, self.spec_gamma + 1
+
+            def decode_fn(params, cache, last_tok, lengths, masks, active):
+                adapted = None if masks is None else masks["adapted"]
+                zero = None if masks is None else masks["zero"]
+                table = cache["table"]
+
+                def draft_step(carry, _):
+                    data, tok, pos = carry
+                    dense = PG.dense_view(data, table, page_size)
+                    hidden, dense, _ = MDL.forward(
+                        params, tok[:, None], cfg, profile_masks=zero,
+                        cache=dense, cache_pos=pos)
+                    # near capacity a draft can point past S-1; writeback's
+                    # page lookup clamps, so mask those writes out entirely
+                    # (the tokens still draft — only their KV is dropped,
+                    # and positions that far are never committed anyway)
+                    ok = active & (pos < self.S)
+                    data = PG.writeback(data, dense, table, pos, ok,
+                                        page_size)
+                    nxt = greedy_next(MDL.lm_logits(params, hidden, cfg))
+                    return (data, nxt, pos + 1), nxt
+
+                (data, _, _), drafts = jax.lax.scan(
+                    draft_step, (cache["data"], last_tok, lengths), None,
+                    length=gamma)
+                drafts = jnp.moveaxis(drafts, 0, 1)          # [n, gamma]
+                seq = jnp.concatenate([last_tok[:, None], drafts], axis=1)
+                dense = PG.dense_view(data, table, page_size)
+                hidden, dense, _ = MDL.forward(
+                    params, seq, cfg, profile_masks=adapted, cache=dense,
+                    cache_pos=lengths)
+                data = PG.writeback_span(data, dense, table, lengths, W,
+                                         active, page_size)
+                logits = MDL.lm_logits(params, hidden, cfg)
+                # same vocab-axis argmax as greedy_next, one per position
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                match = (drafts == toks[:, :gamma]).astype(jnp.int32)
+                n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+                return toks, n_acc, {"data": data, "table": table}
+        elif continuous:
             # paged decode: gather KV through the page table back to the
             # dense layout forward() already takes (bitwise-identical
             # values — junk pages only cover positions attention masks to
@@ -328,7 +411,9 @@ class ServeEngine:
 
         self.slots = SlotState(max_slots, max_seq, sync_every, decode_fn,
                                mesh=mesh,
-                               cache_shardings=self._shardings.get("cache"))
+                               cache_shardings=self._shardings.get("cache"),
+                               spec_width=(self.spec_gamma + 1
+                                           if self.spec else 1))
         self._prefill = jax.jit(self._prefill_impl)
         # the cache/mask buffers round-trip through these every wave: pin
         # their out-shardings so placement never drifts (a drift would both
@@ -393,6 +478,11 @@ class ServeEngine:
         # exercised behavior, not config math
         self.last_admission: Optional[dict] = None
         self.decode_tokens = 0
+        # speculation accounting: drafts offered vs accepted, totals and
+        # per-request (uid-keyed, so it survives preempt/resume cycles)
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self._spec_by_uid: dict = {}
         self.prefill_batches = 0
         self.prefill_rows = 0
         self.prefill_real = 0
@@ -1010,6 +1100,8 @@ class ServeEngine:
         if not active:
             return 0
         masks = self._masks_view if self.continuous else self.masks
+        if self.spec and masks is not None:
+            masks = {"adapted": masks, "zero": self._zero_view}
         self.cache = self.slots.step(self.params, self.cache, masks)
         if self.slots.buf_fill >= self._window:
             self.sync()
@@ -1031,7 +1123,10 @@ class ServeEngine:
                 c = int(s.counts[i])
                 self.useful_slot_steps += c
                 if req is not None:
-                    self.stranded_slot_steps += s.fill - c
+                    # spec rounds commit up to W tokens per step, so only
+                    # fully idle rounds count as stranded (max keeps the
+                    # non-spec arithmetic untouched: c <= fill there)
+                    self.stranded_slot_steps += max(s.fill - c, 0)
                 elif self._backlog:
                     self.stranded_slot_steps += s.fill
         for i, req in enumerate(self.slot_req):
@@ -1043,6 +1138,13 @@ class ServeEngine:
                 assert (toks >= 0).all(), "non-contiguous slot activity"
                 req.generated.extend(int(t) for t in toks)
                 self.decode_tokens += c
+            if s.drafted is not None and int(s.drafted[i]):
+                d, a = int(s.drafted[i]), int(s.accepted[i])
+                self.spec_drafted += d
+                self.spec_accepted += a
+                rec = self._spec_by_uid.setdefault(req.uid, [0, 0])
+                rec[0] += d
+                rec[1] += a
             if not s.active[i]:
                 req.done = True
                 self.slot_req[i] = None
@@ -1069,9 +1171,16 @@ class ServeEngine:
             bound = min(remaining) if remaining else self.sync_every
         else:
             bound = max(remaining) if remaining else self.sync_every
-        self._window = max(1, min(self.sync_every, bound))
+        # spec mode windows count ROUNDS (up to W tokens each): the first
+        # retirement can land after as few as ceil(bound / W) rounds, so
+        # the sync bound shrinks accordingly (an early sync just costs one
+        # host round-trip; a late one would strand the freed slot)
+        W = self.spec_gamma + 1 if self.spec else 1
+        self._window = max(1, min(self.sync_every, -(-bound // W)))
         if self.continuous:
-            self._ensure_window_pages(self._window)
+            # page growth must cover every position the window can WRITE —
+            # rounds x W tokens (draft + verify spans), not rounds tokens
+            self._ensure_window_pages(self._window * W)
             self._push_tables()
             if self.masks is not None and self._view_dirty:
                 self._view_dirty = False
@@ -1182,6 +1291,11 @@ class ServeEngine:
             "host_syncs": self.slots.host_syncs,
             "device_steps": self.slots.device_steps,
             "decode_tokens": self.decode_tokens,
+            # committed tokens vs device decode steps: equal for plain
+            # decode, committed > steps is the speculation win
+            "committed_tokens": self.decode_tokens,
+            "committed_per_device_step": round(
+                self.decode_tokens / max(self.slots.device_steps, 1), 4),
             "syncs_per_token": round(self.slots.host_syncs / toks, 4),
             "sync_every": self.sync_every,
             "prefill_batches": self.prefill_batches,
@@ -1198,6 +1312,21 @@ class ServeEngine:
             "quarantined_profiles": len(self.store.quarantined_ids()),
             "store_integrity": self.store.integrity_stats(),
         }
+        if self.spec:
+            out["spec"] = {
+                "gamma": self.spec_gamma,
+                "drafted": self.spec_drafted,
+                "accepted": self.spec_accepted,
+                "acceptance_rate": round(
+                    self.spec_accepted / max(self.spec_drafted, 1), 4),
+                "committed_per_device_step": round(
+                    self.decode_tokens
+                    / max(self.slots.device_steps, 1), 4),
+                # per-request acceptance (uid-keyed; survives preemption)
+                "per_request_acceptance": {
+                    uid: round(a / max(d, 1), 4)
+                    for uid, (d, a) in sorted(self._spec_by_uid.items())},
+            }
         if self.continuous:
             out["preemptions"] = self.preemptions
             out["resumes"] = self.resumes

@@ -284,6 +284,36 @@ def writeback(data, dense_new, table, lengths, active, page_size: int):
     return map_with_paths(one, data, dense_new)
 
 
+def writeback_span(data, dense_new, table, lengths, span: int, active,
+                   page_size: int):
+    """Scatter ``span`` consecutive written positions per slot
+    (``lengths[b] .. lengths[b]+span-1``) back into their pages — the
+    speculative round's writeback: one draft+verify round writes gamma+1
+    positions at once. Positions past the slot's allocated pages (or past
+    S) route to the sentinel and are DROPPED; only positions the engine
+    can later COMMIT are guaranteed page-backed (the window sizing does
+    that), so a dropped overhang write only costs acceptance, never
+    correctness — the next round rewrites those positions anyway."""
+    B, mp = table.shape
+    pos = lengths[:, None] + jnp.arange(span)             # [B, span]
+    page_of = pos // page_size
+    in_range = active[:, None] & (page_of < mp)
+    pidx_owned = jnp.take_along_axis(table, jnp.clip(page_of, 0, mp - 1),
+                                     axis=1)              # [B, span]
+    off = pos % page_size
+
+    def one(path, pool, new):
+        if not leaf_is_paged(path):
+            return new
+        idx = pos.reshape((1, B, span) + (1,) * (new.ndim - 3))
+        rows = jnp.take_along_axis(new, jnp.clip(idx, 0, new.shape[2] - 1),
+                                   axis=2).astype(pool.dtype)
+        pidx = jnp.where(in_range, pidx_owned, jnp.int32(pool.shape[1]))
+        return pool.at[:, pidx, off].set(rows, mode="drop")
+
+    return map_with_paths(one, data, dense_new)
+
+
 def insert_group(data, mini, slots, table, page_size: int):
     """Batched prefill insert for one length-bucket group: the stacked
     mini-cache ``[lead, Bp, S, ...]`` chunks into pages and scatters

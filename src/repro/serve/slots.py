@@ -32,13 +32,20 @@ def _admit_scatter(arrays, slots, last_toks, lengths, n_gens, max_news,
                    actives):
     """One batched scatter of an admission (or resume) wave into the slot
     arrays. n_gens is 1 for fresh admissions (the prefill token) and the
-    already-generated count when restoring a preempted request."""
-    return {"last_tok": arrays["last_tok"].at[slots].set(last_toks),
-            "lengths": arrays["lengths"].at[slots].set(lengths),
-            "active": arrays["active"].at[slots].set(actives),
-            "n_gen": arrays["n_gen"].at[slots].set(n_gens),
-            "max_new": arrays["max_new"].at[slots].set(max_news),
-            "tok_buf": arrays["tok_buf"]}
+    already-generated count when restoring a preempted request. Extra
+    (speculation) keys pass through, with the per-slot acceptance counters
+    reset for the admitted slots."""
+    out = dict(arrays)
+    out.update({"last_tok": arrays["last_tok"].at[slots].set(last_toks),
+                "lengths": arrays["lengths"].at[slots].set(lengths),
+                "active": arrays["active"].at[slots].set(actives),
+                "n_gen": arrays["n_gen"].at[slots].set(n_gens),
+                "max_new": arrays["max_new"].at[slots].set(max_news)})
+    if "drafted" in arrays:
+        z = jnp.zeros_like(last_toks)
+        out["drafted"] = arrays["drafted"].at[slots].set(z)
+        out["accepted"] = arrays["accepted"].at[slots].set(z)
+    return out
 
 
 def _deactivate_scatter(arrays, mask):
@@ -50,11 +57,13 @@ def _deactivate_scatter(arrays, mask):
 
 class SlotSync(NamedTuple):
     """Host view of slot state at a sync point."""
-    tokens: np.ndarray       # [n_slots, <=sync_every] int32, -1 padded
+    tokens: np.ndarray       # [n_slots, <=sync_every*W] int32, -1 padded
     counts: np.ndarray       # [n_slots] tokens emitted since last sync
     lengths: np.ndarray      # [n_slots] int32
     active: np.ndarray       # [n_slots] bool
     fill: int                # device steps this window took (stranding calc)
+    drafted: Optional[np.ndarray] = None   # [n_slots] spec drafts this window
+    accepted: Optional[np.ndarray] = None  # [n_slots] accepted drafts
 
 
 class SlotState:
@@ -75,20 +84,34 @@ class SlotState:
     """
 
     def __init__(self, n_slots: int, max_seq: int, sync_every: int,
-                 decode_fn: Callable, *, mesh=None, cache_shardings=None):
+                 decode_fn: Callable, *, mesh=None, cache_shardings=None,
+                 spec_width: int = 1):
         assert sync_every >= 1
+        assert spec_width >= 1
         self.n_slots = n_slots
         self.S = max_seq
         self.sync_every = sync_every
+        self.spec_width = spec_width  # gamma+1 (speculative), 1 = plain
         self.mesh = mesh
+        spec = spec_width > 1
         self.last_tok = jnp.zeros((n_slots,), jnp.int32)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
         self.active = jnp.zeros((n_slots,), bool)
         self.n_gen = jnp.zeros((n_slots,), jnp.int32)
         self.max_new = jnp.zeros((n_slots,), jnp.int32)
-        self.tok_buf = jnp.full((n_slots, sync_every), -1, jnp.int32)
+        # speculative rounds commit a VARIABLE 1..W tokens per slot per
+        # step: the buffer holds the worst case and tokens pack densely
+        # from buf_len (the -1 padding moves to the tail, so the sync-side
+        # contract — counts[i] tokens then padding — is unchanged)
+        self.tok_buf = jnp.full((n_slots, sync_every * spec_width), -1,
+                                jnp.int32)
+        self.buf_len = jnp.zeros((n_slots,), jnp.int32) if spec else None
+        self.drafted = jnp.zeros((n_slots,), jnp.int32) if spec else None
+        self.accepted = jnp.zeros((n_slots,), jnp.int32) if spec else None
         self.buf_fill = 0            # host: steps since last sync
         self._prev_n_gen = np.zeros((n_slots,), np.int32)  # host mirror
+        self._prev_drafted = np.zeros((n_slots,), np.int32)
+        self._prev_accepted = np.zeros((n_slots,), np.int32)
         self.host_syncs = 0
         self.device_steps = 0
         self.step_traces = 0         # times the decode step (re)compiled
@@ -108,6 +131,7 @@ class SlotState:
         # default device and force a retrace)
         self._empty_buf = self.tok_buf
         self._all_inactive = self.active
+        self._zero_counts = self.buf_len
 
         def step_impl(params, cache, masks, arrays, step_idx):
             self.step_traces += 1    # python side effect: runs per TRACE
@@ -126,6 +150,55 @@ class SlotState:
                            "active": was_active & ~done, "n_gen": n_gen,
                            "max_new": arrays["max_new"], "tok_buf": tok_buf}
 
+        def spec_step_impl(params, cache, masks, arrays, step_idx):
+            """One SPECULATION ROUND for all slots: decode_fn drafts W-1
+            tokens with the bare PLM, verifies with the adapted model, and
+            returns (toks [n, W] — the adapted model's token at every
+            position — and n_acc [n], the accepted-draft prefix length).
+            Commit c = min(n_acc+1, budget/capacity) tokens: the accepted
+            prefix plus either the correction token at the first mismatch
+            or the verify bonus token, so greedy output is bitwise the
+            non-speculative sequence. Tokens pack densely at buf_len."""
+            self.step_traces += 1    # python side effect: runs per TRACE
+            del step_idx             # spec rounds index by buf_len instead
+            W = self.spec_width
+            toks, n_acc, cache = decode_fn(params, cache,
+                                           arrays["last_tok"],
+                                           arrays["lengths"], masks,
+                                           arrays["active"])
+            was_active = arrays["active"]
+            cap = jnp.minimum(arrays["max_new"] - arrays["n_gen"],
+                              (self.S - 1) - arrays["lengths"])
+            c = jnp.where(was_active,
+                          jnp.clip(jnp.minimum(n_acc + 1, cap), 1, W), 0)
+            lengths = arrays["lengths"] + c
+            n_gen = arrays["n_gen"] + c
+            sel = jnp.clip(c - 1, 0, W - 1)
+            new_last = jnp.take_along_axis(toks, sel[:, None], axis=1)[:, 0]
+            last_tok = jnp.where(was_active, new_last, arrays["last_tok"])
+            done = (n_gen >= arrays["max_new"]) | (lengths >= self.S - 1)
+            # packed scatter: row i gets toks[i, :c] at buf_len[i]...; the
+            # uncommitted tail routes to an out-of-range column and drops
+            col = arrays["buf_len"][:, None] + jnp.arange(W)[None, :]
+            ok = was_active[:, None] & (jnp.arange(W)[None, :] < c[:, None])
+            col = jnp.where(ok, col, self.sync_every * W)
+            tok_buf = arrays["tok_buf"].at[
+                jnp.arange(self.n_slots)[:, None], col].set(toks,
+                                                            mode="drop")
+            # acceptance stats: every round drafts W-1; committed drafts
+            # are c-1 (the final commit is the correction/bonus token)
+            drafted = arrays["drafted"] + \
+                (W - 1) * was_active.astype(jnp.int32)
+            accepted = arrays["accepted"] + jnp.maximum(c - 1, 0)
+            return cache, {"last_tok": last_tok, "lengths": lengths,
+                           "active": was_active & ~done, "n_gen": n_gen,
+                           "max_new": arrays["max_new"], "tok_buf": tok_buf,
+                           "buf_len": arrays["buf_len"] + c,
+                           "drafted": drafted, "accepted": accepted}
+
+        if spec:
+            step_impl = spec_step_impl
+
         if mesh is not None:
             self._step = jax.jit(
                 step_impl, out_shardings=(cache_shardings,
@@ -141,9 +214,13 @@ class SlotState:
 
     # ----------------------------------------------------------------- device
     def _arrays(self) -> dict:
-        return {"last_tok": self.last_tok, "lengths": self.lengths,
-                "active": self.active, "n_gen": self.n_gen,
-                "max_new": self.max_new, "tok_buf": self.tok_buf}
+        out = {"last_tok": self.last_tok, "lengths": self.lengths,
+               "active": self.active, "n_gen": self.n_gen,
+               "max_new": self.max_new, "tok_buf": self.tok_buf}
+        if self.spec_width > 1:
+            out.update({"buf_len": self.buf_len, "drafted": self.drafted,
+                        "accepted": self.accepted})
+        return out
 
     def _set_arrays(self, arrays: dict) -> None:
         self.last_tok = arrays["last_tok"]
@@ -152,6 +229,10 @@ class SlotState:
         self.n_gen = arrays["n_gen"]
         self.max_new = arrays["max_new"]
         self.tok_buf = arrays["tok_buf"]
+        if self.spec_width > 1:
+            self.buf_len = arrays["buf_len"]
+            self.drafted = arrays["drafted"]
+            self.accepted = arrays["accepted"]
 
     def step(self, params, cache, masks):
         """One decode step for ALL slots (inactive ones pad-compute);
@@ -183,6 +264,10 @@ class SlotState:
             jnp.asarray(max_news_h), jnp.asarray(actives_h))
         self._set_arrays(arrays)
         self._prev_n_gen[slots_h] = n_gens_h
+        if self.spec_width > 1:
+            # _admit_scatter zeroed the device counters for these slots
+            self._prev_drafted[slots_h] = 0
+            self._prev_accepted[slots_h] = 0
 
     def admit(self, slots, last_toks, lengths, max_news) -> None:
         """Scatter freshly prefilled requests into the slot arrays (one
@@ -208,11 +293,28 @@ class SlotState:
     # ------------------------------------------------------------------- host
     def sync(self) -> SlotSync:
         """ONE device→host transfer of the window's tokens + slot status;
-        resets the window. The engine distributes tokens to requests."""
+        resets the window. The engine distributes tokens to requests. In
+        spec mode the window holds up to fill*W packed tokens per slot and
+        the acceptance counters come back as per-window deltas."""
         fill = self.buf_fill
-        tok_buf, lengths, active, n_gen = jax.device_get(
-            (self.tok_buf[:, :fill] if fill else self.tok_buf[:, :0],
-             self.lengths, self.active, self.n_gen))
+        W = self.spec_width
+        width = fill * W
+        if W > 1:
+            (tok_buf, lengths, active, n_gen, drafted,
+             accepted) = jax.device_get(
+                (self.tok_buf[:, :width], self.lengths, self.active,
+                 self.n_gen, self.drafted, self.accepted))
+            d_drafted = np.asarray(drafted) - self._prev_drafted
+            d_accepted = np.asarray(accepted) - self._prev_accepted
+            self._prev_drafted = np.asarray(drafted).copy()
+            self._prev_accepted = np.asarray(accepted).copy()
+            if fill:
+                self.buf_len = self._zero_counts
+        else:
+            tok_buf, lengths, active, n_gen = jax.device_get(
+                (self.tok_buf[:, :width], self.lengths, self.active,
+                 self.n_gen))
+            d_drafted = d_accepted = None
         counts = np.asarray(n_gen) - self._prev_n_gen
         self._prev_n_gen = np.asarray(n_gen).copy()
         if fill:
@@ -220,4 +322,4 @@ class SlotState:
         self.buf_fill = 0
         self.host_syncs += 1
         return SlotSync(np.asarray(tok_buf), counts, np.asarray(lengths),
-                        np.asarray(active), fill)
+                        np.asarray(active), fill, d_drafted, d_accepted)
