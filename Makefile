@@ -9,7 +9,7 @@ PY      := python
 PP      := PYTHONPATH=src:.
 
 .PHONY: verify test bench-smoke onboard-smoke multidev-smoke quant-smoke \
-	chaos-smoke cb-smoke spec-smoke bench
+	chaos-smoke cb-smoke spec-smoke hetero-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -77,9 +77,21 @@ cb-smoke:
 spec-smoke:
 	$(PP) $(PY) benchmarks/spec_smoke.py --check
 
+# heterogeneous adapter-bank smoke (ISSUE 9): typed segments — bottleneck /
+# LoRA / IA3 / prefix — tile ONE unified mask index space; mixed-type
+# profiles admit through the k-sparse fast path, prefix KV rows hydrate
+# into the paged cache, and decode stays ONE compiled program. Gates:
+# engine tokens BITWISE equal a composed dense reference, prefix-on AND
+# prefix-off admissions both exercised, per-type record bytes positive,
+# per-type interpret-vs-ref kernel parity. The same numbers land in
+# BENCH_serve.json (hetero.* records, gated by check_bench inside
+# bench-smoke).
+hetero-smoke:
+	$(PP) $(PY) benchmarks/hetero_smoke.py --check
+
 bench:
 	$(PP) $(PY) benchmarks/run.py
 
 verify: test bench-smoke onboard-smoke quant-smoke chaos-smoke cb-smoke \
-	spec-smoke
+	spec-smoke hetero-smoke
 	@echo "verify: OK"

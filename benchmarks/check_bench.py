@@ -460,6 +460,34 @@ def main(fault_only: bool = False):
         fail(f"spec decode at {spt.get('ratio')}x plain tok/s < "
              f"{MIN_SPEC_TOK_S_RATIO}x floor (BENCH_STRICT)")
 
+    # ---- heterogeneous adapter-type bank (typed segments) ---------------
+    htp = record(serve, "hetero.parity")
+    if not htp.get("tokens_equal"):
+        fail("hetero engine tokens != composed dense reference — "
+             "cross-segment aggregation / composed apply / prefix "
+             "hydration must be BITWISE per emitted token")
+    if htp.get("step_traces") != 1:
+        fail(f"hetero decode step traced {htp.get('step_traces')} times — "
+             "typed entries must serve through ONE compiled program")
+    if not htp.get("prefix_on_requests") or \
+            not htp.get("prefix_off_requests"):
+        fail(f"hetero workload did not exercise both prefix paths "
+             f"(on={htp.get('prefix_on_requests')}, "
+             f"off={htp.get('prefix_off_requests')})")
+    hta = record(serve, "hetero.admission")
+    if hta.get("path") != "sparse":
+        fail(f"hetero cold admission took the {hta.get('path')!r} path — "
+             "the unified-space k-sparse fast path is not being exercised")
+    for col, v in hta.items():
+        if col.startswith("record_bytes_") and v <= 0:
+            fail(f"hetero admission {col} = {v} — a typed segment "
+                 "contributed no record bytes")
+    htk = record(serve, "hetero.kernel_parity")
+    for t, ok in htk.items():
+        if t != "name" and not ok:
+            fail(f"hetero kernel parity broken for {t!r}: interpret != "
+                 "ref on the admitted entries")
+
     # ---- multi-device (8-fake-device mesh vs 1 device) ------------------
     par = record(serve, "sharded.parity")
     for bit in ("onboard_store_bitwise_equal", "serve_entries_bitwise_equal",
@@ -544,10 +572,40 @@ def _fmt(recs: dict, name: str, key: str, label: str):
     return None if v is None else f"{label} {v}"
 
 
+def _gate_families() -> list:
+    """Re-run the gates over whatever artifacts exist; returns the list of
+    failing family groups (empty = all present families pass). SystemExit
+    from fail() is caught per group so one failing family can't mask
+    another's verdict in the summary read-out."""
+    present = {f for f in FAMILIES if os.path.exists(family_path(f))}
+    failures = []
+
+    def run(label, fn):
+        try:
+            fn()
+        except SystemExit as e:
+            if e.code:
+                failures.append(label)
+        except Exception as exc:  # corrupt artifact == failing gate
+            print(f"check_bench: FAIL — {label}: {exc}")
+            failures.append(label)
+
+    if {"kernels", "serve", "train"} <= present:
+        # main() gates the three bench-smoke families together (and fault
+        # opportunistically) — run it once, attribute to the group
+        run("kernels/serve/train", main)
+    elif "fault" in present:
+        # partial artifact sets stay tolerated (the absent families are
+        # already marked in the read-out) — gate what exists
+        run("fault", lambda: check_fault(load_family("fault")))
+    return failures
+
+
 def summary():
     """One consolidated line per family from whatever artifacts exist;
     absent families are marked with the `make` target that produces them.
-    Never exits non-zero — this is the read-out, main() is the gate."""
+    The read-out is ALSO a gate: any present family whose checks fail
+    exits non-zero (a green summary can be trusted in CI)."""
     digests = {
         "kernels": [
             ("mask_aggregate.sparse_ref", "tpu_win", "sparse-agg win"),
@@ -564,6 +622,9 @@ def summary():
             ("spec.acceptance", "committed_per_device_step",
              "spec tokens/step"),
             ("spec.acceptance", "acceptance_rate", "acceptance"),
+            ("hetero.parity", "tokens_equal", "hetero parity"),
+            ("hetero.admission", "bank_bytes_per_request",
+             "hetero bank B/req"),
         ],
         "train": [
             ("train.host_syncs", "syncs_per_step", "syncs/step"),
@@ -589,6 +650,10 @@ def summary():
                  for p in [_fmt(recs, n, k, lbl)] if p]
         body = ", ".join(parts) if parts else "no gated records"
         print(f"{family:7s} — {len(recs)} records: {body}")
+    failures = _gate_families()
+    if failures:
+        print(f"check_bench: summary gate FAILED — {', '.join(failures)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,264 @@
+"""Heterogeneous adapter-bank smoke: mixed-type profiles through the
+continuous serving engine, gated against a composed dense reference.
+
+The bank is typed — bottleneck / LoRA / IA3 / prefix segments tiling ONE
+unified mask index space — and each profile's k-sparse mask selects across
+segment boundaries. Admission aggregates one per-type aggregate per layer
+(bottleneck/LoRA pairs, an IA3 scale vector, renormalized prefix KV rows);
+decode applies them composed in one compiled program, with prefix rows
+hydrated straight into the paged KV cache so the decode step never grows a
+second trace.
+
+Workload: profiles that span segments, one crafted to select NO prefix
+slot (its prompt must sit at buffer position 0 — bare RoPE phases, not
+just shift-equivalent) and one crafted to always select prefix slots.
+
+Gates (--check):
+
+- parity       engine greedy tokens BITWISE equal a from-scratch dense
+               forward per emitted token, every request (cross-segment
+               aggregation, composed apply, prefix hydration, per-layer
+               prefix skip, per-request buffer offsets — all at once)
+- one trace    the decode step compiled exactly once across the drain
+- prefix split the workload exercised BOTH prefix-on and prefix-off
+               admissions (cache_pos 0 and P in one prefill trace)
+- sparse path  cold admission went k-sparse with > 0 bank bytes/request
+- per-type kernel parity: interpret == ref bitwise on the admitted
+               entries for every residual-path family present
+
+`run_hetero_workload()` is the shared entry point: serve_bench embeds its
+summary into BENCH_serve.json (hetero.* records, gated by check_bench) and
+`make hetero-smoke` runs this file standalone with --check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+BANK_SPEC = (("bottleneck", 4), ("lora", 4), ("ia3", 2), ("prefix", 2))
+NO_PREFIX_PID = 3
+PREFIX_PID = 4
+
+
+def _hetero_cfg(arch: str):
+    from repro.configs import get_config, reduce_for_smoke
+    return reduce_for_smoke(get_config(arch)).with_xpeft(
+        num_adapters=sum(c for _, c in BANK_SPEC), bottleneck=4, k=4,
+        max_profiles=8, bank_spec=BANK_SPEC, prefix_tokens=2)
+
+
+def _crafted_profiles(table, xp):
+    """(no-prefix profile, all-prefix profile): logits pinned so the top-k
+    selection provably avoids / includes the prefix segment."""
+    import jax
+    off = next(o for t, o, c in xp.segments() if t == "prefix")
+    no_pfx = jax.tree.map(lambda t: np.array(t[NO_PREFIX_PID]), table)
+    no_pfx["mA"][:, off:] = -30.0
+    no_pfx["mB"][:, off:] = -30.0
+    with_pfx = jax.tree.map(lambda t: np.array(t[PREFIX_PID]), table)
+    with_pfx["mA"][:, off] = 30.0
+    with_pfx["mB"][:, off + 1] = 30.0
+    return no_pfx, with_pfx
+
+
+def _ref_decode(params, cfg, store, pid, prompt, n):
+    """From-scratch greedy reference: full dense forward per token (the
+    training-path aggregation — per-segment dense weights, composed apply,
+    extra_kv prefix rows)."""
+    import jax.numpy as jnp
+
+    from repro.models import forward, lm_logits
+    wa, wb = store.mask_weights(pid)
+    ln_s, ln_b = store.ln_affines([pid])
+    masks = {"w_a": wa[None], "w_b": wb[None],
+             "ln_scale": ln_s, "ln_bias": ln_b}
+    seq = list(map(int, prompt))
+    out = []
+    for _ in range(n):
+        h, _, _ = forward(params, jnp.asarray([seq]), cfg,
+                          profile_masks=masks)
+        nxt = int(jnp.argmax(lm_logits(params, h[:, -1:], cfg)[0, -1]))
+        out.append(nxt)
+        seq.append(nxt)
+    return out
+
+
+def _per_type_record_bytes(entry, xp):
+    """Admission record bytes by adapter family, from a hydrated cache
+    entry (the typed generalization of the a_hat/b_hat byte accounting)."""
+    from repro.core.xpeft import HETERO_ENTRY_KEYS
+    out = {}
+    for t, _, _ in xp.segments():
+        keys = list(HETERO_ENTRY_KEYS[t])
+        if t == "prefix":
+            keys.append("prefix_skip")
+        out[t] = int(sum(np.asarray(entry[k]).nbytes
+                         for k in keys if k in entry))
+    return out
+
+
+def _kernel_parity(entry, cfg):
+    """interpret vs ref per residual-path family, on the entries the
+    engine actually admitted. LoRA/IA3 compare BITWISE (same contraction
+    order in both impls); bottleneck compares at the suite's established
+    tolerance — its LN reduction order differs between the kernel and the
+    jnp reference (same bound tests/test_kernels.py gates)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    x = jax.random.normal(jax.random.key(7), (2, 8, cfg.d_model),
+                          jnp.float32)
+    a = jnp.stack([entry["a_hat"][0]] * 2)
+    b = jnp.stack([entry["b_hat"][0]] * 2)
+    ls = jnp.stack([entry["ln_scale"][0]] * 2)
+    lb = jnp.stack([entry["ln_bias"][0]] * 2)
+    la = jnp.stack([entry["lora_a"][0]] * 2)
+    lbb = jnp.stack([entry["lora_b"][0]] * 2)
+    s = jnp.stack([entry["ia3_s"][0]] * 2)
+    act = cfg.xpeft.adapter_activation
+    pairs = {
+        "bottleneck": (
+            ops.fused_adapter(x, a, b, ls, lb, activation=act,
+                              impl="interpret"),
+            ops.fused_adapter(x, a, b, ls, lb, activation=act, impl="ref")),
+        "lora": (ops.lora_adapter(x, la, lbb, impl="interpret"),
+                 ops.lora_adapter(x, la, lbb, impl="ref")),
+        "ia3": (ops.ia3_apply(x, s, impl="interpret"),
+                ops.ia3_apply(x, s, impl="ref")),
+    }
+    out = {}
+    for t, (i, r) in pairs.items():
+        i, r = np.asarray(i, np.float32), np.asarray(r, np.float32)
+        out[t] = bool((i == r).all()) if t != "bottleneck" \
+            else bool(np.allclose(i, r, rtol=1e-4, atol=1e-5))
+    return out
+
+
+def run_hetero_workload(arch: str = "qwen1.5-0.5b", *, max_slots: int = 4,
+                        max_seq: int = 64, sync_every: int = 4,
+                        page_size: int = 16, n_reqs: int = 6,
+                        max_new: int = 6, mesh=None) -> dict:
+    """Drain a mixed-type workload through the continuous engine and
+    return the comparison the bench records / gates are built from."""
+    import jax
+
+    from repro.core import xpeft as XP
+    from repro.core.profiles import ProfileStore
+    from repro.models import init_lm
+    from repro.serve.engine import ServeEngine
+    from repro.serve.scheduler import Request
+
+    cfg = _hetero_cfg(arch)
+    xp = cfg.xpeft
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
+                         "hard", xp.k, bank_spec=xp.bank_spec)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(3):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    no_pfx, with_pfx = _crafted_profiles(table, xp)
+    store.add_profile(NO_PREFIX_PID, no_pfx)
+    store.add_profile(PREFIX_PID, with_pfx)
+
+    def make_requests(base_uid):
+        reqs = []
+        for i in range(n_reqs):
+            r = np.random.default_rng(4242 + i)
+            reqs.append(Request(
+                uid=base_uid + i,
+                prompt=r.integers(0, cfg.vocab_size, int(r.integers(4, 9))),
+                profile_id=i % 5, max_new_tokens=max_new))
+        return reqs
+
+    eng = ServeEngine(cfg, params, store, max_slots=max_slots,
+                      max_seq=max_seq, sync_every=sync_every,
+                      continuous=True, page_size=page_size, mesh=mesh)
+    eng.run_until_drained(make_requests(0))     # warmup: compiles the step
+    cold = dict(eng.last_admission or {})
+    timed = make_requests(100)
+    t0 = time.perf_counter()
+    eng.run_until_drained(timed)
+    dt = time.perf_counter() - t0
+    st = eng.serve_stats()
+    eng.page_alloc.check()
+
+    mism = []
+    pfx_on = pfx_off = 0
+    for r in timed:
+        if getattr(r, "prefix_len", 0):
+            pfx_on += 1
+        else:
+            pfx_off += 1
+        exp = _ref_decode(params, cfg, store, int(r.profile_id),
+                          list(r.prompt), len(r.generated))
+        if list(r.generated) != exp:
+            mism.append({"uid": r.uid, "pid": int(r.profile_id),
+                         "got": list(map(int, r.generated)), "want": exp})
+
+    entry = eng.profile_cache.get(0)
+    n_tok = sum(len(r.generated) for r in timed)
+    return {
+        "arch": arch, "bank_spec": [list(s) for s in BANK_SPEC],
+        "requests": n_reqs, "slots": max_slots,
+        "tokens_equal": not mism, "mismatches": mism[:3],
+        "step_traces": st["step_traces"],
+        "prefix_on_requests": pfx_on, "prefix_off_requests": pfx_off,
+        "tokens_per_s": round(n_tok / dt, 1),
+        "admission_path": cold.get("path"),
+        "bank_bytes_per_request": cold.get("bank_bytes_per_request", 0),
+        "record_bytes_per_type": _per_type_record_bytes(entry, xp),
+        "kernel_parity": _kernel_parity(entry, cfg),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless parity + one-trace + prefix-split "
+                    "+ sparse-admission + per-type kernel parity hold")
+    args = ap.parse_args()
+
+    res = run_hetero_workload(args.arch, n_reqs=args.requests)
+    print(json.dumps(res, indent=1))
+    if not args.check:
+        return 0
+    errs = []
+    if not res["tokens_equal"]:
+        errs.append(f"engine tokens != composed dense reference "
+                    f"(first mismatches: {res['mismatches']})")
+    if res["step_traces"] != 1:
+        errs.append(f"hetero decode step traced {res['step_traces']} times")
+    if not res["prefix_on_requests"] or not res["prefix_off_requests"]:
+        errs.append(f"prefix split not exercised (on="
+                    f"{res['prefix_on_requests']}, "
+                    f"off={res['prefix_off_requests']})")
+    if res["admission_path"] != "sparse":
+        errs.append(f"cold admission took the {res['admission_path']!r} "
+                    "path, expected the k-sparse fast path")
+    if res["bank_bytes_per_request"] <= 0:
+        errs.append("cold admission read zero bank bytes per request")
+    for t, nbytes in res["record_bytes_per_type"].items():
+        if nbytes <= 0:
+            errs.append(f"per-type record bytes for {t!r} is {nbytes}")
+    for t, ok in res["kernel_parity"].items():
+        if not ok:
+            errs.append(f"{t}: interpret kernel != ref (bitwise)")
+    if errs:
+        for e in errs:
+            print(f"hetero_smoke: FAIL — {e}")
+        return 1
+    print("hetero_smoke: OK — parity + one trace + prefix split + "
+          "sparse admission + per-type kernel parity")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

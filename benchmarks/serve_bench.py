@@ -325,6 +325,23 @@ def main(smoke: bool = False):
            plain_device_steps=sp["plain"]["device_steps"],
            spec_device_steps=sp["spec"]["device_steps"])
 
+    # ---- heterogeneous adapter-type bank (typed segments, one mask space)
+    # hetero_smoke owns the workload + comparison so `make hetero-smoke`
+    # and these records agree; the crafted no-prefix profile keeps the
+    # prefix-off admission path (buffer offset 0) measured every run
+    from benchmarks.hetero_smoke import run_hetero_workload
+    ht = run_hetero_workload(n_reqs=6)
+    w.emit("hetero.parity", None, tokens_equal=ht["tokens_equal"],
+           requests=ht["requests"], step_traces=ht["step_traces"],
+           prefix_on_requests=ht["prefix_on_requests"],
+           prefix_off_requests=ht["prefix_off_requests"])
+    w.emit("hetero.admission", None, path=ht["admission_path"],
+           bank_bytes_per_request=ht["bank_bytes_per_request"],
+           **{f"record_bytes_{t}": v
+              for t, v in ht["record_bytes_per_type"].items()})
+    w.emit("hetero.kernel_parity", None,
+           **{t: int(ok) for t, ok in ht["kernel_parity"].items()})
+
     # multi-device parity + throughput: subprocess (this process pinned
     # itself to 1 CPU device at first jax use; the smoke forces 8 fake
     # host devices and runs BOTH paths, so the record is self-contained)

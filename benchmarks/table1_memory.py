@@ -82,8 +82,56 @@ def quantized_bank_table():
         < AB.bank_slice_bytes(D, b, itemsize=2)
 
 
+def hetero_record_table():
+    """Per-profile record bytes broken out by adapter FAMILY (ISSUE 9):
+    with a typed bank the resident cost of one admitted profile is no
+    longer a single Â/B̂ pair — each family contributes its own aggregate
+    (bottleneck/LoRA effective pairs, an IA3 scale vector, P prefix KV
+    rows). Measured from an actual sparse aggregation at paper dims, in
+    the fp16 the cache keeps entries in."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import adapters as A
+    from repro.core import xpeft as XP
+    from repro.core.xpeft import HETERO_ENTRY_KEYS
+
+    spec = (("bottleneck", 40), ("lora", 40), ("ia3", 10), ("prefix", 10))
+    cfg = get_config("bert-base-xpeft").with_xpeft(
+        num_adapters=100, bank_spec=spec, prefix_tokens=8)
+    xp = cfg.xpeft
+    bank = A.init_hetero_bank(jax.random.key(0), L, xp, D, cfg.kv_dim,
+                              jnp.float16)
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(np.stack([rng.choice(xp.num_adapters, size=xp.k,
+                                           replace=False)
+                                for _ in range(L)]))
+    w = jnp.full((L, xp.k), 1.0 / xp.k, jnp.float16)
+    entry = XP.precompute_effective_adapters_sparse_hetero(
+        bank, idx, w, idx, w, xp)
+    entry = jax.tree.map(lambda t: np.asarray(t, np.float16), entry)
+
+    print("# Heterogeneous bank — per-profile record bytes by adapter "
+          f"family (d={D} b={xp.bottleneck} L={L} "
+          f"P={xp.prefix_tokens} spec={dict(spec)})")
+    print("family,segment_slots,record_bytes,share")
+    total = sum(int(entry[k].nbytes)
+                for keys in HETERO_ENTRY_KEYS.values() for k in keys
+                if k in entry)
+    for t, _, cnt in xp.segments():
+        byts = sum(int(entry[k].nbytes) for k in HETERO_ENTRY_KEYS[t]
+                   if k in entry)
+        print(f"{t},{cnt},{byts},{byts / total:.1%}")
+        emit(f"table1.hetero_{t}", 0.0, f"record={byts}")
+    print(f"total,{xp.num_adapters},{total},100.0%")
+    # the mask stays ONE 312-byte record regardless of how many families
+    # the unified index space spans — the X-PEFT scaling story is intact
+    assert M.bytes_per_profile(100, L, "hard") == 312
+
+
 def main():
     run(figure1=True)
+    hetero_record_table()
 
 
 if __name__ == "__main__":

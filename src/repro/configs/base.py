@@ -12,6 +12,17 @@ from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
 
+# Adapter families a bank segment can hold (heterogeneous banks): the
+# mask index space is ONE contiguous [0, N) range partitioned into typed
+# segments; a profile's k-sparse mask selects across families and
+# aggregation produces one per-type aggregate per layer.
+ADAPTER_TYPES = ("bottleneck", "lora", "ia3", "prefix")
+
+MASK_TYPES = ("soft", "hard")
+AGGREGATES = ("dense", "sparse")
+BANK_QUANTS = ("none", "int8", "int4")
+
+
 @dataclass(frozen=True)
 class XPeftConfig:
     """The paper's technique as a first-class feature of the framework."""
@@ -40,6 +51,74 @@ class XPeftConfig:
     bank_quant: str = "none"         # "none" | "int8" | "int4"
     quant_group: int = 32            # int4 group-size upper bound (per row)
     max_profiles: int = 1024         # rows in the per-profile mask table
+    # Heterogeneous bank layout: ((type, count), ...) partitioning the N
+    # mask indices into typed segments in order. () means the type-pure
+    # bottleneck bank — the historical layout, bitwise-identical to the
+    # pre-hetero code paths. LoRA pairs share the bottleneck rank (b) so
+    # the k-sparse aggregation kernels are reused row-for-row; IA3 rows
+    # are d-vector scale DELTAS (selected sum s, applied as x * (1 + s));
+    # prefix rows are `prefix_tokens` learned post-RoPE KV positions.
+    bank_spec: Tuple[Tuple[str, int], ...] = ()
+    prefix_tokens: int = 4           # virtual KV tokens per prefix slot
+
+    def __post_init__(self):
+        # normalize bank_spec (lists from JSON/kwargs -> hashable tuples)
+        spec = tuple((str(t), int(c)) for t, c in self.bank_spec)
+        object.__setattr__(self, "bank_spec", spec)
+        if self.mask_type not in MASK_TYPES:
+            raise ValueError(
+                f"mask_type {self.mask_type!r} not in {MASK_TYPES}")
+        if self.aggregate not in AGGREGATES:
+            raise ValueError(
+                f"aggregate {self.aggregate!r} not in {AGGREGATES}")
+        if self.bank_quant not in BANK_QUANTS:
+            raise ValueError(
+                f"bank_quant {self.bank_quant!r} not in {BANK_QUANTS}")
+        if self.k > self.num_adapters:
+            raise ValueError(
+                f"k={self.k} > num_adapters={self.num_adapters}: a hard "
+                "mask cannot select more rows than the bank holds")
+        for t, c in spec:
+            if t not in ADAPTER_TYPES:
+                raise ValueError(
+                    f"bank_spec type {t!r} not in {ADAPTER_TYPES}")
+            if c <= 0:
+                raise ValueError(f"bank_spec count {c} for {t!r} must be "
+                                 "positive")
+        if spec and sum(c for _, c in spec) != self.num_adapters:
+            raise ValueError(
+                f"bank_spec counts {[c for _, c in spec]} sum to "
+                f"{sum(c for _, c in spec)} != num_adapters="
+                f"{self.num_adapters} — segments must tile the mask "
+                "index space exactly")
+
+    def segments(self) -> Tuple[Tuple[str, int, int], ...]:
+        """((type, offset, count), ...) over the unified [0, N) index
+        space; the empty bank_spec resolves to one bottleneck segment."""
+        spec = self.bank_spec or (("bottleneck", self.num_adapters),)
+        out, off = [], 0
+        for t, c in spec:
+            out.append((t, off, c))
+            off += c
+        return tuple(out)
+
+    @property
+    def is_hetero(self) -> bool:
+        """True iff any non-bottleneck segment exists — every hetero code
+        path is gated on this so type-pure configs keep the exact
+        (bitwise) historical code paths."""
+        return any(t != "bottleneck" for t, _ in self.bank_spec)
+
+    @property
+    def has_prefix(self) -> bool:
+        return any(t == "prefix" for t, _ in self.bank_spec)
+
+    def segment_counts(self) -> dict:
+        """{type: total count} over the resolved segments."""
+        out = {}
+        for t, _, c in self.segments():
+            out[t] = out.get(t, 0) + c
+        return out
 
 
 @dataclass(frozen=True)

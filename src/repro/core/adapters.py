@@ -27,6 +27,55 @@ def init_adapter_bank(key, num_layers: int, num_adapters: int, d: int, b: int,
     return {"bank_a": a.astype(dtype), "bank_b": bb.astype(dtype)}
 
 
+def init_hetero_bank(key, num_layers: int, xp, d: int, kv_dim: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Typed-segment bank for a heterogeneous ``bank_spec``.
+
+    One leaf pair/vector per family, each spanning only its segment's
+    rows; the unified mask index space is the ordered concatenation of
+    segments (``xp.segments()``). Per family:
+
+    - bottleneck: ``bank_a [L, N_bn, d, b]`` / ``bank_b [L, N_bn, b, d]``
+      — the historical leaves, same init statistics.
+    - lora: ``lora_a [L, N_lo, d, b]`` / ``lora_b [L, N_lo, b, d]`` —
+      rank r = b (shared with bottleneck so the k-sparse aggregation
+      kernels are reused row-for-row), no LN, no inner activation.
+    - ia3: ``ia3_v [L, N_i3, d]`` — scale DELTAS: the aggregate s is the
+      mask-weighted sum and application is ``x * (1 + s)``, so an empty
+      selection is exactly the identity.
+    - prefix: ``prefix_k`` / ``prefix_v [L, N_pf, P, kv_dim]`` — P =
+      ``xp.prefix_tokens`` learned post-RoPE KV rows per slot (consistent
+      with the cache, which stores keys after rotation).
+    """
+    b = xp.bottleneck
+    keys = iter(jax.random.split(key, 2 * len(xp.segments()) + 1))
+    bank = {}
+    for t, _, cnt in xp.segments():
+        if t == "bottleneck":
+            sub = init_adapter_bank(next(keys), num_layers, cnt, d, b, dtype)
+            bank.update(sub)
+        elif t == "lora":
+            a = jax.random.normal(
+                next(keys), (num_layers, cnt, d, b), jnp.float32)
+            bb = jax.random.normal(
+                next(keys), (num_layers, cnt, b, d), jnp.float32)
+            bank["lora_a"] = (a * (1.0 / jnp.sqrt(d))).astype(dtype)
+            bank["lora_b"] = (bb * 0.02).astype(dtype)
+        elif t == "ia3":
+            v = jax.random.normal(
+                next(keys), (num_layers, cnt, d), jnp.float32)
+            bank["ia3_v"] = (v * 0.02).astype(dtype)
+        elif t == "prefix":
+            P = xp.prefix_tokens
+            pk = jax.random.normal(
+                next(keys), (num_layers, cnt, P, kv_dim), jnp.float32)
+            pv = jax.random.normal(
+                next(keys), (num_layers, cnt, P, kv_dim), jnp.float32)
+            bank["prefix_k"] = (pk * 0.02).astype(dtype)
+            bank["prefix_v"] = (pv * 0.02).astype(dtype)
+    return bank
+
+
 def aggregate_dense(bank_l: dict, w_a, w_b):
     """Dense aggregation for one layer.
 
@@ -80,3 +129,28 @@ def apply_adapter(x, a_hat, b_hat, ln_scale, ln_bias, activation: str = "gelu"):
     else:
         y = jnp.einsum("...tb,...bd->...td", h, b_hat)
     return x + y.astype(x.dtype)
+
+
+def apply_lora(x, a_hat, b_hat):
+    """LoRA delta: x + B̂(Â x) — no LN, no inner activation. Â/B̂ share
+    the bottleneck aggregate's shapes ([d, b]/[b, d], optionally batched),
+    so the fused-adapter kernels serve both via ``use_ln=False`` +
+    identity activation."""
+    if a_hat.ndim == 2:
+        h = jnp.einsum("...td,db->...tb", x, a_hat)
+        y = jnp.einsum("...tb,bd->...td", h, b_hat)
+    else:
+        h = jnp.einsum("...td,...db->...tb", x, a_hat)
+        y = jnp.einsum("...tb,...bd->...td", h, b_hat)
+    return x + y.astype(x.dtype)
+
+
+def apply_ia3(x, s):
+    """IA3 scaling: x * (1 + s) with s the mask-weighted sum of scale
+    DELTAS ([d] or batched [..., d]). Computed in fp32 (matching the
+    kernel in kernels/ia3_apply.py); s == 0 (empty selection, degraded
+    serving) multiplies by exactly 1.0 — bitwise the identity."""
+    if s.ndim > 1:
+        s = s[..., None, :]          # [..., 1, d] broadcast over T
+    y = x.astype(jnp.float32) * (1.0 + s.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -24,12 +24,19 @@ from repro.resilience.integrity import RecordIntegrityError, array_crc, \
 class ProfileStore:
     def __init__(self, num_layers: int, num_adapters: int, bottleneck: int,
                  mask_type: str = "hard", k: int = 50,
-                 quant: str = "none", quant_group: int = 32):
+                 quant: str = "none", quant_group: int = 32,
+                 bank_spec=()):
         self.L = num_layers
         self.N = num_adapters
         self.b = bottleneck
         self.mask_type = mask_type
         self.k = k
+        # Heterogeneous banks: the ((type, count), ...) segment layout of
+        # the unified mask index space these records select over. A record
+        # is meaningless against a bank with a different layout — the same
+        # mask bits would select different adapter families — so the spec
+        # is part of the store's identity (merge/save/load round-trip it).
+        self.bank_spec = tuple((str(t), int(c)) for t, c in bank_spec)
         # quant != "none": graduation may attach the profile's aggregated
         # Â/B̂, persisted QUANTIZED (int8/int4 + fp16 scales) — serving then
         # admits the profile with ZERO bank reads (quant_records hydration)
@@ -274,9 +281,10 @@ class ProfileStore:
         subscribers — a record replaced here may already be cached by a
         serving engine, which must drop its aggregated copy."""
         assert (self.L, self.N, self.b, self.mask_type, self.k,
-                self.quant, self.quant_group) == \
+                self.quant, self.quant_group, self.bank_spec) == \
             (other.L, other.N, other.b, other.mask_type, other.k,
-             other.quant, other.quant_group), "store shape mismatch"
+             other.quant, other.quant_group, other.bank_spec), \
+            "store shape mismatch"
         for pid, rec in other._rec.items():
             if int(pid) in other._quarantined:
                 continue  # never adopt a known-bad record
@@ -313,7 +321,8 @@ class ProfileStore:
                 payload[f"{pid}:{k}"] = v
         meta = dict(L=self.L, N=self.N, b=self.b, mask_type=self.mask_type,
                     k=self.k, quant=self.quant,
-                    quant_group=self.quant_group, pids=saved,
+                    quant_group=self.quant_group,
+                    bank_spec=[list(s) for s in self.bank_spec], pids=saved,
                     crc={str(pid): self._crc.get(pid)
                          or record_crc(self._rec[pid]) for pid in saved})
         # mkstemp with a .npz suffix: np.savez appends ".npz" to names that
@@ -330,7 +339,8 @@ class ProfileStore:
         meta = json.loads(str(z["__meta__"]))
         store = cls(meta["L"], meta["N"], meta["b"], meta["mask_type"],
                     meta["k"], meta.get("quant", "none"),
-                    meta.get("quant_group", 32))
+                    meta.get("quant_group", 32),
+                    bank_spec=meta.get("bank_spec", ()))
         crcs = meta.get("crc", {})
         for pid in meta["pids"]:
             # records carry a variable key set (optional per-profile heads):

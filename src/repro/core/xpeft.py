@@ -18,11 +18,142 @@ def init_xpeft_state(key, cfg) -> dict:
     """Frozen bank + per-profile trainable table for a ModelConfig."""
     xp = cfg.xpeft
     kb, kp = jax.random.split(key)
-    bank = A.init_adapter_bank(kb, cfg.num_layers, xp.num_adapters,
-                               cfg.d_model, xp.bottleneck,
-                               dtype=jnp.dtype(cfg.dtype))
+    if xp.is_hetero:
+        bank = A.init_hetero_bank(kb, cfg.num_layers, xp, cfg.d_model,
+                                  cfg.kv_dim, dtype=jnp.dtype(cfg.dtype))
+    else:
+        bank = A.init_adapter_bank(kb, cfg.num_layers, xp.num_adapters,
+                                   cfg.d_model, xp.bottleneck,
+                                   dtype=jnp.dtype(cfg.dtype))
     table = init_profile_table(kp, cfg)
     return {"bank": bank, "profiles": table}
+
+
+# Entry keys each adapter family contributes to a hydrated (aggregated)
+# profile entry — the typed generalization of the {a_hat, b_hat, ln_*}
+# record. The unified mask still selects over ONE [0, N) index space;
+# these are the per-type AGGREGATES the selection produces.
+HETERO_ENTRY_KEYS = {
+    "bottleneck": ("a_hat", "b_hat", "ln_scale", "ln_bias"),
+    "lora": ("lora_a", "lora_b"),
+    "ia3": ("ia3_s",),
+    "prefix": ("prefix_k", "prefix_v"),
+}
+
+
+def hetero_entry_keys(xp):
+    """Ordered entry keys for the families present in ``xp.bank_spec``."""
+    out = []
+    for t, _, _ in xp.segments():
+        for k in HETERO_ENTRY_KEYS[t]:
+            if k not in out:
+                out.append(k)
+    return tuple(out)
+
+
+def _segment_slice(w, off, cnt):
+    """Static slice of the unified-N weight axis for one segment."""
+    return w[..., off:off + cnt]
+
+
+def _safe_inv(wsum):
+    """0/0-safe renorm factor: 1/wsum where wsum > 0, else 0.
+
+    Double-where, not ``1/maximum(wsum, eps)``: the derivative of that
+    form at wsum = 0 is -1/eps^2, which overflows float32 to inf, and the
+    zero cotangent the unselected where-branch receives turns 0·inf into
+    NaN — poisoning the whole mask-logit gradient row whenever a training
+    example's masks select no prefix slot at some layer."""
+    safe = jnp.where(wsum > 0, wsum, 1.0)
+    return jnp.where(wsum > 0, 1.0 / safe, 0.0)
+
+
+def hetero_aggregate_dense_layer(bank_l: dict, w_a_l, w_b_l, xp):
+    """One layer's per-type aggregates from DENSE unified-space weights.
+
+    bank_l holds the layer-l slices of the typed bank leaves; w_*_l are
+    [..., N] over the unified index space. Per family:
+
+    - bottleneck/lora: Â from the A-mask, B̂ from the B-mask (the paper's
+      two-sided selection, per side).
+    - ia3: BOTH masks contribute — s = Σ (w_a + w_b)[i] · v[i] (a scale
+      delta has no A/B sidedness).
+    - prefix: renormalized convex mixture — rows = Σ (w_a+w_b)[i]·rows[i]
+      / Σ (w_a+w_b)[i], 0/0 -> zero rows (KV rows are not residual
+      deltas; an unnormalized sum would shrink every key toward zero).
+
+    Returns {type: aggregate(s)} for the segments present.
+    """
+    out = {}
+    for t, off, cnt in xp.segments():
+        wa = _segment_slice(w_a_l, off, cnt).astype(jnp.float32)
+        wb = _segment_slice(w_b_l, off, cnt).astype(jnp.float32)
+        if t == "bottleneck":
+            a_hat, b_hat = A.aggregate_dense(
+                {"bank_a": bank_l["bank_a"], "bank_b": bank_l["bank_b"]},
+                wa, wb)
+            out["bottleneck"] = (a_hat, b_hat)
+        elif t == "lora":
+            a_hat, b_hat = A.aggregate_dense(
+                {"bank_a": bank_l["lora_a"], "bank_b": bank_l["lora_b"]},
+                wa, wb)
+            out["lora"] = (a_hat, b_hat)
+        elif t == "ia3":
+            v = bank_l["ia3_v"].astype(jnp.float32)
+            out["ia3"] = jnp.einsum("...n,nd->...d", wa + wb, v)
+        elif t == "prefix":
+            pk = bank_l["prefix_k"].astype(jnp.float32)
+            pv = bank_l["prefix_v"].astype(jnp.float32)
+            wab = wa + wb
+            num_k = jnp.einsum("...n,npq->...pq", wab, pk)
+            num_v = jnp.einsum("...n,npq->...pq", wab, pv)
+            wsum = wab.sum(-1)
+            inv = _safe_inv(wsum)[..., None, None]
+            out["prefix"] = (num_k * inv, num_v * inv)
+    return out
+
+
+def precompute_effective_adapters_hetero(bank: dict, profile_params: dict,
+                                         xp):
+    """Dense admission-time aggregation for a heterogeneous bank (single
+    profile): the typed twin of ``precompute_effective_adapters``.
+    Returns the ``hetero_entry_keys(xp)`` dict with [L, ...] leaves."""
+    w_a, w_b = profile_mask_weights(profile_params, xp, training=False)
+    out = {}
+    for t, off, cnt in xp.segments():
+        wa = w_a[..., off:off + cnt].astype(jnp.float32)
+        wb = w_b[..., off:off + cnt].astype(jnp.float32)
+        if t == "bottleneck":
+            a32 = bank["bank_a"].astype(jnp.float32)
+            b32 = bank["bank_b"].astype(jnp.float32)
+            out["a_hat"] = jnp.einsum("ln,lndb->ldb", wa, a32).astype(
+                bank["bank_a"].dtype)
+            out["b_hat"] = jnp.einsum("ln,lnbd->lbd", wb, b32).astype(
+                bank["bank_b"].dtype)
+            out["ln_scale"] = profile_params["ln_scale"]
+            out["ln_bias"] = profile_params["ln_bias"]
+        elif t == "lora":
+            a32 = bank["lora_a"].astype(jnp.float32)
+            b32 = bank["lora_b"].astype(jnp.float32)
+            out["lora_a"] = jnp.einsum("ln,lndb->ldb", wa, a32).astype(
+                bank["lora_a"].dtype)
+            out["lora_b"] = jnp.einsum("ln,lnbd->lbd", wb, b32).astype(
+                bank["lora_b"].dtype)
+        elif t == "ia3":
+            v32 = bank["ia3_v"].astype(jnp.float32)
+            out["ia3_s"] = jnp.einsum("ln,lnd->ld", wa + wb, v32).astype(
+                bank["ia3_v"].dtype)
+        elif t == "prefix":
+            pk = bank["prefix_k"].astype(jnp.float32)
+            pv = bank["prefix_v"].astype(jnp.float32)
+            wab = wa + wb
+            num_k = jnp.einsum("ln,lnpq->lpq", wab, pk)
+            num_v = jnp.einsum("ln,lnpq->lpq", wab, pv)
+            wsum = wab.sum(-1)
+            inv = _safe_inv(wsum)[:, None, None]
+            out["prefix_k"] = (num_k * inv).astype(bank["prefix_k"].dtype)
+            out["prefix_v"] = (num_v * inv).astype(bank["prefix_v"].dtype)
+    return out
 
 
 def init_profile_table(key, cfg) -> dict:
@@ -70,6 +201,53 @@ def apply_xpeft_layer_sparse(x, bank_l: dict, idx_a_l, w_a_l, idx_b_l, w_b_l,
     a_hat, b_hat = A.aggregate_sparse(bank_l, idx_a_l, w_a_l, idx_b_l, w_b_l)
     return A.apply_adapter(x, a_hat, b_hat, ln_scale_l, ln_bias_l,
                            activation=xp.adapter_activation)
+
+
+def apply_xpeft_layer_hetero(x, bank_l: dict, w_a_l, w_b_l, ln_scale_l,
+                             ln_bias_l, xp):
+    """Dense heterogeneous layer application (training / soft masks):
+    aggregate each typed segment from the unified-space weights and apply
+    in the fixed order bottleneck -> LoRA -> IA3. Prefix rows are NOT
+    applied here — they are KV rows, threaded into attention by the model
+    body (``prefix_rows_dense_layer``)."""
+    agg = hetero_aggregate_dense_layer(bank_l, w_a_l, w_b_l, xp)
+    if "bottleneck" in agg:
+        a_hat, b_hat = agg["bottleneck"]
+        x = A.apply_adapter(x, a_hat, b_hat, ln_scale_l, ln_bias_l,
+                            activation=xp.adapter_activation)
+    if "lora" in agg:
+        la, lb = agg["lora"]
+        x = A.apply_lora(x, la.astype(x.dtype), lb.astype(x.dtype))
+    if "ia3" in agg:
+        x = A.apply_ia3(x, agg["ia3"])
+    return x
+
+
+def prefix_rows_dense_layer(bank_l: dict, w_a_l, w_b_l, xp, kv_heads: int,
+                            head_dim: int):
+    """One layer's per-example prefix KV rows from dense unified-space
+    weights: returns ``(pk [B, P, KV, hd], pv, pvalid [B])`` for
+    attention's ``extra_kv``, or None when the spec has no prefix
+    segment. pvalid is False where the example's masks select no prefix
+    slot at this layer — attention then masks the rows out entirely, so
+    a no-prefix selection stays bitwise the bare sequence."""
+    seg = next(((off, cnt) for t, off, cnt in xp.segments()
+                if t == "prefix"), None)
+    if seg is None:
+        return None
+    off, cnt = seg
+    wa = w_a_l[..., off:off + cnt].astype(jnp.float32)
+    wb = w_b_l[..., off:off + cnt].astype(jnp.float32)
+    wab = wa + wb                                       # [B, cnt]
+    pk = bank_l["prefix_k"].astype(jnp.float32)         # [cnt, P, kv]
+    pv = bank_l["prefix_v"].astype(jnp.float32)
+    num_k = jnp.einsum("...n,npq->...pq", wab, pk)
+    num_v = jnp.einsum("...n,npq->...pq", wab, pv)
+    wsum = wab.sum(-1)                                  # [B]
+    inv = _safe_inv(wsum)[..., None, None]
+    shape = num_k.shape[:-1] + (kv_heads, head_dim)
+    return ((num_k * inv).reshape(shape), (num_v * inv).reshape(shape),
+            wsum > 0)
 
 
 def precompute_effective_adapters(bank: dict, profile_params: dict, xp):
@@ -136,6 +314,81 @@ def precompute_effective_adapters_sparse(bank: dict, idx_a, w_a, idx_b, w_b,
     dt = bank["bank_a"].dtype
     return (a_hat.reshape(*batch, L, d, b).astype(dt),
             b_hat.reshape(*batch, L, b, d).astype(dt))
+
+
+def _sparse_fold(leaf, idx, w, xp):
+    """Layer-folded k-sparse aggregation of one typed leaf.
+
+    leaf [L, C, p, q]; idx/w [..., L, k] with idx LOCAL to the segment
+    (weights of out-of-segment selections already zeroed) -> [..., L, p, q]
+    fp32, via ONE batched mask_aggregate launch of R·L rows — the same
+    layer-folding trick as precompute_effective_adapters_sparse."""
+    from repro.kernels import ops
+
+    L, C, p, q = leaf.shape
+    batch = idx.shape[:-2]
+    k = idx.shape[-1]
+    flat = leaf.reshape(L * C, p, q)
+    off = (jnp.arange(L, dtype=jnp.int32) * C)[:, None]
+    fi = (idx.astype(jnp.int32) + off).reshape(-1, k)
+    fw = w.astype(jnp.float32).reshape(-1, k)
+    out = ops.mask_aggregate_batched(flat, fi, fw, impl=xp.kernel_impl)
+    return out.reshape(*batch, L, p, q)
+
+
+def _segment_bucket(idx, w, off, cnt):
+    """Fixed-shape bucketing of unified-space indices into one segment:
+    indices outside [off, off+cnt) clamp to a valid local row and their
+    weights zero out (0 * finite row == exact 0 in the fp32 accumulator),
+    so every segment runs at the full static k width — one trace, no
+    data-dependent shapes."""
+    in_seg = (idx >= off) & (idx < off + cnt)
+    local = jnp.clip(idx - off, 0, cnt - 1).astype(jnp.int32)
+    return local, w.astype(jnp.float32) * in_seg
+
+
+def precompute_effective_adapters_sparse_hetero(bank: dict, idx_a, w_a,
+                                                idx_b, w_b, xp):
+    """k-sparse admission aggregation for a heterogeneous bank.
+
+    idx_*/w_*: [..., L, k] over the UNIFIED index space. Each typed
+    segment buckets the k selections with ``_segment_bucket`` and runs the
+    SAME batched aggregation kernels at full k width, so a mixed-type
+    k-sparse aggregation is exactly the sum of per-type dense
+    aggregations (the property the fuzz test pins down). Returns the
+    per-type aggregates (no ln affines — the caller attaches the
+    profile's own); bottleneck/LoRA sides follow their masks, IA3 and
+    prefix take contributions from BOTH masks, prefix renormalized to a
+    convex mixture (0/0 -> zero rows)."""
+    out = {}
+    for t, off, cnt in xp.segments():
+        la, wa = _segment_bucket(idx_a, w_a, off, cnt)
+        lb, wb = _segment_bucket(idx_b, w_b, off, cnt)
+        if t in ("bottleneck", "lora"):
+            names = ("bank_a", "bank_b") if t == "bottleneck" else \
+                ("lora_a", "lora_b")
+            sub = {"bank_a": bank[names[0]], "bank_b": bank[names[1]]}
+            a_hat, b_hat = precompute_effective_adapters_sparse(
+                sub, la, wa, lb, wb, xp)
+            if t == "bottleneck":
+                out["a_hat"], out["b_hat"] = a_hat, b_hat
+            else:
+                out["lora_a"], out["lora_b"] = a_hat, b_hat
+        elif t == "ia3":
+            v = bank["ia3_v"][..., None]                   # [L, C, d, 1]
+            s = _sparse_fold(v, la, wa, xp) + _sparse_fold(v, lb, wb, xp)
+            out["ia3_s"] = s[..., 0].astype(bank["ia3_v"].dtype)
+        elif t == "prefix":
+            num_k = _sparse_fold(bank["prefix_k"], la, wa, xp) + \
+                _sparse_fold(bank["prefix_k"], lb, wb, xp)
+            num_v = _sparse_fold(bank["prefix_v"], la, wa, xp) + \
+                _sparse_fold(bank["prefix_v"], lb, wb, xp)
+            wsum = wa.sum(-1) + wb.sum(-1)                 # [..., L]
+            inv = _safe_inv(wsum)[..., None, None]
+            dt = bank["prefix_k"].dtype
+            out["prefix_k"] = (num_k * inv).astype(dt)
+            out["prefix_v"] = (num_v * inv).astype(dt)
+    return out
 
 
 def precompute_effective_adapters_sparse_quant(qbank: dict, idx_a, w_a,

@@ -62,6 +62,16 @@ _rule("ew_d", "expert", "mlp_fsdp", None)
 # X-PEFT adapter bank [L, N, d, b] / [L, N, b, d]: d_model TP-sharded
 _rule("bank_a", "adapter_n", "tp_d", None)
 _rule("bank_b", "adapter_n", None, "tp_d")
+# heterogeneous bank segments: LoRA pairs share the bottleneck bank's
+# layout exactly (A [L, cnt, d, r], B [L, cnt, r, d]) so they keep bank
+# TP on d_model; IA3 scale vectors [L, cnt, d] and prefix KV rows
+# [L, cnt, P, kv_dim] are tiny — replicate them (explicit all-None rules
+# so mesh parity is a declared contract, not fsdp-matcher fallthrough)
+_rule("lora_a", "adapter_n", "tp_d", None)
+_rule("lora_b", "adapter_n", None, "tp_d")
+_rule("ia3_v", "adapter_n", None)
+_rule("prefix_k", "adapter_n", None, None)
+_rule("prefix_v", "adapter_n", None, None)
 # quantized bank (quant/schemes.quantize_bank): the q payloads keep the
 # bf16 bank's layout (int4 packs the LAST axis, which is never the
 # TP-sharded d_model dim for bank_a and stays divisibility-guarded for
@@ -74,6 +84,13 @@ _rule("bank_a_scale", "adapter_n", "tp_d", ndim=3)
 _rule("bank_a_scale", "adapter_n", "tp_d", None, ndim=4)
 _rule("bank_b_scale", "adapter_n", None, ndim=3)
 _rule("bank_b_scale", "adapter_n", None, "tp_d", ndim=4)
+# quantized LoRA segments ride the same layout as the bottleneck bank
+_rule("lora_a_q", "adapter_n", "tp_d", None)
+_rule("lora_b_q", "adapter_n", None, "tp_d")
+_rule("lora_a_scale", "adapter_n", "tp_d", ndim=3)
+_rule("lora_a_scale", "adapter_n", "tp_d", None, ndim=4)
+_rule("lora_b_scale", "adapter_n", None, ndim=3)
+_rule("lora_b_scale", "adapter_n", None, "tp_d", ndim=4)
 # rwkv (2D projections over flattened heads)
 _rule("rwr", None, "tp_d")
 _rule("rwk", None, "tp_d")

@@ -23,13 +23,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, a_ref, b_ref, ls_ref, lb_ref, o_ref, *, activation, eps):
+def _kernel(x_ref, a_ref, b_ref, ls_ref, lb_ref, o_ref, *, activation, eps,
+            use_ln):
     x = x_ref[...]
     h = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
-    mu = jnp.mean(h, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
-    h = (h - mu) * jax.lax.rsqrt(var + eps)
-    h = h * ls_ref[...].astype(jnp.float32) + lb_ref[...].astype(jnp.float32)
+    if use_ln:
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + eps)
+        h = h * ls_ref[...].astype(jnp.float32) + \
+            lb_ref[...].astype(jnp.float32)
     if activation == "gelu":
         h = jax.nn.gelu(h)
     y = jnp.dot(h.astype(x.dtype), b_ref[...],
@@ -38,17 +41,20 @@ def _kernel(x_ref, a_ref, b_ref, ls_ref, lb_ref, o_ref, *, activation, eps):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("activation", "block_t", "interpret"))
+                   static_argnames=("activation", "block_t", "interpret",
+                                    "use_ln"))
 def fused_adapter(x, a_hat, b_hat, ln_scale, ln_bias, *,
                   activation: str = "gelu", block_t: int = 256,
-                  interpret: bool = False):
-    """x [T, d], a_hat [d, b], b_hat [b, d], ln_* [b] -> [T, d]."""
+                  interpret: bool = False, use_ln: bool = True):
+    """x [T, d], a_hat [d, b], b_hat [b, d], ln_* [b] -> [T, d].
+    ``use_ln=False`` skips LN-after-down-proj (the LoRA route)."""
     T, d = x.shape
     b = a_hat.shape[1]
     block_t = min(block_t, T)
     assert T % block_t == 0, (T, block_t)
 
-    kernel = functools.partial(_kernel, activation=activation, eps=1e-6)
+    kernel = functools.partial(_kernel, activation=activation, eps=1e-6,
+                               use_ln=use_ln)
     return pl.pallas_call(
         kernel,
         grid=(T // block_t,),

@@ -35,13 +35,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, a_ref, b_ref, ls_ref, lb_ref, o_ref, *, activation, eps):
+def _kernel(x_ref, a_ref, b_ref, ls_ref, lb_ref, o_ref, *, activation, eps,
+            use_ln):
     x = x_ref[0]                                            # [block_t, d]
     h = jnp.dot(x, a_ref[0], preferred_element_type=jnp.float32)
-    mu = jnp.mean(h, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
-    h = (h - mu) * jax.lax.rsqrt(var + eps)
-    h = h * ls_ref[0].astype(jnp.float32) + lb_ref[0].astype(jnp.float32)
+    if use_ln:
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + eps)
+        h = h * ls_ref[0].astype(jnp.float32) + \
+            lb_ref[0].astype(jnp.float32)
     if activation == "gelu":
         h = jax.nn.gelu(h)
     y = jnp.dot(h.astype(x.dtype), b_ref[0],
@@ -57,12 +60,15 @@ def _pick_block_t(T: int, block_t: int) -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("activation", "block_t", "interpret"))
+                   static_argnames=("activation", "block_t", "interpret",
+                                    "use_ln"))
 def fused_adapter_batched(x, a_hat, b_hat, ln_scale, ln_bias, *,
                           activation: str = "gelu", block_t: int = 256,
-                          interpret: bool = False):
+                          interpret: bool = False, use_ln: bool = True):
     """x [B, T, d]; a_hat [B, d, b] or [d, b] (shared); b_hat [B, b, d] or
-    [b, d]; ln_* [B, b] or [b] -> [B, T, d]."""
+    [b, d]; ln_* [B, b] or [b] -> [B, T, d]. ``use_ln=False`` skips the
+    LN-after-down-proj (the LoRA route: identity activation + no LN turns
+    the bottleneck kernel into x + B̂Âx)."""
     B, T, d = x.shape
     b = a_hat.shape[-1]
     block_t = _pick_block_t(T, block_t)
@@ -78,7 +84,8 @@ def fused_adapter_batched(x, a_hat, b_hat, ln_scale, ln_bias, *,
     row_l = (lambda bi, ti: (0, 0)) if shared_ln else \
         (lambda bi, ti: (bi, 0))
 
-    kernel = functools.partial(_kernel, activation=activation, eps=1e-6)
+    kernel = functools.partial(_kernel, activation=activation, eps=1e-6,
+                               use_ln=use_ln)
     return pl.pallas_call(
         kernel,
         grid=(B, T // block_t),

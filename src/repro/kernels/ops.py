@@ -82,25 +82,60 @@ def mask_aggregate_batched(bank, idx, w, *, impl: str = "auto"):
 
 
 def fused_adapter(x, a_hat, b_hat, ln_scale, ln_bias, *,
-                  activation: str = "gelu", impl: str = "auto"):
+                  activation: str = "gelu", impl: str = "auto",
+                  use_ln: bool = True):
     """Fused bottleneck adapter: y = x + B̂(act(LN(Â x))).
 
     x [T,d] with a_hat [d,b], or x [B,T,d] with per-row a_hat [B,d,b]
     (b_hat/ln_* likewise; 2-D adapter args broadcast across the batch).
+    ``use_ln=False`` + ``activation="identity"`` is the LoRA route
+    (y = x + B̂Âx) — same kernels, the LN block compiled out.
     """
     impl = resolve_impl(impl)
     if x.ndim == 3:
         if impl == "ref":
             return ref.fused_adapter_batched_ref(
-                x, a_hat, b_hat, ln_scale, ln_bias, activation=activation)
+                x, a_hat, b_hat, ln_scale, ln_bias, activation=activation,
+                use_ln=use_ln)
         return _fused_pallas_batched(x, a_hat, b_hat, ln_scale, ln_bias,
-                                     activation=activation,
+                                     activation=activation, use_ln=use_ln,
                                      interpret=impl == "interpret")
     if impl == "ref":
         return ref.fused_adapter_ref(x, a_hat, b_hat, ln_scale, ln_bias,
-                                     activation=activation)
+                                     activation=activation, use_ln=use_ln)
     return _fused_pallas(x, a_hat, b_hat, ln_scale, ln_bias,
-                         activation=activation, interpret=impl == "interpret")
+                         activation=activation, use_ln=use_ln,
+                         interpret=impl == "interpret")
+
+
+def lora_adapter(x, a_hat, b_hat, *, impl: str = "auto"):
+    """LoRA route: y = x + B̂Âx — the fused bottleneck kernels with the
+    LN skipped and identity activation. Â/B̂ share the bottleneck
+    aggregate shapes (rank r = b), so aggregation AND application reuse
+    the same kernels row-for-row. ln args are dummies the kernel never
+    reads (shapes must still tile)."""
+    b = a_hat.shape[-1]
+    lead = a_hat.shape[:-2]
+    ones = jnp.ones(lead + (b,), x.dtype)
+    zeros = jnp.zeros(lead + (b,), x.dtype)
+    return fused_adapter(x, a_hat, b_hat, ones, zeros,
+                         activation="identity", impl=impl, use_ln=False)
+
+
+def ia3_apply(x, s, *, impl: str = "auto"):
+    """IA3 fused scaling: y = x * (1 + s), s the aggregated scale-delta
+    vector ([d] shared or [B, d] per-row); x [B,T,d] or [T,d]."""
+    from repro.kernels.ia3_apply import ia3_apply_batched as _ia3_pallas
+
+    impl = resolve_impl(impl)
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    if impl == "ref":
+        out = ref.ia3_apply_batched_ref(x, s)
+    else:
+        out = _ia3_pallas(x, s, interpret=impl == "interpret")
+    return out[0] if squeeze else out
 
 
 def decode_block_fused(x, pos, block, k_cache, v_cache, masks_l, *,

@@ -15,21 +15,33 @@ def mask_aggregate_ref(bank, idx, w):
 
 
 def fused_adapter_ref(x, a_hat, b_hat, ln_scale, ln_bias, *,
-                      activation: str = "gelu", eps: float = 1e-6):
+                      activation: str = "gelu", eps: float = 1e-6,
+                      use_ln: bool = True):
     """x [T, d], a_hat [d, b], b_hat [b, d] -> [T, d].
 
     y = x + B̂(act(LN(Â x)))  — the X-PEFT bottleneck with the paper's
-    LN-after-down-proj, fp32 internals.
+    LN-after-down-proj, fp32 internals. ``use_ln=False`` + identity
+    activation is the LoRA route: y = x + B̂Âx.
     """
     h = jnp.dot(x.astype(jnp.float32), a_hat.astype(jnp.float32))
-    mu = h.mean(-1, keepdims=True)
-    var = h.var(-1, keepdims=True)
-    h = (h - mu) * jax.lax.rsqrt(var + eps)
-    h = h * ln_scale.astype(jnp.float32) + ln_bias.astype(jnp.float32)
+    if use_ln:
+        mu = h.mean(-1, keepdims=True)
+        var = h.var(-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + eps)
+        h = h * ln_scale.astype(jnp.float32) + ln_bias.astype(jnp.float32)
     if activation == "gelu":
         h = jax.nn.gelu(h)
     y = jnp.dot(h, b_hat.astype(jnp.float32))
     return (x.astype(jnp.float32) + y).astype(x.dtype)
+
+
+def ia3_apply_batched_ref(x, s):
+    """x [B, T, d]; s [B, d] or [d] (shared) -> x * (1 + s), fp32 compute
+    — the oracle twin of kernels/ia3_apply.py. s == 0 is bitwise x."""
+    if s.ndim == 2:
+        s = s[:, None, :]
+    y = x.astype(jnp.float32) * (1.0 + s.astype(jnp.float32))
+    return y.astype(x.dtype)
 
 
 def mask_aggregate_quant_batched_ref(q, scale, idx, w, *, scheme: str):
@@ -114,9 +126,11 @@ def mask_aggregate_batched_ref(bank, idx, w):
 
 
 def fused_adapter_batched_ref(x, a_hat, b_hat, ln_scale, ln_bias, *,
-                              activation: str = "gelu", eps: float = 1e-6):
+                              activation: str = "gelu", eps: float = 1e-6,
+                              use_ln: bool = True):
     """x [B, T, d]; a_hat [B, d, b] or [d, b] (shared across the batch);
-    ln_* [B, b] or [b] -> [B, T, d]. Batched twin of fused_adapter_ref."""
+    ln_* [B, b] or [b] -> [B, T, d]. Batched twin of fused_adapter_ref;
+    ``use_ln=False`` is the LoRA route."""
     x32 = x.astype(jnp.float32)
     a32 = a_hat.astype(jnp.float32)
     b32 = b_hat.astype(jnp.float32)
@@ -124,14 +138,15 @@ def fused_adapter_batched_ref(x, a_hat, b_hat, ln_scale, ln_bias, *,
         h = x32 @ a32
     else:
         h = jnp.einsum("btd,bdc->btc", x32, a32)
-    mu = h.mean(-1, keepdims=True)
-    var = h.var(-1, keepdims=True)
-    h = (h - mu) * jax.lax.rsqrt(var + eps)
-    ls = ln_scale.astype(jnp.float32)
-    lb = ln_bias.astype(jnp.float32)
-    if ls.ndim == 2:
-        ls, lb = ls[:, None, :], lb[:, None, :]
-    h = h * ls + lb
+    if use_ln:
+        mu = h.mean(-1, keepdims=True)
+        var = h.var(-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + eps)
+        ls = ln_scale.astype(jnp.float32)
+        lb = ln_bias.astype(jnp.float32)
+        if ls.ndim == 2:
+            ls, lb = ls[:, None, :], lb[:, None, :]
+        h = h * ls + lb
     if activation == "gelu":
         h = jax.nn.gelu(h)
     if b_hat.ndim == 2:

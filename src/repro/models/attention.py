@@ -34,11 +34,23 @@ def init_attention(key, cfg, dtype) -> dict:
     return p
 
 
-def _mask(q_pos, k_pos, *, causal, window, kv_valid):
-    """q_pos [B,Tq], k_pos [S], kv_valid [B] -> bool [B,Tq,S]."""
+def _mask(q_pos, k_pos, *, causal, window, kv_valid, front_skip=None,
+          k_idx=None):
+    """q_pos [B,Tq], k_pos [S] or [B,S], kv_valid [B] -> bool [B,Tq,S].
+
+    ``front_skip [B]`` masks the first ``front_skip[b]`` key BUFFER slots —
+    per-example gating of learned prefix KV rows concatenated at the
+    front (an example whose profile selects no prefix slot must attend
+    EXACTLY the bare sequence, not P zero rows diluting the softmax).
+    When k_pos is per-example [B,S] (prefix path: positions differ per
+    example), ``k_idx [S]`` carries the buffer-slot index that kv_valid
+    and front_skip gate on; positional masks use k_pos."""
     qp = q_pos[:, :, None]
-    kp = k_pos[None, None, :]
-    m = kp < jnp.reshape(kv_valid, (-1, 1, 1))
+    kp = k_pos[None, None, :] if k_pos.ndim == 1 else k_pos[:, None, :]
+    ki = kp if k_idx is None else k_idx[None, None, :]
+    m = ki < jnp.reshape(kv_valid, (-1, 1, 1))
+    if front_skip is not None:
+        m = m & (ki >= jnp.reshape(front_skip, (-1, 1, 1)))
     if causal:
         m = m & (kp <= qp)
     if window is not None:
@@ -109,11 +121,27 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, kv_valid, scale,
 
 
 def attention(params, x, *, positions, cfg, cache=None, cache_pos=None,
-              is_global=True, q_chunk=512, k_chunk=1024):
+              is_global=True, q_chunk=512, k_chunk=1024, extra_kv=None,
+              front_skip=None):
     """x [B,T,d] -> (y [B,T,d], new_cache).
 
     cache: {"k","v": [B, S, KV, hd]} functional KV cache; cache_pos: scalar
     write offset. Without a cache, keys=queries (self-attention).
+
+    front_skip: optional [B] int32 — mask the first ``front_skip[b]`` KEY
+    buffer slots in the cached path (serving over hydrated prefix KV rows:
+    a layer whose profile selected no prefix slot holds zero rows at
+    [0, P) that must not dilute the softmax). The no-cache prefix path
+    sets this internally from ``extra_kv``'s pvalid.
+
+    extra_kv: optional ``(pk [B,P,KV,hd], pv [B,P,KV,hd], pvalid [B])`` —
+    learned PREFIX KV rows (stored post-RoPE; concatenated un-rotated at
+    the front of the no-cache key/value sequence). The caller passes
+    ``positions`` already offset by P so prefix rows sit at positions
+    [0, P) and the prompt starts at P; ``pvalid=False`` examples mask the
+    prefix region out entirely (bitwise the bare sequence). Serving never
+    uses this — the engine hydrates prefix rows straight into the KV
+    cache before prefill, so cached decode stays one compiled program.
     """
     B, T, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -142,6 +170,7 @@ def attention(params, x, *, positions, cfg, cache=None, cache_pos=None,
         # rule (no-op otherwise; K/V-seq CP carries the TP by default)
         q = ctx.hint(q, "batch", "q_seq", None, None)
 
+    k_idx = None
     if cache is not None:
         if jnp.ndim(cache_pos) == 0:
             ck = jax.lax.dynamic_update_slice_in_dim(
@@ -164,6 +193,22 @@ def attention(params, x, *, positions, cfg, cache=None, cache_pos=None,
         S = ck.shape[1]
         kv_valid = jnp.broadcast_to(cache_pos + T, (B,))
         k_pos = jnp.arange(S)
+    elif extra_kv is not None:
+        pk, pv, pvalid = extra_kv
+        P = pk.shape[1]
+        new_cache = None
+        keys = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        vals = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        S = P + T
+        kv_valid = jnp.full((B,), P + T, jnp.int32)
+        # per-example key positions: prefix rows at [0, P), self keys at
+        # the example's own (possibly unshifted) query positions
+        k_pos = jnp.concatenate([
+            jnp.broadcast_to(
+                jnp.arange(P, dtype=positions.dtype)[None], (B, P)),
+            positions], axis=1)
+        k_idx = jnp.arange(P + T)
+        front_skip = jnp.where(pvalid, 0, P).astype(jnp.int32)
     else:
         new_cache = None
         keys, vals = k, v
@@ -187,7 +232,7 @@ def attention(params, x, *, positions, cfg, cache=None, cache_pos=None,
 
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     use_chunked = (T > q_chunk) and (T % q_chunk == 0) and (S % k_chunk == 0)
-    if use_chunked:
+    if use_chunked and front_skip is None:
         out = _sdpa_chunked(qg, keys, vals, positions, k_pos,
                             causal=cfg.causal, window=window,
                             kv_valid=kv_valid, scale=scale,
@@ -195,7 +240,7 @@ def attention(params, x, *, positions, cfg, cache=None, cache_pos=None,
                             q_chunk=q_chunk, k_chunk=k_chunk)
     else:
         msk = _mask(positions, k_pos, causal=cfg.causal, window=window,
-                    kv_valid=kv_valid)
+                    kv_valid=kv_valid, front_skip=front_skip, k_idx=k_idx)
         out = _sdpa_dense(qg, keys, vals, msk, scale, cfg.logit_softcap)
 
     out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)

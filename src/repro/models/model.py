@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import xpeft as XP
-from repro.core.adapters import init_adapter_bank
+from repro.core.adapters import init_adapter_bank, init_hetero_bank
 from repro.distributed import ctx
 from repro.models import attention as ATT
 from repro.models import mamba as MB
@@ -88,9 +88,14 @@ def init_lm(key, cfg) -> dict:
             "head_b": jnp.zeros((cfg.num_labels,), jnp.float32),
         }
     if cfg.xpeft.enabled:
-        params["xpeft_bank"] = init_adapter_bank(
-            keys[7], cfg.num_layers, cfg.xpeft.num_adapters, cfg.d_model,
-            cfg.xpeft.bottleneck, dtype)
+        if cfg.xpeft.is_hetero:
+            params["xpeft_bank"] = init_hetero_bank(
+                keys[7], cfg.num_layers, cfg.xpeft, cfg.d_model, cfg.kv_dim,
+                dtype)
+        else:
+            params["xpeft_bank"] = init_adapter_bank(
+                keys[7], cfg.num_layers, cfg.xpeft.num_adapters, cfg.d_model,
+                cfg.xpeft.bottleneck, dtype)
     return params
 
 
@@ -149,16 +154,32 @@ def _xpeft_apply(x, bank_l, masks_l, cfg):
             scheme=cfg.xpeft.bank_quant,
             activation=cfg.xpeft.adapter_activation,
             impl=cfg.xpeft.kernel_impl)
-    if "a_hat" in masks_l:
+    if "a_hat" in masks_l or "lora_a" in masks_l or "ia3_s" in masks_l:
         # admission-time aggregated adapters (serving fast path): per-example
         # Â [B,d,b] / B̂ [B,b,d] already contracted against the bank. Routed
         # through the kernel dispatch layer — on TPU one batched Pallas
         # launch keeps the [T,b] intermediate in VMEM (no HBM round-trip).
+        # Heterogeneous entries compose in the fixed per-layer order
+        # bottleneck -> LoRA -> IA3 (prefix rows live in the KV cache, not
+        # here); a type-pure entry carries only a_hat/b_hat and this is
+        # exactly the historical single fused_adapter call.
         from repro.kernels import ops
-        return ops.fused_adapter(x, masks_l["a_hat"], masks_l["b_hat"],
-                                 masks_l["ln_scale"], masks_l["ln_bias"],
-                                 activation=cfg.xpeft.adapter_activation,
+        if "a_hat" in masks_l:
+            x = ops.fused_adapter(x, masks_l["a_hat"], masks_l["b_hat"],
+                                  masks_l["ln_scale"], masks_l["ln_bias"],
+                                  activation=cfg.xpeft.adapter_activation,
+                                  impl=cfg.xpeft.kernel_impl)
+        if "lora_a" in masks_l:
+            x = ops.lora_adapter(x, masks_l["lora_a"], masks_l["lora_b"],
                                  impl=cfg.xpeft.kernel_impl)
+        if "ia3_s" in masks_l:
+            x = ops.ia3_apply(x, masks_l["ia3_s"],
+                              impl=cfg.xpeft.kernel_impl)
+        return x
+    if "w_a" not in masks_l:
+        # serving entries with no residual-path leaves (e.g. a prefix-only
+        # bank_spec: prefix_skip rides to attention, nothing applies here)
+        return x
     if "idx_a" in masks_l:
         # k-sparse hard-mask aggregation: gather only the k selected
         # adapters (N/k cheaper than the dense contraction; the jnp twin of
@@ -166,6 +187,15 @@ def _xpeft_apply(x, bank_l, masks_l, cfg):
         return XP.apply_xpeft_layer_sparse(
             x, bank_l, masks_l["idx_a"], masks_l["w_a"],
             masks_l["idx_b"], masks_l["w_b"],
+            masks_l["ln_scale"][..., None, :],
+            masks_l["ln_bias"][..., None, :], cfg.xpeft)
+    if cfg.xpeft.is_hetero:
+        # dense unified-space weights over a typed bank (training / soft
+        # masks): per-segment aggregation + bottleneck -> LoRA -> IA3
+        # composition; prefix KV rows were threaded into attention by the
+        # scan body before this point.
+        return XP.apply_xpeft_layer_hetero(
+            x, bank_l, masks_l["w_a"], masks_l["w_b"],
             masks_l["ln_scale"][..., None, :],
             masks_l["ln_bias"][..., None, :], cfg.xpeft)
     return XP.apply_xpeft_layer(x, bank_l, masks_l["w_a"], masks_l["w_b"],
@@ -185,6 +215,9 @@ def _decode_fused_route(cfg, masks, use_cache: bool, Tt: int):
         return None
     if masks is None or not cfg.xpeft.enabled:
         return "none"
+    if any(key in masks for key in ("lora_a", "lora_b", "ia3_s",
+                                    "prefix_skip")):
+        return None  # heterogeneous entries take the composed per-type path
     if "a_q" in masks:
         return cfg.xpeft.bank_quant \
             if cfg.xpeft.bank_quant in ("int8", "int4") else None
@@ -221,11 +254,12 @@ def _decode_fused_apply(block, x, masks_l, cfg, *, positions, cache_l,
 
 
 def _attn_block_apply(block, x, cfg, *, positions, cache_l, cache_pos,
-                      is_global):
+                      is_global, extra_kv=None, front_skip=None):
     h = norm_apply(x, block["n1"], cfg.norm)
     h, new_cache = ATT.attention(block["attn"], h, positions=positions,
                                  cfg=cfg, cache=cache_l, cache_pos=cache_pos,
-                                 is_global=is_global)
+                                 is_global=is_global, extra_kv=extra_kv,
+                                 front_skip=front_skip)
     x = x + h
     h = norm_apply(x, block["n2"], cfg.norm)
     if cfg.moe:
@@ -262,9 +296,30 @@ def _make_body(cfg, positions, cache_pos, use_cache, fused_route=None):
                                           {"n1": block["n1"]}, cache_l)
             aux = jnp.float32(0)
         else:
+            extra_kv = None
+            front_skip = None
+            if (masks_l is not None and cfg.xpeft.enabled
+                    and cfg.xpeft.is_hetero and not use_cache
+                    and "w_a" in masks_l):
+                # dense training path over a prefix-bearing bank: this
+                # layer's per-example prefix KV rows ride into attention
+                # as un-rotated front rows (None when the spec has no
+                # prefix segment). The cached/serving path instead
+                # hydrates prefix rows into the KV cache at admission.
+                extra_kv = XP.prefix_rows_dense_layer(
+                    bank_l, masks_l["w_a"], masks_l["w_b"], cfg.xpeft,
+                    cfg.num_kv_heads, cfg.head_dim)
+            if (use_cache and masks_l is not None
+                    and "prefix_skip" in masks_l):
+                # serving over hydrated prefix KV rows: per-example,
+                # per-layer gate — a layer whose masks selected no prefix
+                # slot holds zero rows at [0, P) and must not attend them
+                # (matches the training path's extra_kv pvalid gating)
+                front_skip = masks_l["prefix_skip"]
             x, new_cache, aux = _attn_block_apply(
                 block, x, cfg, positions=positions, cache_l=cache_l,
-                cache_pos=cache_pos, is_global=is_global)
+                cache_pos=cache_pos, is_global=is_global, extra_kv=extra_kv,
+                front_skip=front_skip)
         x = _xpeft_apply(x, bank_l, masks_l, cfg)
         # re-pin the residual stream each layer (Megatron-SP: under
         # act_rules {"seq": "model"} the scan carry — and therefore the
@@ -307,6 +362,25 @@ def forward(params, tokens, cfg, *, prefix_embeds=None, profile_masks=None,
             positions = jnp.broadcast_to(positions, (B, Tt))
         else:  # per-slot decode positions
             positions = cache_pos[:, None] + jnp.arange(Tt, dtype=jnp.int32)
+        if (cache is None and profile_masks is not None
+                and cfg.xpeft.enabled and cfg.xpeft.has_prefix
+                and "w_a" in profile_masks):
+            # prefix-bearing dense training path: prefix KV rows occupy
+            # positions [0, P), so the prompt's RoPE phase starts at P —
+            # matching serving, where prefill writes the prompt at
+            # cache_pos = P behind the hydrated prefix rows. Per-example:
+            # a profile whose masks never touch the prefix segment keeps
+            # bare positions (RoPE is only *relatively* shift-invariant,
+            # so a blanket offset would break bitwise zero-mask == bare).
+            wsum = jnp.zeros((B,), jnp.float32)
+            for typ, off, cnt in cfg.xpeft.segments():
+                if typ != "prefix":
+                    continue
+                seg_a = profile_masks["w_a"][:, :, off:off + cnt]
+                seg_b = profile_masks["w_b"][:, :, off:off + cnt]
+                wsum = wsum + seg_a.sum((1, 2)) + seg_b.sum((1, 2))
+            offs = jnp.where(wsum > 0, jnp.int32(cfg.xpeft.prefix_tokens), 0)
+            positions = positions + offs[:, None]
     if cfg.pos == "learned":
         if jnp.ndim(cache_pos) == 0:
             x = x + jax.lax.dynamic_slice_in_dim(

@@ -166,3 +166,25 @@ def quantize_bank(bank: dict, scheme: str, *, group: int = 32) -> dict:
     qb = quantize(bank["bank_b"], scheme, group=group)
     return {"bank_a_q": qa["q"], "bank_a_scale": qa["scale"],
             "bank_b_q": qb["q"], "bank_b_scale": qb["scale"]}
+
+
+def quantize_bank_hetero(bank: dict, scheme: str, *, group: int = 32) -> dict:
+    """Heterogeneous-bank quantization: matmul-family segments (bottleneck
+    bank_a/bank_b, LoRA lora_a/lora_b) get the full int8/int4 treatment —
+    their error is averaged away inside a d-wide contraction. IA3 scale
+    deltas and prefix KV rows are stored fp16 instead: both are consumed
+    ELEMENTWISE (a multiplicative gate / raw attention rows), so per-entry
+    quantization noise lands directly on activations with nothing to
+    average over — and at [L, cnt, d] / [L, cnt, P, kv] they are a
+    rounding error of the bank's footprint anyway."""
+    check_scheme(scheme)
+    out = {}
+    for name in ("bank_a", "bank_b", "lora_a", "lora_b"):
+        if name in bank:
+            q = quantize(bank[name], scheme, group=group)
+            out[f"{name}_q"] = q["q"]
+            out[f"{name}_scale"] = q["scale"]
+    for name in ("ia3_v", "prefix_k", "prefix_v"):
+        if name in bank:
+            out[name] = bank[name].astype(jnp.float16)
+    return out

@@ -110,6 +110,42 @@ class ServeEngine:
                                  "rejected drafts)")
             if self.spec_gamma < 1:
                 raise ValueError("spec_gamma must be >= 1")
+        # heterogeneous adapter-type bank (cfg.xpeft.bank_spec): typed
+        # cache entries / slot buffers; prefix segments additionally
+        # hydrate KV rows into the cache at admission. A type-pure
+        # bottleneck spec keeps every code path below bitwise-identical.
+        self.hetero = bool(cfg.xpeft.enabled and cfg.xpeft.is_hetero)
+        self.prefix_len = int(cfg.xpeft.prefix_tokens) \
+            if (self.hetero and cfg.xpeft.has_prefix) else 0
+        self._prefix_seg = next(
+            ((off, cnt) for t, off, cnt in cfg.xpeft.segments()
+             if t == "prefix"), None)
+        if self.hetero:
+            if cfg.xpeft.bank_quant != "none":
+                raise ValueError(
+                    "bank_quant engines do not serve heterogeneous "
+                    "bank_specs (quantize_bank_hetero covers storage; "
+                    "serve with bank_quant='none')")
+            if self.precompute and store.mask_type != "hard":
+                raise ValueError(
+                    "heterogeneous precompute serving requires hard-mask "
+                    "profiles (per-type k-sparse aggregation)")
+        if self.prefix_len:
+            if self.spec:
+                raise ValueError(
+                    "spec_enable cannot serve a prefix-bearing bank_spec: "
+                    "bare-PLM drafts would attend the adapted prefix KV "
+                    "rows resident in the shared cache")
+            if cfg.block_pattern != "attn":
+                raise ValueError("prefix segments require pure-attention "
+                                 "blocks (KV-row hydration)")
+            if not (precompute and cfg.xpeft.enabled):
+                raise ValueError(
+                    "per-step mask serving cannot hydrate prefix KV rows; "
+                    "a prefix-bearing bank_spec requires precompute=True")
+            if self.prefix_len >= max_seq - 1:
+                raise ValueError("prefix_tokens must leave room for the "
+                                 f"prompt (max_seq={max_seq})")
         # quantized bank (cfg.xpeft.bank_quant): the bf16/fp32 bank is
         # quantized ONCE here and DROPPED from the resident params — the
         # engine serves every admission from the int8/int4 rows (k-sparse
@@ -256,6 +292,15 @@ class ServeEngine:
             if self.n_mask_entries < 1:
                 raise ValueError("mask_pages must be >= 1")
             mask_lead = self.n_mask_entries
+        # entry key set: what one hydrated profile entry (and the slot
+        # pool, minus prefix rows) carries. Pure bottleneck keeps the
+        # historical fixed tuple; hetero derives it from the bank_spec.
+        self._entry_keys = ("a_hat", "b_hat", "ln_scale", "ln_bias")
+        if self.hetero and self.precompute and self.quant == "none":
+            keys = list(XP.hetero_entry_keys(xp))
+            if self.prefix_len:
+                keys.append("prefix_skip")
+            self._entry_keys = tuple(keys)
         if self.precompute and self.quant != "none":
             # per-slot QUANTIZED Â/B̂ records + fp16 scales — the decode
             # step reads these and dequantizes in-register
@@ -275,6 +320,27 @@ class ServeEngine:
                 "ln_scale": jnp.ones((mask_lead, L, b), jnp.float32),
                 "ln_bias": jnp.zeros((mask_lead, L, b), jnp.float32),
             }
+        elif self.precompute and self.hetero:
+            # typed slot pool: one leaf per entry key the spec's families
+            # need. Prefix ROWS are absent by design — they hydrate into
+            # the KV cache at prefill; only the per-layer skip gate rides
+            # with the decode masks.
+            dt = jnp.dtype(cfg.dtype)
+            shapes = {
+                "a_hat": ((L, d, b), dt), "b_hat": ((L, b, d), dt),
+                "ln_scale": ((L, b), jnp.float32),
+                "ln_bias": ((L, b), jnp.float32),
+                "lora_a": ((L, d, b), dt), "lora_b": ((L, b, d), dt),
+                "ia3_s": ((L, d), dt),
+                "prefix_skip": ((L,), jnp.int32),
+            }
+            self.masks = {}
+            for key in self._entry_keys:
+                if key in ("prefix_k", "prefix_v"):
+                    continue
+                shp, kdt = shapes[key]
+                init = jnp.ones if key == "ln_scale" else jnp.zeros
+                self.masks[key] = init((mask_lead,) + shp, kdt)
         elif self.precompute:
             dt = jnp.dtype(cfg.dtype)
             self.masks = {
@@ -452,10 +518,19 @@ class ServeEngine:
                         pool),
                     out_shardings=self._shardings.get("masks_view"))
         # jitted admission aggregations (padded to pow2 profile counts); the
-        # sparse path reads only k·L·d·b bank bytes per aggregated profile
-        self._aggregate_sparse = jax.jit(
-            lambda bank, ia, wa, ib, wb:
-            XP.precompute_effective_adapters_sparse(bank, ia, wa, ib, wb, xp))
+        # sparse path reads only k·L·d·b bank bytes per aggregated profile.
+        # Hetero banks swap in the per-type bucketing aggregation (same
+        # kernels, one launch per typed segment) returning the entry dict.
+        if self.hetero:
+            self._aggregate_sparse = jax.jit(
+                lambda bank, ia, wa, ib, wb:
+                XP.precompute_effective_adapters_sparse_hetero(
+                    bank, ia, wa, ib, wb, xp))
+        else:
+            self._aggregate_sparse = jax.jit(
+                lambda bank, ia, wa, ib, wb:
+                XP.precompute_effective_adapters_sparse(
+                    bank, ia, wa, ib, wb, xp))
         self._aggregate_dense = jax.jit(
             XP.precompute_effective_adapters_dense_batched)
         if self.quant != "none":
@@ -509,14 +584,34 @@ class ServeEngine:
         self.stranded_slot_steps = 0
 
     # ------------------------------------------------------------- jit impls
-    def _prefill_impl(self, params, tokens, masks, lengths):
+    def _prefill_impl(self, params, tokens, masks, lengths, cache_pos=None,
+                      prefix_rows=None):
         """Batched prefill of one length bucket: tokens [B, pad], per-request
-        masks [B, ...] (or None), lengths [B] -> (next_tok [B], mini cache)."""
+        masks [B, ...] (or None), lengths [B] -> (next_tok [B], mini cache).
+
+        Prefix-bearing hetero specs pass ``cache_pos [B]`` (0 or P per
+        request) and ``prefix_rows = (pk, pv) [B, L, P, kv]`` — the rows
+        are written into the mini cache at buffer slots [0, P) BEFORE the
+        forward, so the prompt attends them through the ordinary cached
+        path (one trace; non-prefix requests carry zero rows at
+        cache_pos 0 and never read them)."""
         B, P = tokens.shape
         mini = MDL.init_cache(self.cfg, B, self.S)
-        hidden, mini, _ = MDL.forward(params, tokens, self.cfg,
-                                      profile_masks=masks, cache=mini,
-                                      cache_pos=0)
+        if prefix_rows is not None:
+            pk, pv = prefix_rows
+            KV, hd = self.cfg.num_kv_heads, self.cfg.head_dim
+            Pfx = pk.shape[2]
+
+            def rows(x):
+                x = x.reshape(x.shape[:3] + (KV, hd))   # [B, L, P, KV, hd]
+                return jnp.moveaxis(x, 0, 1)            # [L, B, P, KV, hd]
+            mini["k"] = mini["k"].at[:, :, :Pfx].set(
+                rows(pk).astype(mini["k"].dtype))
+            mini["v"] = mini["v"].at[:, :, :Pfx].set(
+                rows(pv).astype(mini["v"].dtype))
+        hidden, mini, _ = MDL.forward(
+            params, tokens, self.cfg, profile_masks=masks, cache=mini,
+            cache_pos=0 if cache_pos is None else cache_pos)
         idx = jnp.clip(lengths - 1, 0, P - 1)
         last_h = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
         logits = MDL.lm_logits(params, last_h, self.cfg)
@@ -573,7 +668,11 @@ class ServeEngine:
             try:
                 if self.mask_alloc is not None:
                     self.mask_alloc.alloc(1, r.uid)
-                need = self._pages_for(len(r.prompt))
+                # pages must cover the hydrated prefix rows too — resolved
+                # host-side from the store BEFORE hydration (a profile that
+                # later degrades resolves to 0 here as well)
+                need = self._pages_for(self._req_prefix_len(r)
+                                       + len(r.prompt))
                 if need:
                     try:
                         self.page_alloc.alloc(need, r.uid,
@@ -619,7 +718,7 @@ class ServeEngine:
                 self._extract_mask(self.masks["pool"], entry))
         self._resume_q.append({
             "req": r, "rows": rows, "mask": mask_row,
-            "len": len(r.prompt) + len(r.generated) - 1,
+            "len": self._rlen(r) + len(r.generated) - 1,
             "seq": self._slot_seq[slot],
             "degraded": self.slot_degraded[slot]})
         self._release_request(slot, r)
@@ -705,7 +804,7 @@ class ServeEngine:
             r = self.slot_req[i]
             if r is None:
                 continue  # preempted by an earlier iteration
-            cur = len(r.prompt) + len(r.generated) - 1
+            cur = self._rlen(r) + len(r.generated) - 1
             need = PG.pages_needed(min(cur + window, self.S - 1),
                                    self.page_size)
             while need > len(self.page_alloc.pages_of(r.uid)):
@@ -729,8 +828,40 @@ class ServeEngine:
         so a degraded request decodes as if X-PEFT were disabled."""
         pool = self.masks["pool"] if self.continuous else self.masks
         zero = {k: jnp.zeros(v.shape[1:], v.dtype) for k, v in pool.items()}
-        zero["ln_scale"] = jnp.ones_like(zero["ln_scale"])
+        if "ln_scale" in zero:
+            zero["ln_scale"] = jnp.ones_like(zero["ln_scale"])
+        if self.prefix_len:
+            # zero prefix ROWS complete the entry layout; a degraded
+            # request admits with prefix_len 0 (prompt at buffer slot 0),
+            # so these rows are never even written to its cache
+            dt = jnp.dtype(self.cfg.dtype)
+            shape = (self.cfg.num_layers, self.prefix_len, self.cfg.kv_dim)
+            zero["prefix_k"] = jnp.zeros(shape, dt)
+            zero["prefix_v"] = jnp.zeros(shape, dt)
         return zero
+
+    def _rlen(self, r) -> int:
+        """Device-buffer length of a request's prompt region: hydrated
+        prefix rows + prompt tokens (every capacity/termination site must
+        budget the prefix rows a request's cache actually holds)."""
+        return getattr(r, "prefix_len", 0) + len(r.prompt)
+
+    def _req_prefix_len(self, r) -> int:
+        """Pre-hydration host-side prefix length of a request: P when its
+        profile's hard masks select any prefix-segment slot, else 0 (a
+        profile that never touches the prefix segment trains and serves
+        at bare positions — bitwise, not just RoPE-shift-equivalent)."""
+        if not self.prefix_len or getattr(r, "degraded", False):
+            return 0
+        try:
+            ia, _, ib, _ = self.store.sparse_indices(int(r.profile_id))
+        except Exception:
+            return 0  # missing/corrupt record: the probe will degrade it
+        off, cnt = self._prefix_seg
+        ia, ib = np.asarray(ia), np.asarray(ib)
+        hit = ((ia >= off) & (ia < off + cnt)).any() \
+            or ((ib >= off) & (ib < off + cnt)).any()
+        return self.prefix_len if hit else 0
 
     def _probe_profile(self, pid: int) -> bool:
         """Pre-hydration health probe for one profile, with retry.
@@ -822,12 +953,19 @@ class ServeEngine:
 
         from repro.analysis.bytes import bank_slice_bytes
         bank = self.params["xpeft_bank"]
-        L, N = bank["bank_a"].shape[:2]
-        d_, b_ = bank["bank_a"].shape[2], bank["bank_a"].shape[3]
-        # Â+B̂ bytes per (layer, adapter) row — the shared analytic helper
-        # (benchmarks consume the same function, so gates can't drift)
-        slice_bytes = bank_slice_bytes(d_, b_,
-                                       itemsize=bank["bank_a"].dtype.itemsize)
+        L = self.cfg.num_layers
+        N = self.cfg.xpeft.num_adapters
+        if self.hetero:
+            # average bytes of one unified-space (layer, slot) row across
+            # the typed segments — what one k-sparse selection reads
+            slice_bytes = sum(int(v.nbytes) for v in bank.values()) \
+                // (L * N)
+        else:
+            d_, b_ = bank["bank_a"].shape[2], bank["bank_a"].shape[3]
+            # Â+B̂ bytes per (layer, adapter) row — the shared analytic
+            # helper (benchmarks consume it too, so gates can't drift)
+            slice_bytes = bank_slice_bytes(
+                d_, b_, itemsize=bank["bank_a"].dtype.itemsize)
         bank_bytes = 0
         aggregated = 0
         if missing:
@@ -839,33 +977,67 @@ class ServeEngine:
                 ia, wa, ib, wb = self.store.batch_sparse_indices(missing)
                 pad_i = jnp.zeros((Mp - M,) + ia.shape[1:], ia.dtype)
                 pad_w = jnp.zeros((Mp - M,) + wa.shape[1:], wa.dtype)
-                a_hat, b_hat = self._aggregate_sparse(
+                agg = self._aggregate_sparse(
                     bank, jnp.concatenate([ia, pad_i]),
                     jnp.concatenate([wa, pad_w]),
                     jnp.concatenate([ib, pad_i]),
                     jnp.concatenate([wb, pad_w]))
+                if not self.hetero:
+                    agg = {"a_hat": agg[0], "b_hat": agg[1]}
                 k = ia.shape[-1]
                 path = "sparse"
                 bank_bytes = Mp * k * L * slice_bytes
                 ln_s, ln_b = self.store.ln_affines(missing)
+                skip = on = None
+                if self.prefix_len:
+                    # host-side per-layer prefix gate from the SAME top-k
+                    # indices the device aggregation consumed: a selected
+                    # index carries weight 1/k > 0, so idx-in-segment is
+                    # exactly wsum > 0
+                    off, cnt = self._prefix_seg
+                    ia_h, ib_h = np.asarray(ia), np.asarray(ib)
+                    valid = (((ia_h >= off) & (ia_h < off + cnt)).any(-1)
+                             | ((ib_h >= off) & (ib_h < off + cnt)).any(-1))
+                    on = valid.any(-1)                       # [M]
+                    skip = np.where(valid, 0,
+                                    self.prefix_len).astype(np.int32)
             else:
                 # soft masks are dense by construction; the jitted einsum
                 # reads the bank once per call, amortized over the batch
+                # (hetero precompute serving is hard-mask only — ctor)
                 wa, wb, ln_s, ln_b = self.store.batch_mask_weights(missing)
                 pad_w = jnp.zeros((Mp - M,) + wa.shape[1:], wa.dtype)
                 a_hat, b_hat = self._aggregate_dense(
                     bank, jnp.concatenate([wa, pad_w]),
                     jnp.concatenate([wb, pad_w]))
+                agg = {"a_hat": a_hat, "b_hat": b_hat}
                 path = "dense"
                 bank_bytes = N * L * slice_bytes
+                skip = on = None
             for i, pid in enumerate(missing):
-                entry = {"a_hat": a_hat[i], "b_hat": b_hat[i],
-                         "ln_scale": ln_s[i], "ln_bias": ln_b[i]}
+                entry = {}
+                for key in self._entry_keys:
+                    if key == "ln_scale":
+                        entry[key] = ln_s[i]
+                    elif key == "ln_bias":
+                        entry[key] = ln_b[i]
+                    elif key == "prefix_skip":
+                        entry[key] = skip[i] if on[i] \
+                            else np.zeros((L,), np.int32)
+                    else:
+                        entry[key] = agg[key][i]
+                if self.prefix_len:
+                    entry["prefix_on"] = np.int32(bool(on[i]))
                 self.profile_cache.put(pid, entry)
                 entries[pid] = entry
         else:
             path = "cached"
 
+        if self.prefix_len:
+            for pid, r in zip(pids, reqs):
+                ent = None if r.degraded else entries.get(pid)
+                r.prefix_len = 0 if ent is None \
+                    else self.prefix_len * int(ent["prefix_on"])
         self.last_admission = {
             "path": path, "requests": R, "cache_hits": hits,
             "cache_misses": misses, "unique_profiles": len(set(pids)),
@@ -876,7 +1048,7 @@ class ServeEngine:
         return {key: jnp.stack([zero[key] if r.degraded
                                 else entries[pid][key]
                                 for pid, r in zip(pids, reqs)])
-                for key in ("a_hat", "b_hat", "ln_scale", "ln_bias")}
+                for key in self._entry_keys}
 
     def _hydrate_stacked_quant(self, reqs: List[Request], pids: List[int]):
         """Quantized-bank hydration: cache hits first; missing profiles
@@ -1025,6 +1197,12 @@ class ServeEngine:
             # never failing the wave for their healthy peers
             self._probe_wave(reqs)
         stacked = self._hydrate_stacked(reqs)
+        prefix_rows = None
+        if stacked is not None and self.prefix_len:
+            # prefix KV rows hydrate into the cache at prefill, not into
+            # the per-slot mask pool (the pool holds residual-path leaves
+            # plus the per-layer skip gate)
+            prefix_rows = (stacked.pop("prefix_k"), stacked.pop("prefix_v"))
         slot_of = {id(r): s for r, s in zip(reqs, assigned)}
         if stacked is not None:
             # ONE scatter into the per-slot buffers for the whole wave
@@ -1049,12 +1227,20 @@ class ServeEngine:
                 toks[j, :len(r.prompt)] = r.prompt
                 lens[j] = len(r.prompt)
             rows = None
+            cpos = prows = None
             if stacked is not None:
                 sel = jnp.asarray([idx_of[id(r)] for r in group]
                                   + [0] * (Bp - B))
                 rows = jax.tree.map(lambda t: t[sel], stacked)
+                if prefix_rows is not None:
+                    # vector write offset: prompt lands at buffer P for
+                    # prefix-on requests, 0 otherwise (one trace; pad rows
+                    # use offset 0 and are dropped at insert)
+                    cpos = jnp.asarray([r.prefix_len for r in group]
+                                       + [0] * (Bp - B), jnp.int32)
+                    prows = tuple(t[sel] for t in prefix_rows)
             nxt, mini = self._prefill(self.params, jnp.asarray(toks), rows,
-                                      jnp.asarray(lens))
+                                      jnp.asarray(lens), cpos, prows)
             gslots = jnp.asarray([slot_of[id(r)] for r in group])
             if self.continuous:
                 self.cache["data"] = self._insert_cb(
@@ -1073,13 +1259,16 @@ class ServeEngine:
                 len(reqs) / max(sum(pow2_count(len(g))
                                     for g in groups.values()), 1), 3)
 
-        lens_all = [len(r.prompt) for r in reqs]
+        # slot lengths INCLUDE the hydrated prefix rows: the slot length is
+        # the KV-buffer write position, and decode queries take their RoPE
+        # position from it, so prefix-on requests continue at P + prompt
+        lens_all = [self._rlen(r) for r in reqs]
         toks_all = [next_toks[id(r)] for r in reqs]
         self.slots.admit(assigned, toks_all, lens_all,
                          [r.max_new_tokens for r in reqs])
         for r, slot in zip(reqs, assigned):
             r.generated.append(next_toks[id(r)])
-            if r.max_new_tokens <= 1 or len(r.prompt) >= self.S - 1:
+            if r.max_new_tokens <= 1 or self._rlen(r) >= self.S - 1:
                 r.done = True  # budget spent by the prefill token
                 if self.continuous:
                     self._release_request(slot, r)
@@ -1165,7 +1354,7 @@ class ServeEngine:
         # decode retires deterministically, so the sync lands exactly when
         # the first slot frees and its capacity turns over immediately.
         remaining = [min(r.max_new_tokens - len(r.generated),
-                         self.S - len(r.prompt) - len(r.generated))
+                         self.S - self._rlen(r) - len(r.generated))
                      for r in self.slot_req if r is not None]
         if self.continuous:
             bound = min(remaining) if remaining else self.sync_every

@@ -179,7 +179,11 @@ class OnboardingScheduler:
         pid = self.slot_pid[slot]
         prof = self.roster.slot_params(rstate, slot)
         agg = None
-        if self.store.quant != "none":
+        if self.store.quant != "none" and not self.xp.is_hetero:
+            # hetero banks graduate masks-only even into quantized stores:
+            # the agg_* record format is the bottleneck (Â, B̂) pair, which
+            # has no single-tensor analogue across mixed families —
+            # admission falls back to the sparse bank-read path.
             from repro.core import xpeft as XP
             eff = XP.precompute_effective_adapters(self.bank, prof, self.xp)
             agg = (eff["a_hat"], eff["b_hat"])
@@ -354,7 +358,8 @@ def build_onboarding_run(cfg, source, pending, *, slots: int = 4,
         store = ProfileStore(cfg.num_layers, xp.num_adapters, xp.bottleneck,
                              xp.mask_type, xp.k,
                              quant=xp.bank_quant,
-                             quant_group=xp.quant_group)
+                             quant_group=xp.quant_group,
+                             bank_spec=xp.bank_spec)
     scheduler = OnboardingScheduler(
         roster, store, policy, pending,
         bank=frozen["xpeft_bank"] if store.quant != "none" else None,

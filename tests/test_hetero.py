@@ -1,0 +1,316 @@
+"""Heterogeneous adapter-type banks: one unified mask index space over
+typed segments (bottleneck / LoRA / IA3 / prefix).
+
+Pins down: construction-time bank_spec validation, the per-type kernel
+dispatch table, the mixed-type sparse == sum-of-per-type-dense aggregation
+property (seeded fuzz + hypothesis when available), bank_spec as store
+identity (round-trip + merge guard), the zero-mask / degraded bitwise
+bare-PLM contract, engine feature-interaction guards, and end-to-end
+serving parity against the composed dense reference."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import adapters as A
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.kernels import ops
+
+SPEC = (("bottleneck", 4), ("lora", 4), ("ia3", 2), ("prefix", 2))
+
+
+def _hetero_cfg():
+    return reduce_for_smoke(get_config("qwen1.5-0.5b")).with_xpeft(
+        num_adapters=12, bottleneck=4, k=4, max_profiles=8,
+        bank_spec=SPEC, prefix_tokens=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _hetero_cfg()
+    key = jax.random.key(0)
+    from repro.models import init_lm
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, "hard", cfg.xpeft.k,
+                         bank_spec=cfg.xpeft.bank_spec)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(3):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    return cfg, params, store
+
+
+# ------------------------------------------------ config-time validation
+
+def test_bank_spec_unknown_type_raises():
+    with pytest.raises(ValueError, match="bank_spec type"):
+        _hetero_cfg().with_xpeft(bank_spec=(("bottleneck", 6), ("dora", 6)))
+
+
+def test_bank_spec_count_mismatch_raises():
+    with pytest.raises(ValueError, match="num_adapters"):
+        _hetero_cfg().with_xpeft(bank_spec=(("bottleneck", 4), ("lora", 4)))
+
+
+def test_bank_spec_nonpositive_count_raises():
+    with pytest.raises(ValueError, match="must be"):
+        _hetero_cfg().with_xpeft(
+            num_adapters=4,
+            bank_spec=(("bottleneck", 4), ("lora", 0)))
+
+
+def test_segments_tile_the_unified_space():
+    xp = _hetero_cfg().xpeft
+    segs = xp.segments()
+    assert [t for t, _, _ in segs] == [t for t, _ in SPEC]
+    off = 0
+    for (_, o, c), (_, want) in zip(segs, SPEC):
+        assert o == off and c == want
+        off += c
+    assert off == xp.num_adapters
+    assert xp.is_hetero and xp.has_prefix
+
+
+def test_type_pure_spec_is_not_hetero():
+    xp = _hetero_cfg().with_xpeft(
+        bank_spec=(("bottleneck", 12),)).xpeft
+    assert not xp.is_hetero and not xp.has_prefix
+    assert xp.segments() == (("bottleneck", 0, 12),)
+
+
+# ------------------------------------------------ kernel dispatch table
+
+def test_resolve_impl_table():
+    assert ops.resolve_impl("auto") in ("pallas", "ref")
+    if jax.default_backend() != "tpu":
+        assert ops.resolve_impl("auto") == "ref"
+    for name in ("pallas", "interpret", "ref"):
+        assert ops.resolve_impl(name) == name
+    with pytest.raises(ValueError, match="kernel_impl"):
+        ops.resolve_impl("cuda")
+
+
+def test_lora_route_matches_formula_all_impls():
+    key = jax.random.key(1)
+    kx, ka, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (2, 6, 16), jnp.float32)
+    a = jax.random.normal(ka, (2, 16, 4), jnp.float32)
+    b = jax.random.normal(kb, (2, 4, 16), jnp.float32) * 0.1
+    want = x + jnp.einsum("btd,bdr->btr", x, a) @ b
+    for impl in ("ref", "interpret"):
+        got = ops.lora_adapter(x, a, b, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    # the two impls agree bitwise (same contraction order)
+    assert (np.asarray(ops.lora_adapter(x, a, b, impl="ref"))
+            == np.asarray(ops.lora_adapter(x, a, b, impl="interpret"))).all()
+
+
+def test_ia3_route_matches_formula_all_impls():
+    key = jax.random.key(2)
+    x = jax.random.normal(key, (2, 6, 16), jnp.float32)
+    s = jax.random.normal(jax.random.key(3), (2, 16), jnp.float32) * 0.2
+    want = x * (1.0 + s[:, None, :])
+    for impl in ("ref", "interpret"):
+        got = ops.ia3_apply(x, s, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+    assert (np.asarray(ops.ia3_apply(x, s, impl="ref"))
+            == np.asarray(ops.ia3_apply(x, s, impl="interpret"))).all()
+
+
+def test_ia3_zero_scale_is_identity_bitwise():
+    x = jax.random.normal(jax.random.key(4), (2, 6, 16), jnp.float32)
+    s = jnp.zeros((2, 16), jnp.float32)
+    for impl in ("ref", "interpret"):
+        assert (np.asarray(ops.ia3_apply(x, s, impl=impl))
+                == np.asarray(x)).all()
+
+
+def test_lora_zero_b_is_identity_bitwise():
+    x = jax.random.normal(jax.random.key(5), (2, 6, 16), jnp.float32)
+    a = jax.random.normal(jax.random.key(6), (2, 16, 4), jnp.float32)
+    b = jnp.zeros((2, 4, 16), jnp.float32)
+    for impl in ("ref", "interpret"):
+        assert (np.asarray(ops.lora_adapter(x, a, b, impl=impl))
+                == np.asarray(x)).all()
+
+
+# ------------------- mixed k-sparse == sum of per-type dense (property)
+
+def _check_sparse_equals_dense(seed: int):
+    """One draw: random typed bank + random unified-space k-sparse masks;
+    the segment-bucketed sparse aggregation must equal the per-type DENSE
+    aggregation of the scattered weights."""
+    xp = _hetero_cfg().xpeft
+    L, N, k, d, kv = 2, xp.num_adapters, xp.k, 16, 8
+    rng = np.random.default_rng(seed)
+    bank = A.init_hetero_bank(jax.random.key(seed), L, xp, d, kv,
+                              jnp.float32)
+    idx_a = np.stack([rng.choice(N, size=k, replace=False)
+                      for _ in range(L)])
+    idx_b = np.stack([rng.choice(N, size=k, replace=False)
+                      for _ in range(L)])
+    w = np.full((L, k), 1.0 / k, np.float32)
+    sparse = XP.precompute_effective_adapters_sparse_hetero(
+        bank, jnp.asarray(idx_a), jnp.asarray(w),
+        jnp.asarray(idx_b), jnp.asarray(w), xp)
+
+    wa_d = np.zeros((L, N), np.float32)
+    wb_d = np.zeros((L, N), np.float32)
+    for l in range(L):
+        wa_d[l, idx_a[l]] = 1.0 / k
+        wb_d[l, idx_b[l]] = 1.0 / k
+    dense_keys = {"bottleneck": ("a_hat", "b_hat"),
+                  "lora": ("lora_a", "lora_b"), "ia3": ("ia3_s",),
+                  "prefix": ("prefix_k", "prefix_v")}
+    for l in range(L):
+        bank_l = jax.tree.map(lambda t: t[l], bank)
+        agg = XP.hetero_aggregate_dense_layer(
+            bank_l, jnp.asarray(wa_d[l]), jnp.asarray(wb_d[l]), xp)
+        for t, keys in dense_keys.items():
+            vals = agg[t] if isinstance(agg[t], tuple) else (agg[t],)
+            for key, val in zip(keys, vals):
+                got = np.asarray(sparse[key][l], np.float32)
+                want = np.asarray(val, np.float32).reshape(got.shape)
+                np.testing.assert_allclose(
+                    got, want, rtol=1e-5, atol=1e-6,
+                    err_msg=f"seed={seed} layer={l} {key}")
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mixed_sparse_equals_sum_of_per_type_dense(seed):
+    _check_sparse_equals_dense(seed)
+
+
+def test_mixed_sparse_equals_dense_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def inner(seed):
+        _check_sparse_equals_dense(seed)
+
+    inner()
+
+
+# --------------------------------------------- store identity round-trip
+
+def test_store_bank_spec_round_trip(tmp_path, setup):
+    cfg, _, store = setup
+    p = str(tmp_path / "store.npz")
+    store.save(p)
+    loaded = ProfileStore.load(p)
+    assert loaded.bank_spec == cfg.xpeft.bank_spec
+    for pid in store.profile_ids():
+        for x, y in zip(store.sparse_indices(pid),
+                        loaded.sparse_indices(pid)):
+            assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_store_merge_rejects_bank_spec_mismatch(setup):
+    cfg, _, store = setup
+    other = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, "hard", cfg.xpeft.k,
+                         bank_spec=(("bottleneck", 12),))
+    with pytest.raises(AssertionError):
+        other.merge_from(store)
+
+
+# ------------------------------------------- bitwise bare-PLM contracts
+
+def test_zero_mask_hetero_forward_is_bitwise_bare(setup):
+    cfg, params, _ = setup
+    from repro.models import forward
+    toks = jnp.arange(2 * 10).reshape(2, 10) % cfg.vocab_size
+    L, N, b = cfg.num_layers, cfg.xpeft.num_adapters, cfg.xpeft.bottleneck
+    masks = {"w_a": jnp.zeros((2, L, N)), "w_b": jnp.zeros((2, L, N)),
+             "ln_scale": jnp.ones((2, L, b)),
+             "ln_bias": jnp.zeros((2, L, b))}
+    h0, _, _ = forward(params, toks, cfg, profile_masks=None)
+    h1, _, _ = forward(params, toks, cfg, profile_masks=masks)
+    assert (np.asarray(h0) == np.asarray(h1)).all()
+
+
+def test_degraded_hetero_request_decodes_bitwise_bare(setup):
+    cfg, params, store = setup
+    from repro.models import forward, lm_logits
+    from repro.serve.engine import Request, ServeEngine
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64)
+    prompt = np.asarray([3, 1, 4, 1, 5]) % cfg.vocab_size
+    req = Request(uid=0, prompt=prompt, profile_id=777,  # missing record
+                  max_new_tokens=4)
+    eng.run_until_drained([req])
+    assert req.degraded and getattr(req, "prefix_len", 0) == 0
+    seq = list(prompt)
+    for got in req.generated:
+        h, _, _ = forward(params, jnp.asarray([seq]), cfg,
+                          profile_masks=None)
+        want = int(jnp.argmax(lm_logits(params, h[:, -1:], cfg)[0, -1]))
+        assert got == want
+        seq.append(got)
+
+
+# --------------------------------------------- engine interaction guards
+
+def test_engine_rejects_hetero_bank_quant(setup):
+    cfg, params, store = setup
+    from repro.serve.engine import ServeEngine
+    qcfg = cfg.with_xpeft(bank_quant="int8")
+    with pytest.raises(ValueError, match="quant"):
+        ServeEngine(qcfg, params, store, max_slots=2, max_seq=64)
+
+
+def test_engine_rejects_prefix_with_spec(setup):
+    cfg, params, store = setup
+    from repro.serve.engine import ServeEngine
+    with pytest.raises(ValueError, match="spec"):
+        ServeEngine(cfg.with_(spec_enable=True, spec_gamma=2), params,
+                    store, max_slots=2, max_seq=64, continuous=True)
+
+
+def test_engine_rejects_prefix_without_precompute(setup):
+    cfg, params, store = setup
+    from repro.serve.engine import ServeEngine
+    with pytest.raises(ValueError, match="precompute"):
+        ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                    precompute=False)
+
+
+def test_engine_rejects_prefix_overflowing_max_seq(setup):
+    cfg, params, store = setup
+    from repro.serve.engine import ServeEngine
+    big = cfg.with_xpeft(prefix_tokens=64)
+    with pytest.raises(ValueError, match="prefix"):
+        ServeEngine(big, params, store, max_slots=2, max_seq=64)
+
+
+# ------------------------------------------------- end-to-end parity
+
+def test_hetero_engine_matches_composed_dense_reference(setup):
+    """Engine greedy decode (typed entries, prefix rows hydrated into the
+    KV cache, one compiled program) == from-scratch dense forward."""
+    cfg, params, store = setup
+    from repro.models import forward, lm_logits
+    from repro.serve.engine import Request, ServeEngine
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                      continuous=True)
+    reqs = [Request(uid=i, prompt=np.asarray([3, 1, 4, 1, 5]) + i,
+                    profile_id=i, max_new_tokens=4) for i in range(2)]
+    eng.run_until_drained(list(reqs))
+    assert eng.serve_stats()["step_traces"] == 1
+    for r in reqs:
+        wa, wb = store.mask_weights(int(r.profile_id))
+        ln_s, ln_b = store.ln_affines([int(r.profile_id)])
+        masks = {"w_a": wa[None], "w_b": wb[None],
+                 "ln_scale": ln_s, "ln_bias": ln_b}
+        seq = list(map(int, r.prompt))
+        for got in r.generated:
+            h, _, _ = forward(params, jnp.asarray([seq]), cfg,
+                              profile_masks=masks)
+            want = int(jnp.argmax(lm_logits(params, h[:, -1:], cfg)[0, -1]))
+            assert got == want
+            seq.append(got)
