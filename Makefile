@@ -9,7 +9,7 @@ PY      := python
 PP      := PYTHONPATH=src:.
 
 .PHONY: verify test bench-smoke onboard-smoke multidev-smoke quant-smoke \
-	chaos-smoke cb-smoke spec-smoke hetero-smoke bench
+	chaos-smoke cb-smoke spec-smoke hetero-smoke obs-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -89,9 +89,22 @@ spec-smoke:
 hetero-smoke:
 	$(PP) $(PY) benchmarks/hetero_smoke.py --check
 
+# observability smoke (ISSUE 10): the SAME serve workload runs obs-off and
+# obs-on (retrace sentinel in raise mode), plus a small onboarding run on
+# the shared bundle. Gates: obs-on decode tokens BITWISE equal obs-off,
+# host syncs/token and decode jit traces EXACTLY unchanged (obs adds zero
+# syncs, zero retraces), the exported Chrome trace validates with >= 6
+# span categories (admission / prefill / decode-window / gang-step /
+# graduation / resilience), and the TTFT / decode-latency / admission-wait
+# / gang-step histograms carry p50/p99. The obs-on tok/s floor applies
+# under BENCH_STRICT=1 only. Emits BENCH_obs.json (obs.* records, gated by
+# check_bench) and BENCH_obs_trace.json (open in Perfetto).
+obs-smoke:
+	$(PP) $(PY) benchmarks/obs_smoke.py --check
+
 bench:
 	$(PP) $(PY) benchmarks/run.py
 
 verify: test bench-smoke onboard-smoke quant-smoke chaos-smoke cb-smoke \
-	spec-smoke hetero-smoke
+	spec-smoke hetero-smoke obs-smoke
 	@echo "verify: OK"

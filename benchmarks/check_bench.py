@@ -87,10 +87,24 @@ path):
 - poisoned onboarding profiles quarantine without graduating and the
   lifecycle accounting still closes
 
+and the observability layer (BENCH_obs.json, ISSUE 10 — produced by
+`make obs-smoke`, gated opportunistically here like the chaos artifact):
+
+- obs-on decode tokens BITWISE identical to obs-off (the device
+  accumulator is unconditional, so the compiled programs are the same)
+- host syncs/token and decode-step jit traces EXACTLY unchanged — the
+  layer's zero-extra-syncs / zero-retraces contract
+- the exported Chrome trace validates and spans >= 6 categories
+- TTFT / per-token decode latency / admission wait / gang-step time
+  histograms populated with 0 < p50 <= p99
+- zero retrace-sentinel violations; BENCH_STRICT=1 additionally enforces
+  the obs-on tok/s floor
+
 A missing BENCH_<family>.json fails with the `make` target that produces
 it (run that first); `check_bench.py --summary` instead prints one
-consolidated line per family from whatever artifacts exist, marking
-absent families with their target.
+consolidated line per family from whatever artifacts exist (each with its
+recorded provenance — jax version, devices, mesh, git SHA, config hash),
+marking absent families with their target.
 """
 from __future__ import annotations
 
@@ -135,9 +149,14 @@ MIN_SPEC_ACCEPTANCE = 0.05
 MIN_SPEC_COMMITTED_PER_STEP = 1.0
 MIN_SPEC_TOK_S_RATIO = 0.4        # BENCH_STRICT only (CPU is compute-bound)
 
+# observability (BENCH_obs.json, ISSUE 10)
+MIN_OBS_TRACE_CATEGORIES = 6
+MIN_OBS_TOK_S_RATIO = 0.5         # BENCH_STRICT only
+
 # which `make` target (re)produces each BENCH_<family>.json artifact
 FAMILIES = {"kernels": "bench-smoke", "serve": "bench-smoke",
-            "train": "bench-smoke", "fault": "chaos-smoke"}
+            "train": "bench-smoke", "fault": "chaos-smoke",
+            "obs": "obs-smoke"}
 
 
 def fail(msg: str):
@@ -256,6 +275,57 @@ def check_fault(fault: dict):
              f"; elastic reshard bitwise on {el['devices']} devices"))
 
 
+def check_obs(obs: dict):
+    """Observability gates (BENCH_obs.json): obs-on must be free — bitwise
+    tokens, unchanged syncs/token, unchanged jit trace counts — and the
+    trace/histogram artifacts must actually carry signal."""
+    par = record(obs, "obs.parity")
+    if not par.get("tokens_equal"):
+        fail("obs-on decode tokens != obs-off — attaching the bundle "
+             "changed the compiled program (parity broken)")
+    if par.get("host_syncs_on") != par.get("host_syncs_off") or \
+            par.get("syncs_per_token_on") != par.get("syncs_per_token_off"):
+        fail(f"obs changed host syncs: {par.get('host_syncs_off')} -> "
+             f"{par.get('host_syncs_on')} "
+             f"({par.get('syncs_per_token_off')} -> "
+             f"{par.get('syncs_per_token_on')} syncs/token) — the layer "
+             "must add ZERO syncs per token")
+    if par.get("step_traces_on") != par.get("step_traces_off"):
+        fail(f"obs changed decode jit traces: {par.get('step_traces_off')} "
+             f"-> {par.get('step_traces_on')} — the layer must add ZERO "
+             "retraces")
+    tr = record(obs, "obs.trace")
+    if not tr.get("valid"):
+        fail("exported trace is not valid Chrome trace-event JSON")
+    if tr.get("categories", 0) < MIN_OBS_TRACE_CATEGORIES:
+        fail(f"trace covers {tr.get('categories')} span categories < "
+             f"{MIN_OBS_TRACE_CATEGORIES} — the smoke must exercise "
+             "admission/prefill/decode-window/gang-step/graduation/"
+             "resilience")
+    hist = record(obs, "obs.histograms")
+    for prefix in ("ttft", "decode_token", "admission_wait", "gang_step"):
+        cnt = hist.get(f"{prefix}_count", 0)
+        p50, p99 = hist.get(f"{prefix}_p50_us", 0), \
+            hist.get(f"{prefix}_p99_us", 0)
+        if not cnt or not (0 < p50 <= p99):
+            fail(f"{prefix} latency histogram empty or inconsistent "
+                 f"(count={cnt}, p50={p50}, p99={p99})")
+    sen = record(obs, "obs.sentinel")
+    if sen.get("violations", 1) != 0:
+        fail(f"{sen.get('violations')} retrace-sentinel violations — a "
+             "hot-path fn recompiled beyond its contract")
+    ov = record(obs, "obs.overhead")
+    if os.environ.get("BENCH_STRICT") and \
+            ov.get("ratio", 0) < MIN_OBS_TOK_S_RATIO:
+        fail(f"obs-on decode at {ov.get('ratio')}x obs-off tok/s < "
+             f"{MIN_OBS_TOK_S_RATIO}x floor (BENCH_STRICT)")
+    print(f"check_bench[obs]: OK — parity bitwise, "
+          f"{par['syncs_per_token_on']} syncs/token unchanged, "
+          f"{par['step_traces_on']} decode trace(s) unchanged, "
+          f"{tr['events']} trace events over {tr['categories']} "
+          f"categories, {ov['ratio']}x tok/s with obs on")
+
+
 def main(fault_only: bool = False):
     if fault_only:
         check_fault(load_family("fault"))
@@ -263,11 +333,14 @@ def main(fault_only: bool = False):
     kernels = load_family("kernels")
     serve = load_family("serve")
     train = load_family("train")
-    # the chaos artifact is produced by `make chaos-smoke`, which runs its
-    # own mandatory `--fault-only` gate AFTER bench-smoke in `make verify`
-    # — here it is gated opportunistically (stale-artifact safety net)
+    # the chaos and obs artifacts are produced by `make chaos-smoke` /
+    # `make obs-smoke`, each of which runs its own mandatory gate in
+    # `make verify` — here they are gated opportunistically
+    # (stale-artifact safety net)
     if os.path.exists(family_path("fault")):
         check_fault(load_family("fault"))
+    if os.path.exists(family_path("obs")):
+        check_obs(load_family("obs"))
 
     names = {r["name"] for r in kernels["records"]}
     for required in ("mask_aggregate_batched.pallas_interpret",
@@ -591,13 +664,16 @@ def _gate_families() -> list:
             failures.append(label)
 
     if {"kernels", "serve", "train"} <= present:
-        # main() gates the three bench-smoke families together (and fault
-        # opportunistically) — run it once, attribute to the group
+        # main() gates the three bench-smoke families together (fault and
+        # obs opportunistically) — run it once, attribute to the group
         run("kernels/serve/train", main)
-    elif "fault" in present:
+    else:
         # partial artifact sets stay tolerated (the absent families are
         # already marked in the read-out) — gate what exists
-        run("fault", lambda: check_fault(load_family("fault")))
+        if "fault" in present:
+            run("fault", lambda: check_fault(load_family("fault")))
+        if "obs" in present:
+            run("obs", lambda: check_obs(load_family("obs")))
     return failures
 
 
@@ -637,6 +713,12 @@ def summary():
              "corrupt caught"),
             ("resilience.onboard_quarantine", "quarantined", "quarantined"),
         ],
+        "obs": [
+            ("obs.parity", "tokens_equal", "parity"),
+            ("obs.parity", "syncs_per_token_on", "syncs/token"),
+            ("obs.trace", "categories", "trace cats"),
+            ("obs.overhead", "ratio", "obs-on tok/s ratio"),
+        ],
     }
     for family, target in FAMILIES.items():
         path = family_path(family)
@@ -650,6 +732,15 @@ def summary():
                  for p in [_fmt(recs, n, k, lbl)] if p]
         body = ", ".join(parts) if parts else "no gated records"
         print(f"{family:7s} — {len(recs)} records: {body}")
+        prov = data.get("provenance")
+        if prov:
+            mesh = prov.get("mesh_shape")
+            print(f"        provenance: jax {prov.get('jax_version')}, "
+                  f"{prov.get('device_count')}x "
+                  f"{prov.get('device_kind')} ({prov.get('platform')}), "
+                  f"mesh {mesh if mesh else '1-device'}, "
+                  f"git {prov.get('git_sha') or '?'}, "
+                  f"config {prov.get('config_hash', '?')}")
     failures = _gate_families()
     if failures:
         print(f"check_bench: summary gate FAILED — {', '.join(failures)}")

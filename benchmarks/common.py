@@ -1,9 +1,11 @@
 """Shared benchmark utilities: timing, machine-readable BENCH_*.json
-emission, and the tiny paper-family config."""
+emission, run provenance, and the tiny paper-family config."""
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import subprocess
 import time
 
 import jax
@@ -34,17 +36,44 @@ def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
 
 
+def run_provenance(cfg=None, mesh=None) -> dict:
+    """Where/what a BENCH_*.json came from: numbers are only comparable
+    across runs when jax version, device kind/count, mesh shape and config
+    all match — record them so `check_bench.py --summary` can say so."""
+    devs = jax.devices()
+    prov = {
+        "jax_version": jax.__version__,
+        "device_count": len(devs),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "platform": devs[0].platform if devs else "none",
+        "mesh_shape": dict(mesh.shape) if mesh is not None else None,
+    }
+    try:
+        prov["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5).stdout.strip() or None
+    except Exception:
+        prov["git_sha"] = None
+    if cfg is not None:
+        prov["config_hash"] = hashlib.sha256(
+            repr(cfg).encode()).hexdigest()[:12]
+    return prov
+
+
 class BenchWriter:
     """Collects records and writes BENCH_<suite>.json (the perf-trajectory
-    artifact: each record is {"name", "us", ...derived numeric columns}).
+    artifact: each record is {"name", "us", ...derived numeric columns},
+    plus a "provenance" block pinning the run environment).
 
     Output dir is $BENCH_DIR (default: cwd, i.e. the repo root when run via
     `python benchmarks/run.py` / `make verify`).
     """
 
-    def __init__(self, suite: str):
+    def __init__(self, suite: str, cfg=None, mesh=None):
         self.suite = suite
         self.records = []
+        self.provenance = run_provenance(cfg, mesh)
 
     def emit(self, name: str, us: float | None = None, **derived):
         rec = {"name": name, **derived}
@@ -58,7 +87,7 @@ class BenchWriter:
         path = os.path.join(os.environ.get("BENCH_DIR", "."),
                             f"BENCH_{self.suite}.json")
         with open(path, "w") as f:
-            json.dump({"suite": self.suite, "records": self.records}, f,
-                      indent=1)
+            json.dump({"suite": self.suite, "records": self.records,
+                       "provenance": self.provenance}, f, indent=1)
         print(f"# wrote {path} ({len(self.records)} records)")
         return path

@@ -1,0 +1,273 @@
+"""Observability smoke: attaching the obs bundle must be free.
+
+The layer's design rule is that observability adds ZERO host syncs per
+token and ZERO retraces — device instrumentation is unconditional (the
+slot accumulator exists whether or not a bundle is attached), so the
+compiled programs are identical and obs-on decode must be BITWISE the
+same as obs-off. This smoke proves it end to end:
+
+- parity      per-request token ids bitwise equal obs-on vs obs-off on
+              the same workload (including degraded bare-PLM requests)
+- zero cost   host_syncs, syncs/token and decode-step jit traces EXACTLY
+              unchanged between the two runs; the on-run's retrace
+              sentinel runs in `raise` mode, so any obs-induced
+              recompilation kills the smoke outright
+- trace       the exported Chrome-trace JSON validates and covers >= 6
+              span categories (admission, prefill, decode-window,
+              gang-step, graduation, resilience) — the serve pass plus a
+              small onboarding run share ONE bundle
+- histograms  TTFT / per-token decode latency / admission wait /
+              gang-step time histograms are populated with p50/p99
+- overhead    obs-on tok/s >= MIN_OBS_TOK_S_RATIO x obs-off, gated under
+              BENCH_STRICT=1 only (shared-runner wall clock varies; the
+              structural gates above are the unconditional contract)
+
+Emits BENCH_obs.json (gated by benchmarks/check_bench.py) and the trace
+itself as BENCH_obs_trace.json — open the latter in Perfetto. `make
+obs-smoke` runs this file with --check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+MIN_OBS_TOK_S_RATIO = 0.5         # BENCH_STRICT only
+REQUIRED_CATEGORIES = 6
+
+
+def workload_requests(cfg, n_reqs: int, *, seed: int = 0):
+    """Per-uid seeded prompts, identical across the off/on passes.
+    Profile 2 is the FaultPlan's persistent hydration failure, so its
+    requests exercise the degraded bare-PLM path (identically in both
+    passes — degradation is part of the workload, not of obs)."""
+    from repro.serve.scheduler import Request
+    reqs = []
+    for i in range(n_reqs):
+        r = np.random.default_rng(seed * 6733 + i)
+        T = int(r.integers(3, 13))
+        reqs.append(Request(uid=i, prompt=r.integers(0, cfg.vocab_size, T),
+                            profile_id=i % 3, max_new_tokens=8))
+    return reqs
+
+
+def run_serve_pass(cfg, params, store, obs, *, n_reqs: int,
+                   max_slots: int = 3, sync_every: int = 4) -> dict:
+    """One engine, warmup drain + timed drain of the same workload."""
+    from repro.resilience.faults import FaultPlan
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(cfg, params, store, max_slots=max_slots, max_seq=64,
+                      sync_every=sync_every,
+                      fault_plan=FaultPlan(fail_pids=(2,)), obs=obs)
+    eng.run_until_drained(workload_requests(cfg, n_reqs))  # warmup/compile
+    syncs0, steps0, toks0 = (eng.slots.host_syncs, eng.slots.device_steps,
+                             eng.decode_tokens)
+    timed = workload_requests(cfg, n_reqs)
+    t0 = time.perf_counter()
+    eng.run_until_drained(timed)
+    dt = time.perf_counter() - t0
+    st = eng.serve_stats()
+    d_toks = eng.decode_tokens - toks0
+    return {
+        "tokens": {r.uid: list(map(int, r.generated)) for r in timed},
+        "tokens_per_s": round(d_toks / dt, 1),
+        "host_syncs": eng.slots.host_syncs - syncs0,
+        "device_steps": eng.slots.device_steps - steps0,
+        "decode_tokens": d_toks,
+        "syncs_per_token": round((eng.slots.host_syncs - syncs0)
+                                 / max(d_toks, 1), 4),
+        "step_traces": st["step_traces"],
+        "degraded_requests": st["degraded_requests"],
+    }
+
+
+def run_onboarding_pass(obs) -> dict:
+    """Tiny lifecycle run on the SAME bundle: gang-step window spans,
+    graduation instants, and the gang retrace-sentinel watch."""
+    import jax
+
+    from repro.data import ProfileClassification
+    from repro.train import GraduationPolicy
+    from repro.train.onboarding import build_onboarding_run
+    from benchmarks.common import bench_config
+
+    cfg = bench_config(num_labels=4, vocab=128, N=16, k=4, profiles=4)
+    data = ProfileClassification(cfg.vocab_size, cfg.num_labels,
+                                 num_profiles=4, seed=3)
+    policy = GraduationPolicy(min_steps=3, max_steps=6, target_acc=2.0)
+    trainer, gang = build_onboarding_run(
+        cfg, data, range(4), slots=2, per_slot=2, seq_len=8, policy=policy,
+        lr=5e-2, log_every=3, rng=jax.random.key(1), obs=obs)
+    trainer.run_until_drained(max_steps=200)
+    st = trainer.scheduler.stats()
+    return {"graduated": st["graduated"],
+            "gang_traces": gang.trace_counter["traces"]}
+
+
+def run_obs_workload(arch: str = "qwen1.5-0.5b", *, n_reqs: int = 9) -> dict:
+    """Same serve workload obs-off then obs-on (sentinel in raise mode),
+    plus an onboarding run on the on-bundle; returns the comparison plus
+    the bundle's exported state."""
+    import jax
+
+    from repro import obs as OBS
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core import xpeft as XP
+    from repro.core.profiles import ProfileStore
+    from repro.models import init_lm
+
+    cfg = reduce_for_smoke(get_config(arch))
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, "hard", cfg.xpeft.k)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(3):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+
+    off = run_serve_pass(cfg, params, store, None, n_reqs=n_reqs)
+    bundle = OBS.Observability(sentinel_mode="raise")
+    on = run_serve_pass(cfg, params, store, bundle, n_reqs=n_reqs)
+    onboard = run_onboarding_pass(bundle)
+
+    trace_path = os.path.join(os.environ.get("BENCH_DIR", "."),
+                              "BENCH_obs_trace.json")
+    doc = bundle.tracer.export(trace_path)
+    problem = OBS.validate_chrome_trace(doc)
+    cats = bundle.tracer.category_counts()
+    hists = bundle.metrics.snapshot()["histograms"]
+    return {
+        "arch": arch, "requests": n_reqs,
+        "cfg": cfg, "off": off, "on": on, "onboard": onboard,
+        "tokens_equal": off["tokens"] == on["tokens"],
+        "trace_path": trace_path, "trace_problem": problem,
+        "trace_events": len(bundle.tracer.events()),
+        "trace_dropped": bundle.tracer.dropped,
+        "categories": cats,
+        "histograms": hists,
+        "sentinel": bundle.sentinel.counts(),
+        "sentinel_violations": bundle.sentinel.violations_seen,
+        "tok_s_ratio": round(on["tokens_per_s"]
+                             / max(off["tokens_per_s"], 1e-9), 3),
+    }
+
+
+def emit_bench(res: dict) -> str:
+    from benchmarks.common import BenchWriter
+
+    w = BenchWriter("obs", cfg=res["cfg"])
+    off, on = res["off"], res["on"]
+    w.emit("obs.parity", tokens_equal=res["tokens_equal"],
+           host_syncs_off=off["host_syncs"], host_syncs_on=on["host_syncs"],
+           syncs_per_token_off=off["syncs_per_token"],
+           syncs_per_token_on=on["syncs_per_token"],
+           step_traces_off=off["step_traces"],
+           step_traces_on=on["step_traces"],
+           degraded_requests=on["degraded_requests"])
+    w.emit("obs.trace", valid=res["trace_problem"] is None,
+           events=res["trace_events"], dropped=res["trace_dropped"],
+           categories=len(res["categories"]),
+           **{f"cat_{k.replace('-', '_')}": v
+              for k, v in sorted(res["categories"].items())})
+    h = res["histograms"]
+
+    def pcts(name, prefix):
+        s = h.get(name, {})
+        return {f"{prefix}_count": s.get("count", 0),
+                f"{prefix}_p50_us": s.get("p50", 0),
+                f"{prefix}_p99_us": s.get("p99", 0)}
+
+    w.emit("obs.histograms", None,
+           **pcts("serve.ttft_us", "ttft"),
+           **pcts("serve.decode_token_us", "decode_token"),
+           **pcts("serve.admission_wait_us", "admission_wait"),
+           **pcts("train.step_time_us", "gang_step"))
+    w.emit("obs.overhead", tok_s_off=off["tokens_per_s"],
+           tok_s_on=on["tokens_per_s"], ratio=res["tok_s_ratio"])
+    w.emit("obs.sentinel", watches=len(res["sentinel"]),
+           violations=res["sentinel_violations"],
+           gang_traces=res["onboard"]["gang_traces"],
+           graduated=res["onboard"]["graduated"])
+    return w.write()
+
+
+def check(res: dict) -> list:
+    """Structural gates; returns the failure list (tok/s floor is
+    BENCH_STRICT-only)."""
+    off, on = res["off"], res["on"]
+    errs = []
+    if not res["tokens_equal"]:
+        errs.append("obs-on decode tokens != obs-off (parity broken — "
+                    "observability changed the compiled program)")
+    if on["host_syncs"] != off["host_syncs"] or \
+            on["syncs_per_token"] != off["syncs_per_token"]:
+        errs.append(f"host syncs changed: {off['host_syncs']} -> "
+                    f"{on['host_syncs']} ({off['syncs_per_token']} -> "
+                    f"{on['syncs_per_token']} syncs/token) — obs must add "
+                    "ZERO syncs")
+    if on["step_traces"] != off["step_traces"]:
+        errs.append(f"decode step traces changed: {off['step_traces']} -> "
+                    f"{on['step_traces']} — obs must add ZERO retraces")
+    if res["trace_problem"] is not None:
+        errs.append(f"trace JSON invalid: {res['trace_problem']}")
+    if len(res["categories"]) < REQUIRED_CATEGORIES:
+        errs.append(f"only {sorted(res['categories'])} span categories "
+                    f"< {REQUIRED_CATEGORIES}")
+    if res["sentinel_violations"]:
+        errs.append(f"{res['sentinel_violations']} retrace-sentinel "
+                    "violations")
+    if on["degraded_requests"] <= 0:
+        errs.append("no degraded requests — the resilience span path went "
+                    "unexercised")
+    if res["onboard"]["graduated"] <= 0:
+        errs.append("onboarding graduated nothing — no graduation spans")
+    h = res["histograms"]
+    for name in ("serve.ttft_us", "serve.decode_token_us",
+                 "serve.admission_wait_us", "train.step_time_us"):
+        s = h.get(name, {})
+        if not s.get("count") or not (0 < s.get("p50", 0) <= s.get("p99", 0)):
+            errs.append(f"histogram {name} missing/empty: {s}")
+    if os.environ.get("BENCH_STRICT") and \
+            res["tok_s_ratio"] < MIN_OBS_TOK_S_RATIO:
+        errs.append(f"obs-on at {res['tok_s_ratio']}x obs-off tok/s < "
+                    f"{MIN_OBS_TOK_S_RATIO}x floor (BENCH_STRICT)")
+    return errs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=9)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless parity + zero-cost + trace gates "
+                    "hold (tok/s floor only with BENCH_STRICT=1)")
+    args = ap.parse_args()
+
+    res = run_obs_workload(args.arch, n_reqs=args.requests)
+    emit_bench(res)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("cfg", "histograms")
+                      and not (isinstance(v, dict) and "tokens" in v)},
+                     indent=1, default=str))
+    if not args.check:
+        return 0
+    errs = check(res)
+    for e in errs:
+        print(f"obs_smoke: FAIL — {e}", file=sys.stderr)
+    if not errs:
+        print(f"obs_smoke: OK — parity bitwise, "
+              f"{res['on']['syncs_per_token']} syncs/token unchanged, "
+              f"{res['on']['step_traces']} decode trace(s) unchanged, "
+              f"{res['trace_events']} trace events over "
+              f"{len(res['categories'])} categories, "
+              f"{res['tok_s_ratio']}x tok/s with obs on")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -93,10 +93,9 @@ from repro.analysis.bytes import aggregation_bytes  # noqa: E402
 def main(smoke: bool = False):
     from repro.serve.engine import Request
 
-    w = BenchWriter("serve")
-
     # analytic admission-aggregation bytes at the FULL config dims
     full = get_config("qwen1.5-0.5b")
+    w = BenchWriter("serve", cfg=full)
     agg = aggregation_bytes(full)
     w.emit("admission.aggregate_bytes", None, **agg)
 

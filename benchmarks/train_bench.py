@@ -33,10 +33,10 @@ def main(smoke: bool = False):
     from repro.train import GraduationPolicy
     from repro.train.onboarding import build_onboarding_run
 
-    w = BenchWriter("train")
     S, m, seq = 4, 4, 16
     P = 8 if smoke else 16
     cfg = bench_config(num_labels=4, vocab=128, N=16, k=4, profiles=P)
+    w = BenchWriter("train", cfg=cfg)
     policy = GraduationPolicy(min_steps=8, max_steps=20, target_acc=0.95)
 
     # ---- gang-step cost (jitted, steady state) ---------------------------

@@ -4,75 +4,22 @@ preemption handling, and elastic mesh resize.
 On a real multi-host deployment these hooks sit in the trainer loop; every
 mechanism here is host-side and unit-tested with fake clocks / subprocess
 meshes (tests/test_fault.py), because the container has one host.
+
+``StepWatchdog`` now lives in ``repro.obs.metrics`` (window wall-time
+attribution is a metric, and the obs bundle mirrors it into a gang-step
+time histogram) — re-exported here unchanged for every existing import
+site.
 """
 from __future__ import annotations
 
-import os
 import signal
 import threading
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
 import numpy as np
 import jax
 
-
-# ----------------------------------------------------------------------------
-# Straggler watchdog
-# ----------------------------------------------------------------------------
-
-@dataclass
-class StepWatchdog:
-    """Tracks per-step wall time; flags hosts whose steps exceed
-    `deadline_factor` x the trailing-median. In a real deployment the flag
-    feeds `rebalance_assignment`; here it is observable state + logs."""
-
-    deadline_factor: float = 2.0
-    window: int = 32
-    clock: Callable[[], float] = time.monotonic
-    _durations: List[float] = field(default_factory=list)
-    _t0: Optional[float] = None
-    slow_steps: int = 0
-
-    def step_start(self):
-        self._t0 = self.clock()
-
-    def step_end(self) -> bool:
-        """Returns True if this step was a straggler."""
-        if self._t0 is None:  # step_start never called: nothing to score
-            return False
-        dt = self.clock() - self._t0
-        self._t0 = None
-        hist = self._durations[-self.window:]
-        slow = bool(hist) and dt > self.deadline_factor * float(np.median(hist))
-        self._durations.append(dt)
-        if slow:
-            self.slow_steps += 1
-        return slow
-
-    def window_end(self, n_steps: int, elapsed: float) -> bool:
-        """Attribute a flushed window's wall time evenly across its steps.
-
-        With async dispatch the per-step device time is only observable at
-        the sync boundary (the trainer buffers metrics between log /
-        checkpoint flushes), so the watchdog scores the window's per-step
-        AVERAGE against the trailing median. Returns True if the window
-        straggled; `slow_steps` then counts the whole window."""
-        if n_steps <= 0:
-            return False
-        per_step = elapsed / n_steps
-        hist = self._durations[-self.window:]
-        slow = bool(hist) and \
-            per_step > self.deadline_factor * float(np.median(hist))
-        self._durations.extend([per_step] * n_steps)
-        if slow:
-            self.slow_steps += n_steps
-        return slow
-
-    @property
-    def median(self) -> float:
-        return float(np.median(self._durations)) if self._durations else 0.0
+from repro.obs.metrics import StepWatchdog  # noqa: F401  (re-export)
 
 
 def rebalance_assignment(num_examples: int, hosts: List[int],

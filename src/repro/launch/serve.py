@@ -39,6 +39,8 @@ def main():
                     help="e.g. 4x2:data,model — GSPMD-shard the engine "
                     "(slots over data, bank d_model/heads/vocab TP over "
                     "model)")
+    from repro import obs as OBS
+    OBS.add_cli_args(ap)  # --metrics-json PATH, --trace PATH
     args = ap.parse_args()
 
     from repro.configs import get_config, reduce_for_smoke
@@ -64,11 +66,12 @@ def main():
     print(f"profiles: {args.profiles} x {store.bytes_per_profile()} B each "
           f"(masks, byte-level)")
 
+    obs = OBS.from_cli_args(args)
     eng = ServeEngine(cfg, params, store, max_slots=args.slots,
                       max_seq=args.max_seq,
                       precompute=not args.no_precompute,
                       sync_every=args.sync_every,
-                      cache_bytes=args.cache_mb << 20, mesh=mesh)
+                      cache_bytes=args.cache_mb << 20, mesh=mesh, obs=obs)
     if mesh is not None:
         rb = eng.resident_bytes_per_device()
         print(f"mesh {dict(mesh.shape)}: {rb['total']} resident B/device "
@@ -96,6 +99,11 @@ def main():
           f"(sync_every={st['sync_every']})")
     for r in reqs[:3]:
         print(f"  req {r.uid} (profile {r.profile_id}): {r.generated}")
+    if obs is not None:
+        obs.export(args.metrics_json or None, args.trace or None)
+        cats = obs.tracer.category_counts()
+        print(f"obs: {sum(cats.values())} trace events {cats}; "
+              f"retrace watches {obs.sentinel.counts()}")
 
 
 if __name__ == "__main__":

@@ -34,13 +34,15 @@ TPU_PERF_FLAGS = (
 def run_onboarding(args):
     """--onboard: stream P >> S profiles through an S-slot roster and
     graduate converged profiles into a ProfileStore (train→serve loop)."""
+    from repro import obs as OBS
     from repro.configs import get_config, reduce_for_smoke
     from repro.data import MarkovLM, ProfileClassification
-    from repro.distributed.fault import PreemptionHandler, StepWatchdog
+    from repro.distributed.fault import PreemptionHandler
     from repro.launch.mesh import parse_mesh
     from repro.train import GraduationPolicy
     from repro.train.onboarding import build_onboarding_run
 
+    obs = OBS.from_cli_args(args)
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
@@ -67,8 +69,8 @@ def run_onboarding(args):
         lr=args.lr, seed=args.seed, mesh=mesh,
         store_path=args.store_out or None,
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
-        watchdog=StepWatchdog(), preemption=PreemptionHandler(),
-        log_every=args.log_every)
+        preemption=PreemptionHandler(),
+        log_every=args.log_every, obs=obs)
     scheduler, store = trainer.scheduler, trainer.scheduler.store
     if args.resume and trainer.try_resume():
         print(f"resumed onboarding from step {trainer.step}: "
@@ -85,6 +87,11 @@ def run_onboarding(args):
         store.save(args.store_out)
         print(f"wrote {args.store_out}: {len(store.profile_ids())} profiles, "
               f"{store.bytes_per_profile()} B/profile (masks)")
+    if obs is not None:
+        obs.export(args.metrics_json or None, args.trace or None)
+        cats = obs.tracer.category_counts()
+        print(f"obs: {sum(cats.values())} trace events {cats}; "
+              f"retrace watches {obs.sentinel.counts()}")
     if st["graduated"] == 0:
         raise SystemExit("onboarding graduated zero profiles")
     if not scheduler.finished():
@@ -130,22 +137,26 @@ def main():
     ap.add_argument("--ema-decay", type=float, default=0.9)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--store-out", default="")
+    from repro import obs as OBS
+    OBS.add_cli_args(ap)  # --metrics-json PATH, --trace PATH
     args = ap.parse_args()
 
     if args.onboard:
         run_onboarding(args)
         return
 
+    from repro import obs as OBS
     from repro.configs import get_config, reduce_for_smoke
     from repro.data import MarkovLM
     from repro.data.loader import ShardedLoader
     from repro.distributed import ctx
-    from repro.distributed.fault import PreemptionHandler, StepWatchdog
+    from repro.distributed.fault import PreemptionHandler
     from repro.distributed.sharding import (batch_specs, param_specs,
                                             to_shardings)
     from repro.train.steps import init_train_state, make_train_step
     from repro.train.trainer import Trainer
 
+    obs = OBS.from_cli_args(args)
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
@@ -172,15 +183,19 @@ def main():
     trainer = Trainer(step, state, loader,
                       ckpt_dir=args.ckpt_dir or None,
                       ckpt_every=args.ckpt_every,
-                      watchdog=StepWatchdog(),
                       preemption=PreemptionHandler(),
-                      rng=jax.random.key(args.seed + 1))
+                      rng=jax.random.key(args.seed + 1), obs=obs)
     if args.resume and trainer.try_resume():
         print(f"resumed from step {trainer.step}")
     hist = trainer.run(args.steps)
     if hist:
         print(f"final loss {hist[-1]['loss']:.4f} "
               f"(stragglers: {trainer.watchdog.slow_steps})")
+    if obs is not None:
+        obs.export(args.metrics_json or None, args.trace or None)
+        cats = obs.tracer.category_counts()
+        print(f"obs: {sum(cats.values())} trace events {cats}; "
+              f"retrace watches {obs.sentinel.counts()}")
 
 
 if __name__ == "__main__":

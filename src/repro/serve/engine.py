@@ -43,12 +43,16 @@ CPU with XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 from __future__ import annotations
 
+import time
+import weakref
 from typing import List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as OBS
+from repro.obs import trace as TR
 from repro.core import xpeft as XP
 from repro.core.profiles import ProfileStore
 from repro.models import model as MDL
@@ -62,6 +66,13 @@ from repro.serve.steps import greedy_next
 from repro.utils import pow2_count
 
 
+def _rate(num, den, nd: int = 4) -> float:
+    """Rate field for serve_stats(): 0.0 — not num/max(den,1) — when the
+    denominator never ticked. A zero-decode engine must report 0 syncs per
+    token, not `host_syncs` of them."""
+    return round(num / den, nd) if den else 0.0
+
+
 class ServeEngine:
     def __init__(self, cfg, params, store: ProfileStore, *, max_slots: int = 4,
                  max_seq: int = 256, precompute: bool = True,
@@ -71,9 +82,16 @@ class ServeEngine:
                  continuous: bool = False, page_size: int = 16,
                  max_pages: Optional[int] = None,
                  mask_pages: Optional[int] = None,
-                 max_wait_waves: Optional[int] = None):
+                 max_wait_waves: Optional[int] = None,
+                 obs: Optional[OBS.Observability] = None):
         self.cfg = cfg
         self.store = store
+        # observability bundle (ISSUE 10). Device-side instrumentation is
+        # UNCONDITIONAL (the slot obs accumulator exists either way, so
+        # compiled programs are identical with or without a bundle); the
+        # bundle only turns on host-side histogram/trace/sentinel work at
+        # the sync boundaries the engine already has.
+        self.obs = OBS.get(obs)
         self.S = max_seq
         self.n_slots = max_slots
         self.precompute = precompute and cfg.xpeft.enabled
@@ -480,7 +498,21 @@ class ServeEngine:
                                cache_shardings=self._shardings.get("cache"),
                                spec_width=(self.spec_gamma + 1
                                            if self.spec else 1))
-        self._prefill = jax.jit(self._prefill_impl)
+        # prefill legitimately compiles once per (bucket, batch) shape —
+        # the wrapper runs per TRACE and records the shapes it saw, so the
+        # retrace sentinel can tell "new bucket" from "placement drift"
+        # (same shape tracing twice)
+        self._prefill_traces = 0
+        self._prefill_shapes = set()
+
+        def _prefill_traced(params, tokens, masks, lengths, cache_pos=None,
+                            prefix_rows=None):
+            self._prefill_traces += 1
+            self._prefill_shapes.add(tuple(tokens.shape))
+            return self._prefill_impl(params, tokens, masks, lengths,
+                                      cache_pos, prefix_rows)
+
+        self._prefill = jax.jit(_prefill_traced)
         # the cache/mask buffers round-trip through these every wave: pin
         # their out-shardings so placement never drifts (a drift would both
         # retrace the decode step and migrate the KV cache mid-serve)
@@ -582,6 +614,29 @@ class ServeEngine:
         self.resumes = 0
         self.useful_slot_steps = 0
         self.stranded_slot_steps = 0
+        # retrace sentinel: the per-bench "one trace" assertions of PRs
+        # 2-9, promoted to a runtime invariant checked at every sync. The
+        # decode step has a FIXED signature (budget 1); admit scatter and
+        # prefill are shape-polymorphic, so their contract is
+        # traces <= distinct input shapes.
+        # Watches hold the engine WEAKLY (the store's invalidation hooks
+        # set that contract): the shared NULL_OBS sentinel — or a bundle
+        # outliving this engine — must not pin dead device state. A dead
+        # engine's count_fn returns None and the sentinel drops the watch.
+        wself = weakref.ref(self)
+
+        def _w(get):
+            return lambda: (lambda e: None if e is None else get(e))(wself())
+
+        self.obs.sentinel.watch(
+            "serve.decode_step", _w(lambda e: e.slots.step_traces), budget=1)
+        self.obs.sentinel.watch(
+            "serve.admit_scatter", _w(lambda e: e.slots.admit_traces),
+            shapes_fn=_w(lambda e: len(e.slots.admit_shapes)))
+        self.obs.sentinel.watch(
+            "serve.prefill", _w(lambda e: e._prefill_traces),
+            shapes_fn=_w(lambda e: len(e._prefill_shapes)))
+        self._win_t0 = time.perf_counter()  # host time the window opened
 
     # ------------------------------------------------------------- jit impls
     def _prefill_impl(self, params, tokens, masks, lengths, cache_pos=None,
@@ -729,6 +784,9 @@ class ServeEngine:
         self.slot_degraded[slot] = False
         r.preemptions += 1
         self.preemptions += 1
+        self.obs.tracer.instant(TR.CAT_PREEMPT, "preempt", slot=slot,
+                                uid=r.uid)
+        self.obs.metrics.inc("serve.preemptions")
 
     def _youngest_live(self, but: int) -> Optional[int]:
         """Preemption victim: the most recently admitted live slot other
@@ -787,6 +845,9 @@ class ServeEngine:
             self.slot_degraded[slot] = snap["degraded"]
             self._slot_seq[slot] = snap["seq"]
             self.resumes += 1
+            self.obs.tracer.instant(TR.CAT_PREEMPT, "resume", slot=slot,
+                                    uid=r.uid)
+            self.obs.metrics.inc("serve.resumes")
             n += 1
         return n
 
@@ -882,6 +943,11 @@ class ServeEngine:
 
         def on_retry(exc, a, delay):
             self.hydration_retries += 1
+            self.obs.metrics.inc("serve.hydration_retries")
+            self.obs.metrics.observe("serve.hydration_retry_delay_us",
+                                     delay * 1e6, "us")
+            self.obs.tracer.instant(TR.CAT_RESILIENCE, "hydration_retry",
+                                    profile=pid, attempt=a)
 
         try:
             retry_with_backoff(probe, policy=self.retry_policy,
@@ -902,6 +968,9 @@ class ServeEngine:
             if not verdict[pid] and not r.degraded:
                 r.degraded = True
                 self.degraded_requests += 1
+                self.obs.metrics.inc("serve.degraded_requests")
+                self.obs.tracer.instant(TR.CAT_RESILIENCE, "degraded",
+                                        profile=pid, uid=r.uid)
 
     # ------------------------------------------------------------- hydration
     def _hydrate_stacked(self, reqs: List[Request]):
@@ -1156,6 +1225,14 @@ class ServeEngine:
         """Admit up to len(free_slots()) requests: one cache-aware batched
         hydration, one mask scatter, one prefill per length bucket, one
         slot-state scatter. Returns #admitted."""
+        with self.obs.tracer.span(TR.CAT_ADMISSION, "admit_wave",
+                                  offered=len(reqs)) as sp:
+            n = self._admit_wave(reqs)
+            sp["admitted"] = n
+        return n
+
+    def _admit_wave(self, reqs: List[Request]) -> int:
+        t_wave = time.perf_counter()
         if self.slots.buf_fill:
             self.sync()  # flush the window before touching slot state
         resumed = 0
@@ -1239,15 +1316,19 @@ class ServeEngine:
                     cpos = jnp.asarray([r.prefix_len for r in group]
                                        + [0] * (Bp - B), jnp.int32)
                     prows = tuple(t[sel] for t in prefix_rows)
-            nxt, mini = self._prefill(self.params, jnp.asarray(toks), rows,
-                                      jnp.asarray(lens), cpos, prows)
-            gslots = jnp.asarray([slot_of[id(r)] for r in group])
-            if self.continuous:
-                self.cache["data"] = self._insert_cb(
-                    self.cache["data"], mini, gslots, self.cache["table"])
-            else:
-                self.cache = self._insert(self.cache, mini, gslots)
-            nxt_h = np.asarray(nxt[:B])
+            with self.obs.tracer.span(TR.CAT_PREFILL, f"prefill[{pad}]",
+                                      bucket=pad, rows=Bp, real=B):
+                nxt, mini = self._prefill(self.params, jnp.asarray(toks),
+                                          rows, jnp.asarray(lens), cpos,
+                                          prows)
+                gslots = jnp.asarray([slot_of[id(r)] for r in group])
+                if self.continuous:
+                    self.cache["data"] = self._insert_cb(
+                        self.cache["data"], mini, gslots,
+                        self.cache["table"])
+                else:
+                    self.cache = self._insert(self.cache, mini, gslots)
+                nxt_h = np.asarray(nxt[:B])
             for j, r in enumerate(group):
                 next_toks[id(r)] = int(nxt_h[j])
             self.prefill_batches += 1
@@ -1258,6 +1339,19 @@ class ServeEngine:
             self.last_admission["prefill_occupancy"] = round(
                 len(reqs) / max(sum(pow2_count(len(g))
                                     for g in groups.values()), 1), 3)
+
+        if self.obs.enabled:
+            # first token exists as of the prefill above: TTFT + admission
+            # wait for every submitted-through-the-scheduler request
+            # (t_submit=0 means the caller bypassed submit(); skip)
+            now = time.perf_counter()
+            for r in reqs:
+                t_sub = getattr(r, "t_submit", 0.0)
+                if t_sub:
+                    self.obs.metrics.observe("serve.ttft_us",
+                                             (now - t_sub) * 1e6, "us")
+                    self.obs.metrics.observe("serve.admission_wait_us",
+                                             (t_wave - t_sub) * 1e6, "us")
 
         # slot lengths INCLUDE the hydrated prefix rows: the slot length is
         # the KV-buffer write position, and decode queries take their RoPE
@@ -1340,10 +1434,50 @@ class ServeEngine:
                 self.slot_degraded[i] = False
                 if self.continuous:
                     self._release_request(i, req)
+        self._flush_obs(s)
         if self.continuous and self._resume_q:
             self._try_resume()
         self._refresh_window()
         return self.active_count()
+
+    def _flush_obs(self, s) -> None:
+        """Observability flush at the sync boundary — the ONLY place decode
+        metrics touch the host, and only on data the sync's single
+        device_get already moved (s.obs is the device accumulator's window
+        delta). Zero extra syncs per token by construction."""
+        now = time.perf_counter()
+        if s.fill and self.obs.enabled:
+            acc = s.obs
+            toks = int(acc[:, OBS.OBS_TOKENS].sum())
+            m = self.obs.metrics
+            m.inc("serve.decode_tokens", toks)
+            m.inc("serve.device_steps", s.fill)
+            m.inc("serve.active_slot_steps",
+                  int(acc[:, OBS.OBS_ACTIVE_STEPS].sum()))
+            m.inc("serve.stranded_slot_steps",
+                  int(acc[:, OBS.OBS_STRANDED_STEPS].sum()))
+            elapsed = now - self._win_t0
+            if toks:
+                # mean host-side per-token latency over this window (the
+                # finest granularity observable without per-token syncs)
+                m.observe("serve.decode_token_us", elapsed / toks * 1e6,
+                          "us")
+            m.observe("serve.queue_depth", self.scheduler.pending(), "reqs")
+            m.set_gauge("serve.queue_depth_now", self.scheduler.pending())
+            self.obs.tracer.complete(TR.CAT_DECODE_WINDOW, "decode_window",
+                                     self._win_t0, now, steps=s.fill,
+                                     tokens=toks)
+            if s.drafted is not None:
+                d, a = int(s.drafted.sum()), int(s.accepted.sum())
+                if d:
+                    m.inc("serve.spec_drafted", d)
+                    m.inc("serve.spec_accepted", a)
+                    m.observe("serve.spec_accept_rate", a / d, "ratio")
+                    self.obs.tracer.instant(TR.CAT_SPEC, "spec_window",
+                                            drafted=d, accepted=a,
+                                            rounds=s.fill)
+        self.obs.sentinel.check()
+        self._win_t0 = now
 
     def _refresh_window(self) -> None:
         # device capacity stop is lengths >= S-1 post-increment with
@@ -1459,9 +1593,39 @@ class ServeEngine:
         out["total"] = sum(out.values())
         return out
 
+    def reset_stats(self) -> None:
+        """Zero every accounting counter PRs 2-9 accumulated piecemeal in
+        __init__ (decode/prefill/spec/preempt/resilience, scheduler, the
+        profile cache's hit/miss/byte counters, page allocators, host
+        syncs) in ONE call — e.g. to measure steady state after warmup.
+        Deliberately untouched: in-flight requests, caches/pools, and the
+        compile-cache trace counters (`step_traces` etc.), which count
+        compilations, not events in a measurement window."""
+        self.decode_tokens = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self._spec_by_uid.clear()
+        self.prefill_batches = 0
+        self.prefill_rows = 0
+        self.prefill_real = 0
+        self.preemptions = 0
+        self.resumes = 0
+        self.useful_slot_steps = 0
+        self.stranded_slot_steps = 0
+        self.degraded_requests = 0
+        self.hydration_retries = 0
+        self.last_admission = None
+        self.slots.reset_counters()
+        self.scheduler.reset_stats()
+        self.profile_cache.reset_stats()
+        if self.page_alloc is not None:
+            self.page_alloc.reset_stats()
+        if self.mask_alloc is not None:
+            self.mask_alloc.reset_stats()
+        self.obs.metrics.reset()
+
     def serve_stats(self) -> dict:
         """Counters the bench reports (and operators can scrape)."""
-        toks = max(self.decode_tokens, 1)
         out = {
             "mode": "continuous" if self.continuous else "windowed",
             "devices": 1 if self.mesh is None else self.mesh.size,
@@ -1472,9 +1636,9 @@ class ServeEngine:
             # continuous batching exists to drive to ~0)
             "useful_slot_steps": self.useful_slot_steps,
             "stranded_slot_steps": self.stranded_slot_steps,
-            "slot_occupancy": round(
-                self.useful_slot_steps
-                / max(self.n_slots * self.slots.device_steps, 1), 4),
+            "slot_occupancy": _rate(
+                self.useful_slot_steps,
+                self.n_slots * self.slots.device_steps),
             "step_traces": self.slots.step_traces,
             "resident_bytes_per_device": self.resident_bytes_per_device(),
             "host_syncs": self.slots.host_syncs,
@@ -1483,13 +1647,14 @@ class ServeEngine:
             # committed tokens vs device decode steps: equal for plain
             # decode, committed > steps is the speculation win
             "committed_tokens": self.decode_tokens,
-            "committed_per_device_step": round(
-                self.decode_tokens / max(self.slots.device_steps, 1), 4),
-            "syncs_per_token": round(self.slots.host_syncs / toks, 4),
+            "committed_per_device_step": _rate(self.decode_tokens,
+                                               self.slots.device_steps),
+            "syncs_per_token": _rate(self.slots.host_syncs,
+                                     self.decode_tokens),
             "sync_every": self.sync_every,
             "prefill_batches": self.prefill_batches,
-            "prefill_occupancy": round(
-                self.prefill_real / max(self.prefill_rows, 1), 4),
+            "prefill_occupancy": _rate(self.prefill_real,
+                                       self.prefill_rows),
             "profile_cache": self.profile_cache.stats(),
             "scheduler": self.scheduler.stats(),
             # resilience surface: how often serving fell back to the bare
@@ -1506,14 +1671,13 @@ class ServeEngine:
                 "gamma": self.spec_gamma,
                 "drafted": self.spec_drafted,
                 "accepted": self.spec_accepted,
-                "acceptance_rate": round(
-                    self.spec_accepted / max(self.spec_drafted, 1), 4),
-                "committed_per_device_step": round(
-                    self.decode_tokens
-                    / max(self.slots.device_steps, 1), 4),
+                "acceptance_rate": _rate(self.spec_accepted,
+                                         self.spec_drafted),
+                "committed_per_device_step": _rate(
+                    self.decode_tokens, self.slots.device_steps),
                 # per-request acceptance (uid-keyed; survives preemption)
                 "per_request_acceptance": {
-                    uid: round(a / max(d, 1), 4)
+                    uid: _rate(a, d)
                     for uid, (d, a) in sorted(self._spec_by_uid.items())},
             }
         if self.continuous:

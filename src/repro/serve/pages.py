@@ -195,6 +195,15 @@ class PageAllocator:
         by_owner = [p for ps in self._pages_of.values() for p in ps]
         assert sorted(by_owner) == sorted(owned), "owner index out of sync"
 
+    def reset_stats(self) -> None:
+        """Zero the flow counters (engine.reset_stats()); ownership and
+        free lists are untouched. `high_water` restarts from the CURRENT
+        occupancy — live pages are real occupancy, not history."""
+        self.allocs = 0
+        self.frees = 0
+        self.oom_events = 0
+        self.high_water = self.used()
+
     def stats(self) -> dict:
         return {"n_pages": self.n_pages, "used": self.used(),
                 "free": self.free_count(), "high_water": self.high_water,

@@ -106,6 +106,16 @@ class ProfileCache:
         self.rejects = 0
         self.invalidations = 0
 
+    def reset_stats(self) -> None:
+        """Reset the flow counters ONLY (engine.reset_stats()): entries and
+        resident bytes survive — a warm cache after a counter reset should
+        report warm hit-rates, not lose its contents like clear() does."""
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.rejects = 0
+        self.invalidations = 0
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses

@@ -27,6 +27,7 @@ length is a bucket of size 1 that largest-first never picks.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -53,6 +54,10 @@ class Request:
     waits: int = 0
     # times the continuous engine swapped this request out to free pages
     preemptions: int = 0
+    # host clock (time.perf_counter) at submit(); 0.0 until submitted.
+    # Feeds the engine's TTFT / admission-wait histograms — requests
+    # admitted without going through submit() simply aren't timed.
+    t_submit: float = 0.0
 
 
 class Scheduler:
@@ -90,6 +95,10 @@ class Scheduler:
     def submit(self, reqs) -> None:
         if isinstance(reqs, Request):
             reqs = [reqs]
+        now = time.perf_counter()
+        for r in reqs:
+            if not r.t_submit:  # re-submits keep their original arrival
+                r.t_submit = now
         self._queue.extend(reqs)
         self.n_submitted += len(reqs)
 
@@ -158,6 +167,14 @@ class Scheduler:
         for r in reqs:
             groups.setdefault(self.bucket_of(r), []).append(r)
         return groups
+
+    def reset_stats(self) -> None:
+        """Zero the flow counters (engine.reset_stats()); queued requests
+        keep their place and their submit timestamps."""
+        self.n_submitted = 0
+        self.n_admitted = 0
+        self.n_promoted = 0
+        self.n_requeued = 0
 
     def stats(self) -> dict:
         return {"pending": len(self._queue),

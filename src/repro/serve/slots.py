@@ -27,6 +27,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import device_acc_init, device_acc_update
+
 
 def _admit_scatter(arrays, slots, last_toks, lengths, n_gens, max_news,
                    actives):
@@ -64,6 +66,7 @@ class SlotSync(NamedTuple):
     fill: int                # device steps this window took (stranding calc)
     drafted: Optional[np.ndarray] = None   # [n_slots] spec drafts this window
     accepted: Optional[np.ndarray] = None  # [n_slots] accepted drafts
+    obs: Optional[np.ndarray] = None       # [n_slots, OBS_COLS] window deltas
 
 
 class SlotState:
@@ -108,6 +111,11 @@ class SlotState:
         self.buf_len = jnp.zeros((n_slots,), jnp.int32) if spec else None
         self.drafted = jnp.zeros((n_slots,), jnp.int32) if spec else None
         self.accepted = jnp.zeros((n_slots,), jnp.int32) if spec else None
+        # UNCONDITIONAL per-slot obs accumulator (repro.obs.metrics column
+        # layout): updated inside the jitted step, fetched by the SAME
+        # sync() device_get as the tokens. Always present so the compiled
+        # program is identical whether observability is consumed or not.
+        self.obs_acc = device_acc_init(n_slots)
         self.buf_fill = 0            # host: steps since last sync
         self._prev_n_gen = np.zeros((n_slots,), np.int32)  # host mirror
         self._prev_drafted = np.zeros((n_slots,), np.int32)
@@ -132,6 +140,7 @@ class SlotState:
         self._empty_buf = self.tok_buf
         self._all_inactive = self.active
         self._zero_counts = self.buf_len
+        self._zero_obs = self.obs_acc
 
         def step_impl(params, cache, masks, arrays, step_idx):
             self.step_traces += 1    # python side effect: runs per TRACE
@@ -146,9 +155,12 @@ class SlotState:
             done = (n_gen >= arrays["max_new"]) | (lengths >= self.S - 1)
             tok_buf = arrays["tok_buf"].at[:, step_idx].set(
                 jnp.where(was_active, nxt, -1))
+            obs = device_acc_update(arrays["obs"], was_active,
+                                    jnp.ones_like(n_gen))
             return cache, {"last_tok": last_tok, "lengths": lengths,
                            "active": was_active & ~done, "n_gen": n_gen,
-                           "max_new": arrays["max_new"], "tok_buf": tok_buf}
+                           "max_new": arrays["max_new"], "tok_buf": tok_buf,
+                           "obs": obs}
 
         def spec_step_impl(params, cache, masks, arrays, step_idx):
             """One SPECULATION ROUND for all slots: decode_fn drafts W-1
@@ -194,29 +206,45 @@ class SlotState:
                            "active": was_active & ~done, "n_gen": n_gen,
                            "max_new": arrays["max_new"], "tok_buf": tok_buf,
                            "buf_len": arrays["buf_len"] + c,
-                           "drafted": drafted, "accepted": accepted}
+                           "drafted": drafted, "accepted": accepted,
+                           "obs": device_acc_update(arrays["obs"],
+                                                    was_active, c)}
 
         if spec:
             step_impl = spec_step_impl
+
+        # Admit scatter is shape-polymorphic (one compile per wave size),
+        # so the retrace sentinel contract is traces <= distinct shapes:
+        # the wrapper runs per TRACE (jit only re-enters python to trace),
+        # and a repeat trace of an already-seen wave size means the
+        # inputs' placement drifted. The engine watches both counters.
+        self.admit_traces = 0
+        self.admit_shapes = set()
+
+        def admit_impl(arrays, slots, *rest):
+            self.admit_traces += 1
+            self.admit_shapes.add(int(slots.shape[0]))
+            return _admit_scatter(arrays, slots, *rest)
 
         if mesh is not None:
             self._step = jax.jit(
                 step_impl, out_shardings=(cache_shardings,
                                           self.arr_shardings))
             self._admit_scatter = jax.jit(
-                _admit_scatter, out_shardings=self.arr_shardings)
+                admit_impl, out_shardings=self.arr_shardings)
             self._deactivate = jax.jit(
                 _deactivate_scatter, out_shardings=self.arr_shardings)
         else:
             self._step = jax.jit(step_impl)
-            self._admit_scatter = jax.jit(_admit_scatter)
+            self._admit_scatter = jax.jit(admit_impl)
             self._deactivate = jax.jit(_deactivate_scatter)
 
     # ----------------------------------------------------------------- device
     def _arrays(self) -> dict:
         out = {"last_tok": self.last_tok, "lengths": self.lengths,
                "active": self.active, "n_gen": self.n_gen,
-               "max_new": self.max_new, "tok_buf": self.tok_buf}
+               "max_new": self.max_new, "tok_buf": self.tok_buf,
+               "obs": self.obs_acc}
         if self.spec_width > 1:
             out.update({"buf_len": self.buf_len, "drafted": self.drafted,
                         "accepted": self.accepted})
@@ -229,6 +257,7 @@ class SlotState:
         self.n_gen = arrays["n_gen"]
         self.max_new = arrays["max_new"]
         self.tok_buf = arrays["tok_buf"]
+        self.obs_acc = arrays["obs"]
         if self.spec_width > 1:
             self.buf_len = arrays["buf_len"]
             self.drafted = arrays["drafted"]
@@ -291,6 +320,14 @@ class SlotState:
         self.active = self._all_inactive
 
     # ------------------------------------------------------------------- host
+    def reset_counters(self) -> None:
+        """Zero the host-side rate counters (engine.reset_stats()). The
+        trace counters (`step_traces`, `admit_traces`/`admit_shapes`) are
+        deliberately NOT reset — they are compile-cache facts the retrace
+        sentinel watches, not per-window rates."""
+        self.host_syncs = 0
+        self.device_steps = 0
+
     def sync(self) -> SlotSync:
         """ONE device→host transfer of the window's tokens + slot status;
         resets the window. The engine distributes tokens to requests. In
@@ -301,9 +338,9 @@ class SlotState:
         width = fill * W
         if W > 1:
             (tok_buf, lengths, active, n_gen, drafted,
-             accepted) = jax.device_get(
+             accepted, obs) = jax.device_get(
                 (self.tok_buf[:, :width], self.lengths, self.active,
-                 self.n_gen, self.drafted, self.accepted))
+                 self.n_gen, self.drafted, self.accepted, self.obs_acc))
             d_drafted = np.asarray(drafted) - self._prev_drafted
             d_accepted = np.asarray(accepted) - self._prev_accepted
             self._prev_drafted = np.asarray(drafted).copy()
@@ -311,15 +348,19 @@ class SlotState:
             if fill:
                 self.buf_len = self._zero_counts
         else:
-            tok_buf, lengths, active, n_gen = jax.device_get(
+            tok_buf, lengths, active, n_gen, obs = jax.device_get(
                 (self.tok_buf[:, :width], self.lengths, self.active,
-                 self.n_gen))
+                 self.n_gen, self.obs_acc))
             d_drafted = d_accepted = None
         counts = np.asarray(n_gen) - self._prev_n_gen
         self._prev_n_gen = np.asarray(n_gen).copy()
         if fill:
             self.tok_buf = self._empty_buf
+            # the accumulator resets each window (template keeps the
+            # committed sharding), so the fetched values ARE the deltas
+            self.obs_acc = self._zero_obs
         self.buf_fill = 0
         self.host_syncs += 1
         return SlotSync(np.asarray(tok_buf), counts, np.asarray(lengths),
-                        np.asarray(active), fill, d_drafted, d_accepted)
+                        np.asarray(active), fill, d_drafted, d_accepted,
+                        np.asarray(obs))

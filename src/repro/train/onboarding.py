@@ -29,7 +29,9 @@ from typing import List, Optional
 import numpy as np
 import jax
 
+from repro import obs as OBS
 from repro.core.profiles import ProfileStore
+from repro.obs import trace as TR
 from repro.train.roster import Roster
 from repro.train.trainer import Trainer
 
@@ -115,6 +117,10 @@ class OnboardingScheduler:
         # params' "xpeft_bank", `xp` the XPeftConfig.
         self.bank = bank
         self.xp = xp
+        # lifecycle outcomes are the onboarding trace's payload; the
+        # OnboardingTrainer overwrites this with its own bundle so the
+        # scheduler and trainer always share one tracer
+        self.obs = OBS.NULL_OBS
         if store.quant != "none" and (bank is None or xp is None):
             raise ValueError("a quantized store needs the frozen bank and "
                              "XPeftConfig to aggregate Â/B̂ at graduation "
@@ -188,14 +194,24 @@ class OnboardingScheduler:
             eff = XP.precompute_effective_adapters(self.bank, prof, self.xp)
             agg = (eff["a_hat"], eff["b_hat"])
         self.store.add_profile(pid, prof, agg=agg)
-        self.graduated.append(self._record(slot, met))
+        rec = self._record(slot, met)
+        self.graduated.append(rec)
+        self.obs.tracer.instant(TR.CAT_GRADUATION, "graduate",
+                                profile=int(pid), slot=int(slot),
+                                steps=rec["steps"])
+        self.obs.metrics.inc("train.graduated")
         rstate = self.roster.evict(rstate, slot)
         self.slot_pid[slot] = None
         return rstate
 
     def evict(self, rstate: dict, slot: int, met: dict) -> dict:
         """Drop an unconverged occupant without graduating it."""
-        self.evicted.append(self._record(slot, met))
+        rec = self._record(slot, met)
+        self.evicted.append(rec)
+        self.obs.tracer.instant(TR.CAT_GRADUATION, "evict",
+                                profile=rec["pid"], slot=int(slot),
+                                steps=rec["steps"])
+        self.obs.metrics.inc("train.evicted")
         rstate = self.roster.evict(rstate, slot)
         self.slot_pid[slot] = None
         return rstate
@@ -208,6 +224,10 @@ class OnboardingScheduler:
         rec = self._record(slot, met)
         rec["nonfinite"] = int(met["nonfinite"][slot])
         self.quarantined.append(rec)
+        self.obs.tracer.instant(TR.CAT_RESILIENCE, "quarantine",
+                                profile=rec["pid"], slot=int(slot),
+                                nonfinite=rec["nonfinite"])
+        self.obs.metrics.inc("train.quarantined")
         rstate = self.roster.evict(rstate, slot)
         self.slot_pid[slot] = None
         return rstate
@@ -259,6 +279,7 @@ class OnboardingTrainer(Trainer):
                  store_path: Optional[str] = None, **kw):
         super().__init__(step_fn, state, batcher, **kw)
         self.scheduler = scheduler
+        self.scheduler.obs = self.obs  # one bundle across trainer+lifecycle
         self.store_path = store_path
         self.state["roster"] = scheduler.fill(self.state["roster"],
                                               self.loader)

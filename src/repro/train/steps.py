@@ -356,9 +356,15 @@ def make_gang_step(cfg, *, lr=1e-3, weight_decay=0.0, clip_norm: float = 1.0,
 
 def make_train_step(cfg, mode: str = "xpeft", *, lr=1e-3, weight_decay=0.0,
                     clip_norm: float = 1.0, accum: int = 1):
-    """Returns step(state, batch, rng) -> (state, metrics); jit-ready."""
+    """Returns step(state, batch, rng) -> (state, metrics); jit-ready.
+
+    Like the gang step, carries a `.trace_counter` dict (incremented once
+    per jit trace — `jax.jit` copies the attribute through, sharing the
+    dict) so the Trainer's retrace sentinel covers plain training too."""
+    counter = {"traces": 0}
 
     def step(state, batch, rng):
+        counter["traces"] += 1
         frozen = state["frozen"]
 
         def loss_fn(trainable, mb):
@@ -394,4 +400,5 @@ def make_train_step(cfg, mode: str = "xpeft", *, lr=1e-3, weight_decay=0.0,
         return {"frozen": frozen, "trainable": new_params,
                 "opt": new_opt}, metrics
 
+    step.trace_counter = counter
     return step

@@ -28,8 +28,10 @@ from typing import Callable, List, Optional
 import jax
 import numpy as np
 
+from repro import obs as OBS
 from repro.checkpoint import CheckpointManager
 from repro.distributed.fault import PreemptionHandler, StepWatchdog
+from repro.obs import trace as TR
 from repro.resilience.integrity import CheckpointCorruptError
 
 
@@ -38,7 +40,7 @@ class Trainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
                  keep_last: int = 3, watchdog: Optional[StepWatchdog] = None,
                  preemption: Optional[PreemptionHandler] = None,
-                 log_every: int = 10, rng=None, fault_plan=None):
+                 log_every: int = 10, rng=None, fault_plan=None, obs=None):
         self.step_fn = step_fn
         self.state = state
         self.loader = loader
@@ -47,7 +49,19 @@ class Trainer:
         self.mgr = CheckpointManager(ckpt_dir, keep_last,
                                      fault_plan=fault_plan) \
             if ckpt_dir else None
-        self.watchdog = watchdog or StepWatchdog()
+        # observability: the straggler watchdog IS the train-side metric
+        # source (repro.obs.metrics absorbed it) — wiring the bundle's
+        # registry in gives p50/p99 gang-step time for free, and the gang
+        # step's trace counter feeds the retrace sentinel below
+        self.obs = OBS.get(obs)
+        if watchdog is None:
+            watchdog = StepWatchdog(
+                registry=self.obs.metrics if self.obs.enabled else None)
+        self.watchdog = watchdog
+        tc = getattr(step_fn, "trace_counter", None)
+        if tc is not None:
+            self.obs.sentinel.watch("train.gang_step",
+                                    lambda: tc["traces"], budget=1)
         self.preemption = preemption
         self.log_every = log_every
         self.rng = rng if rng is not None else jax.random.key(0)
@@ -123,9 +137,18 @@ class Trainer:
         self.host_syncs += 1
         slow = False
         if self._window_t0 is not None:
+            now = time.perf_counter()
             slow = self.watchdog.window_end(
-                len(steps), time.perf_counter() - self._window_t0)
+                len(steps), now - self._window_t0)
+            # one span per flushed WINDOW (per-step device time is not
+            # observable without a per-step block — same reasoning as the
+            # watchdog scoring above); sentinel check rides the boundary
+            self.obs.tracer.complete(TR.CAT_GANG_STEP, "gang_window",
+                                     self._window_t0, now,
+                                     steps=len(steps), straggler=slow)
+            self.obs.metrics.inc("train.steps", len(steps))
             self._window_t0 = None
+        self.obs.sentinel.check()
         recs = []
         for s, mh in zip(steps, host):
             rec = {k: float(v) for k, v in mh.items()}

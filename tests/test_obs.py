@@ -1,0 +1,340 @@
+"""Observability layer (ISSUE 10): histograms, span tracer, retrace
+sentinel, watchdog mirroring, the serve_stats() schema across engine
+variants, and the zero-denominator rate / reset_stats contracts."""
+import json
+
+import numpy as np
+import jax
+import pytest
+
+from repro import obs as OBS
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import xpeft as XP
+from repro.core.profiles import ProfileStore
+from repro.models import init_lm
+from repro.obs import trace as TR
+from repro.obs.metrics import ExpHistogram, MetricsRegistry, StepWatchdog
+from repro.obs.sentinel import RetraceError, RetraceSentinel
+from repro.serve.engine import Request, ServeEngine, _rate
+
+
+# ---------------------------------------------------------------- histograms
+
+def test_exp_histogram_percentiles():
+    h = ExpHistogram(unit="us")
+    for v in range(1, 1001):
+        h.record(float(v))
+    s = h.snapshot()
+    assert s["count"] == 1000 and s["min"] == 1.0 and s["max"] == 1000.0
+    # base 2**(1/8) bounds relative error at ~9%
+    assert abs(s["p50"] - 500) / 500 < 0.10
+    assert abs(s["p99"] - 990) / 990 < 0.10
+    assert s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+def test_exp_histogram_nonpositive_and_empty():
+    h = ExpHistogram()
+    assert h.snapshot() == {"count": 0, "unit": ""}
+    assert h.percentile(50) == 0.0
+    h.record(0.0)
+    h.record(-3.0)
+    h.record(5.0)
+    # non-positive values pool in a sentinel bucket that reports 0.0;
+    # the exact extremes survive in the snapshot min/max
+    assert h.percentile(1) == 0.0
+    assert h.percentile(100) == 5.0
+    s = h.snapshot()
+    assert s["min"] == -3.0 and s["max"] == 5.0
+
+
+def test_registry_snapshot_and_disabled():
+    reg = MetricsRegistry()
+    reg.inc("a")
+    reg.inc("a", 2)
+    reg.set_gauge("g", 7)
+    reg.observe("h", 10.0, "us")
+    s = reg.snapshot()
+    assert s["counters"]["a"] == 3 and s["gauges"]["g"] == 7.0
+    assert s["histograms"]["h"]["count"] == 1
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+    off = MetricsRegistry(enabled=False)
+    off.inc("a")
+    off.set_gauge("g", 1)
+    off.observe("h", 1.0)
+    assert off.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_registry_export(tmp_path):
+    reg = MetricsRegistry()
+    reg.observe("lat", 3.0, "us")
+    p = tmp_path / "m.json"
+    reg.export(str(p))
+    assert json.loads(p.read_text())["histograms"]["lat"]["count"] == 1
+
+
+# -------------------------------------------------------------------- tracer
+
+def test_tracer_spans_export_and_validate(tmp_path):
+    tr = OBS.SpanTracer()
+    with tr.span(TR.CAT_ADMISSION, "admit_wave", offered=3) as sp:
+        sp["admitted"] = 2  # the yielded dict IS the event's args
+    tr.instant(TR.CAT_RESILIENCE, "degraded", profile=1)
+    tr.complete(TR.CAT_DECODE_WINDOW, "w", 0.0, 0.5, steps=4)
+    p = tmp_path / "trace.json"
+    doc = tr.export(str(p))
+    assert OBS.validate_chrome_trace(doc) is None
+    assert OBS.validate_chrome_trace(json.loads(p.read_text())) is None
+    evs = {e["name"]: e for e in tr.events()}
+    assert evs["admit_wave"]["args"] == {"offered": 3, "admitted": 2}
+    assert evs["admit_wave"]["ph"] == "X" and evs["degraded"]["ph"] == "i"
+    assert evs["w"]["dur"] == pytest.approx(0.5e6)
+    assert tr.category_counts() == {"admission": 1, "resilience": 1,
+                                    "decode-window": 1}
+    assert OBS.validate_chrome_trace({"traceEvents": [{"name": "x"}]})
+
+
+def test_tracer_ring_bound_and_disabled():
+    tr = OBS.SpanTracer(capacity=4)
+    for i in range(10):
+        tr.instant(TR.CAT_SPEC, f"e{i}")
+    assert len(tr.events()) == 4 and tr.dropped == 6
+    off = OBS.SpanTracer(enabled=False)
+    with off.span(TR.CAT_PREFILL, "p", rows=2) as sp:
+        sp["extra"] = 1  # must not raise on the disabled path
+    off.instant(TR.CAT_SPEC, "i")
+    assert off.events() == [] and off.category_counts() == {}
+
+
+# ------------------------------------------------------------------ sentinel
+
+def test_sentinel_budget_modes():
+    n = {"traces": 1}
+    s = RetraceSentinel(mode="raise")
+    s.watch("step", lambda: n["traces"], budget=1)
+    assert s.check() == []
+    n["traces"] = 2
+    with pytest.raises(RetraceError, match="step"):
+        s.check()
+    logged = []
+    s2 = RetraceSentinel(mode="log", log=logged.append)
+    s2.watch("step", lambda: n["traces"], budget=1)
+    assert len(s2.check()) == 1 and s2.violations_seen == 1 and logged
+    s3 = RetraceSentinel(mode="off")
+    s3.watch("step", lambda: n["traces"], budget=1)
+    assert s3.check() == [] and s3.violations_seen == 0
+
+
+def test_sentinel_shape_polymorphic_contract():
+    st = {"traces": 2, "shapes": 2}
+    s = RetraceSentinel(mode="raise")
+    s.watch("prefill", lambda: st["traces"],
+            shapes_fn=lambda: st["shapes"])
+    s.check()  # one trace per distinct shape: fine
+    st["traces"] = 3  # same shape compiled twice = placement drift
+    with pytest.raises(RetraceError, match="placement drift"):
+        s.check()
+    assert s.counts()["prefill"] == {"traces": 3, "budget": None,
+                                     "shapes": 2}
+
+
+def test_sentinel_drops_dead_watches():
+    """count_fn -> None means the watched owner was collected (engines are
+    held weakly); the watch must vanish instead of pinning or raising."""
+    s = RetraceSentinel(mode="raise")
+    owner = {"traces": 5}
+    box = [owner]
+    s.watch("eng", lambda: box[0]["traces"] if box[0] else None, budget=1)
+    with pytest.raises(RetraceError):
+        s.check()
+    box[0] = None  # owner dies
+    assert s.check() == [] and "eng" not in s.counts()
+
+
+# ------------------------------------------------------- watchdog mirroring
+
+def test_watchdog_mirrors_into_registry():
+    reg = MetricsRegistry()
+    t = {"now": 0.0}
+    wd = StepWatchdog(clock=lambda: t["now"], registry=reg)
+    wd.step_start()
+    t["now"] = 0.010
+    wd.step_end()
+    wd.window_end(4, 0.040)
+    h = reg.snapshot()["histograms"]["train.step_time_us"]
+    assert h["count"] == 5 and h["p50"] == pytest.approx(10000, rel=0.1)
+
+
+# ------------------------------------------------------------ bundle / null
+
+def test_null_obs_is_inert():
+    assert OBS.get(None) is OBS.NULL_OBS
+    bundle = OBS.Observability(sentinel_mode="raise")
+    assert OBS.get(bundle) is bundle
+    null = OBS.NULL_OBS
+    null.metrics.inc("x")
+    with null.tracer.span(TR.CAT_SPEC, "s") as sp:
+        sp["a"] = 1
+    null.sentinel.watch("w", lambda: 99, budget=1)
+    assert null.sentinel.check() == []  # off mode: never raises
+    assert null.metrics.snapshot()["counters"] == {}
+    assert null.tracer.events() == []
+
+
+def test_rate_zero_denominator():
+    assert _rate(0, 0) == 0.0
+    assert _rate(5, 0) == 0.0  # pre-fix this leaked a div-by-zero guard
+    assert _rate(5, 2) == 2.5
+    assert _rate(1, 3, nd=2) == 0.33
+
+
+# ----------------------------------------------------- serve_stats() schema
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_for_smoke(get_config("qwen1.5-0.5b"))
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    store = ProfileStore(cfg.num_layers, cfg.xpeft.num_adapters,
+                         cfg.xpeft.bottleneck, "hard", cfg.xpeft.k)
+    table = XP.init_profile_table(key, cfg)
+    for pid in range(3):
+        store.add_profile(pid, jax.tree.map(lambda t: t[pid], table))
+    return cfg, params, store
+
+
+# key -> type, pinned: renaming/retyping a serve_stats field breaks every
+# scraper; this schema is the compatibility contract across PRs 2-10
+BASE_SCHEMA = {
+    "mode": str, "devices": int, "bank_quant": str,
+    "useful_slot_steps": int, "stranded_slot_steps": int,
+    "slot_occupancy": float, "step_traces": int,
+    "resident_bytes_per_device": dict, "host_syncs": int,
+    "device_steps": int, "decode_tokens": int, "committed_tokens": int,
+    "committed_per_device_step": float, "syncs_per_token": float,
+    "sync_every": int, "prefill_batches": int, "prefill_occupancy": float,
+    "profile_cache": dict, "scheduler": dict, "degraded_requests": int,
+    "degraded_slots": int, "hydration_retries": int,
+    "quarantined_profiles": int, "store_integrity": dict,
+}
+CONTINUOUS_SCHEMA = {"preemptions": int, "resumes": int,
+                     "resume_pending": int, "page_size": int,
+                     "pages": dict, "mask_entries": dict}
+SPEC_SCHEMA = {"gamma": int, "drafted": int, "accepted": int,
+               "acceptance_rate": float, "committed_per_device_step": float,
+               "per_request_acceptance": dict}
+
+
+def _assert_schema(st: dict, schema: dict, label: str):
+    for key, typ in schema.items():
+        assert key in st, f"{label}: serve_stats missing {key!r}"
+        v = st[key]
+        assert isinstance(v, typ) and not (typ is int and
+                                           isinstance(v, bool)), \
+            f"{label}: serve_stats[{key!r}] = {v!r} is {type(v).__name__}," \
+            f" schema pins {typ.__name__}"
+
+
+def test_serve_stats_schema_across_engines(setup):
+    """Key names/types pinned on FRESH engines of every variant — which
+    also proves every rate field survives a zero denominator (the
+    pre-ISSUE-10 serve_stats div-by-zero'd or fudged with max(d, 1))."""
+    cfg, params, store = setup
+    engines = {
+        "windowed": ServeEngine(cfg, params, store, max_slots=2,
+                                max_seq=64),
+        "continuous": ServeEngine(cfg, params, store, max_slots=2,
+                                  max_seq=64, continuous=True),
+        "spec": ServeEngine(cfg.with_(spec_enable=True, spec_gamma=2),
+                            params, store, max_slots=2, max_seq=64,
+                            continuous=True),
+    }
+    hcfg = reduce_for_smoke(get_config("qwen1.5-0.5b")).with_xpeft(
+        num_adapters=12, bottleneck=4, k=4, max_profiles=8,
+        bank_spec=(("bottleneck", 4), ("lora", 4), ("ia3", 2),
+                   ("prefix", 2)), prefix_tokens=2)
+    hkey = jax.random.key(0)
+    hparams = init_lm(hkey, hcfg)
+    hstore = ProfileStore(hcfg.num_layers, hcfg.xpeft.num_adapters,
+                          hcfg.xpeft.bottleneck, "hard", hcfg.xpeft.k,
+                          bank_spec=hcfg.xpeft.bank_spec)
+    htable = XP.init_profile_table(hkey, hcfg)
+    hstore.add_profile(0, jax.tree.map(lambda t: t[0], htable))
+    engines["hetero"] = ServeEngine(hcfg, hparams, hstore, max_slots=2,
+                                    max_seq=64, continuous=True)
+    for label, eng in engines.items():
+        st = eng.serve_stats()
+        _assert_schema(st, BASE_SCHEMA, label)
+        # fresh engine: every denominator is 0 and every rate must be 0.0
+        for key in ("slot_occupancy", "committed_per_device_step",
+                    "syncs_per_token", "prefill_occupancy"):
+            assert st[key] == 0.0, f"{label}: {key} = {st[key]} on a " \
+                "fresh engine (zero-denominator rate must read 0.0)"
+    _assert_schema(engines["continuous"].serve_stats(), CONTINUOUS_SCHEMA,
+                   "continuous")
+    _assert_schema(engines["hetero"].serve_stats(), CONTINUOUS_SCHEMA,
+                   "hetero")
+    st = engines["spec"].serve_stats()
+    assert "spec" in st, "spec engine: serve_stats missing 'spec' block"
+    _assert_schema(st["spec"], SPEC_SCHEMA, "spec")
+    assert st["spec"]["acceptance_rate"] == 0.0
+
+
+def test_degraded_engine_stats_obs_and_reset(setup):
+    """One drained engine covers three contracts: (a) the degraded
+    (bare-PLM) path keeps the serve_stats schema and counts its fallback
+    requests; (b) an attached obs bundle agrees with the engine's own
+    counters and traced every category the workload exercised with zero
+    sentinel violations; (c) reset_stats() zeroes every PR 2-9 counter in
+    one call without touching the compile-cache trace counters."""
+    from repro.resilience.faults import FaultPlan
+
+    cfg, params, store = setup
+    bundle = OBS.Observability(sentinel_mode="raise")
+    eng = ServeEngine(cfg, params, store, max_slots=2, max_seq=64,
+                      sync_every=4, fault_plan=FaultPlan(fail_pids=(2,)),
+                      obs=bundle)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 5 + i),
+                    profile_id=i % 3, max_new_tokens=4) for i in range(5)]
+    eng.run_until_drained(list(reqs))
+    assert all(r.done for r in reqs)
+
+    st = eng.serve_stats()
+    _assert_schema(st, BASE_SCHEMA, "degraded")
+    assert st["degraded_requests"] > 0
+    assert all(r.degraded == (r.profile_id == 2) for r in reqs)
+
+    # (b) obs agrees with the engine's own accounting
+    counters = bundle.metrics.snapshot()["counters"]
+    assert counters["serve.decode_tokens"] == eng.decode_tokens
+    assert counters["serve.degraded_requests"] == st["degraded_requests"]
+    cats = bundle.tracer.category_counts()
+    for cat in (TR.CAT_ADMISSION, TR.CAT_PREFILL, TR.CAT_DECODE_WINDOW,
+                TR.CAT_RESILIENCE):
+        assert cats.get(cat, 0) > 0, f"no {cat} spans traced"
+    hists = bundle.metrics.snapshot()["histograms"]
+    assert hists["serve.ttft_us"]["count"] == len(reqs)
+    assert hists["serve.ttft_us"]["p50"] > 0
+    watches = bundle.sentinel.counts()
+    assert watches["serve.decode_step"]["traces"] == 1
+    assert bundle.sentinel.violations_seen == 0
+
+    # (c) one reset zeroes everything PR 2-9 accumulated piecemeal
+    traces_before = st["step_traces"]
+    eng.reset_stats()
+    st2 = eng.serve_stats()
+    _assert_schema(st2, BASE_SCHEMA, "post-reset")
+    for key in ("decode_tokens", "host_syncs", "device_steps",
+                "prefill_batches", "useful_slot_steps",
+                "stranded_slot_steps", "degraded_requests",
+                "hydration_retries", "slot_occupancy", "syncs_per_token",
+                "committed_per_device_step", "prefill_occupancy"):
+        assert st2[key] == 0, f"reset_stats left {key} = {st2[key]}"
+    assert st2["profile_cache"]["hits"] == 0
+    assert st2["profile_cache"]["entries"] > 0  # reset keeps the cache warm
+    assert st2["scheduler"]["submitted"] == 0
+    assert st2["step_traces"] == traces_before  # compile counters survive
+    assert bundle.metrics.snapshot()["counters"] == {}
